@@ -1,0 +1,293 @@
+"""§Perf hillclimb driver: applies named optimization variants to one
+(arch × shape) pair and reports the roofline-term deltas vs baseline.
+
+Each variant is a context-managed patch (sharding rule change, config
+change, remat policy, ...) so the hypothesis → change → measure → validate
+loop in EXPERIMENTS.md §Perf is a single command per iteration:
+
+  PYTHONPATH=src python -m benchmarks.hillclimb \
+      --arch dbrx-132b --shape train_4k --variants baseline,cap_1.0
+"""
+from __future__ import annotations
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import contextlib
+import dataclasses
+import json
+
+import repro.sharding.rules as R
+from repro.configs import base as config_base
+from repro.configs.base import MoEConfig
+
+
+# ---------------------------------------------------------------------------
+# Variants
+# ---------------------------------------------------------------------------
+
+
+@contextlib.contextmanager
+def v_baseline(arch, shape):
+    yield {}
+
+
+@contextlib.contextmanager
+def v_cap_1_0(arch, shape):
+    """MoE capacity factor 1.25 -> 1.0 (−20% expert FLOPs/bytes, more
+    drops)."""
+    mod = config_base._MODULE_FOR_ARCH[arch]
+    import importlib
+    m = importlib.import_module(f"repro.configs.{mod}")
+    orig = m.CONFIG
+    if orig.is_moe:
+        m.CONFIG = dataclasses.replace(
+            orig, moe=dataclasses.replace(orig.moe, capacity_factor=1.0))
+    try:
+        yield {}
+    finally:
+        m.CONFIG = orig
+
+
+@contextlib.contextmanager
+def v_no_remat(arch, shape):
+    """Disable activation rematerialisation (memory up, recompute FLOPs
+    down)."""
+    yield {"run_overrides": {"remat": False}}
+
+
+@contextlib.contextmanager
+def v_tp_decode(arch, shape):
+    """Decode with weights resident in pure TP (no FSDP all-gather per
+    step): embed/head_embed rules -> None.  Only valid when params_bf16/16
+    shards fit HBM."""
+    orig = {k: dict(v) for k, v in R.AXIS_RULES.items()}
+    for strat in R.AXIS_RULES:
+        R.AXIS_RULES[strat] = dict(R.AXIS_RULES[strat]) | {
+            "embed": None, "head_embed": None}
+    try:
+        yield {}
+    finally:
+        R.AXIS_RULES.update(orig)
+
+
+@contextlib.contextmanager
+def v_seq_shard_train(arch, shape):
+    """Shard the sequence dim of train/prefill activations over 'model'
+    instead of sharding attention heads (context-parallel style)."""
+    orig = {k: dict(v) for k, v in R.AXIS_RULES.items()}
+    for strat in R.AXIS_RULES:
+        R.AXIS_RULES[strat] = dict(R.AXIS_RULES[strat]) | {
+            "seq": "model", "heads": None, "mlp": None}
+    try:
+        yield {}
+    finally:
+        R.AXIS_RULES.update(orig)
+
+
+@contextlib.contextmanager
+def v_expert_2d(arch, shape):
+    """Shard experts over BOTH mesh axes (128 experts -> 256 shards needs
+    (data,model)); halves per-shard expert weights for many-expert MoE."""
+    orig = {k: dict(v) for k, v in R.AXIS_RULES.items()}
+    for strat in R.AXIS_RULES:
+        R.AXIS_RULES[strat] = dict(R.AXIS_RULES[strat]) | {
+            "expert": ("data", "model"), "embed": None}
+    try:
+        yield {}
+    finally:
+        R.AXIS_RULES.update(orig)
+
+
+@contextlib.contextmanager
+def v_dp_full(arch, shape):
+    yield {"strategy": "dp_full"}
+
+
+@contextlib.contextmanager
+def v_fsdp_tp(arch, shape):
+    yield {"strategy": "fsdp_tp"}
+
+
+@contextlib.contextmanager
+def v_split_sequential(arch, shape):
+    yield {"strategy": "split_sequential"}
+
+
+@contextlib.contextmanager
+def v_split_server_sharded(arch, shape):
+    yield {"strategy": "split_server_sharded"}
+
+
+@contextlib.contextmanager
+def v_head_sync_1(arch, shape):
+    yield {"run_overrides": {"head_sync_period": 1}}
+
+
+@contextlib.contextmanager
+def v_grad_accum_4(arch, shape):
+    """Split the global batch into 4 microbatches (gradient accumulation):
+    ~4x lower peak activation memory, identical math."""
+    yield {"run_overrides": {"grad_accum": 4}}
+
+
+@contextlib.contextmanager
+def v_grad_accum_8(arch, shape):
+    yield {"run_overrides": {"grad_accum": 8}}
+
+
+@contextlib.contextmanager
+def v_loss_chunks_8(arch, shape):
+    """Fused vocab-chunked head+loss: the (B,S,V) logits tensor never
+    materialises (online logsumexp over 8 vocab chunks, remat'd)."""
+    yield {"run_overrides": {"loss_chunks": 8, "strategy": "fsdp_tp"},
+           "strategy": "fsdp_tp"}
+
+
+@contextlib.contextmanager
+def v_ga8_bf16(arch, shape):
+    """grad_accum=8 + bf16 params (f32 adagrad accumulator kept): halves
+    the parameter/gradient bytes on top of the activation win."""
+    yield {"run_overrides": {"grad_accum": 8, "param_dtype": "bfloat16"}}
+
+
+@contextlib.contextmanager
+def v_window_4k(arch, shape):
+    """Sliding-window attention (4096) — the flash/block-sparse analogue
+    for archs whose native context is 4k anyway (e.g. minitron)."""
+    mod = config_base._MODULE_FOR_ARCH[arch]
+    import importlib
+    m = importlib.import_module(f"repro.configs.{mod}")
+    orig = m.CONFIG
+    m.CONFIG = dataclasses.replace(orig, sliding_window=4096)
+    try:
+        yield {}
+    finally:
+        m.CONFIG = orig
+
+
+@contextlib.contextmanager
+def v_repl_batch_decode(arch, shape):
+    """Replicated-batch decode layout: batch -> None so contraction-dim-
+    sharded (FSDP) weights stay RESIDENT — GSPMD partial-sums the (tiny)
+    activations instead of all-gathering the (huge) weights each step, and
+    the shard_map MoE takes its partial-sum schedule.  Trade: the KV cache
+    loses its batch sharding (stays kv_seq-sharded over 'model')."""
+    orig = {k: dict(v) for k, v in R.AXIS_RULES.items()}
+    for strat in R.AXIS_RULES:
+        R.AXIS_RULES[strat] = dict(R.AXIS_RULES[strat]) | {"batch": None}
+    try:
+        yield {}
+    finally:
+        R.AXIS_RULES.update(orig)
+
+
+@contextlib.contextmanager
+def v_repl_batch_kv2d(arch, shape):
+    """repl_batch_decode + KV cache sharded over BOTH axes (kv_seq ->
+    (data, model)): keeps the resident-weight collective win and removes
+    the cache replication across 'data'."""
+    orig = {k: dict(v) for k, v in R.AXIS_RULES.items()}
+    for strat in R.AXIS_RULES:
+        R.AXIS_RULES[strat] = dict(R.AXIS_RULES[strat]) | {
+            "batch": None, "kv_seq": ("data", "model")}
+    import repro.launch.steps as S
+    orig_make = S.make_rules
+
+    def patched(strategy, mesh, shape_, global_batch=None, **kw):
+        rules = orig_make(strategy, mesh, shape_, global_batch, **kw)
+        rules["batch"] = None
+        rules["kv_seq"] = tuple(a for a in ("data", "model")
+                                if a in mesh.axis_names)
+        return rules
+
+    S.make_rules = patched
+    try:
+        yield {}
+    finally:
+        R.AXIS_RULES.update(orig)
+        S.make_rules = orig_make
+
+
+VARIANTS = {
+    "baseline": v_baseline,
+    "repl_batch_decode": v_repl_batch_decode,
+    "repl_batch_kv2d": v_repl_batch_kv2d,
+    "cap_1.0": v_cap_1_0,
+    "no_remat": v_no_remat,
+    "tp_decode": v_tp_decode,
+    "seq_shard_train": v_seq_shard_train,
+    "expert_2d": v_expert_2d,
+    "dp_full": v_dp_full,
+    "fsdp_tp": v_fsdp_tp,
+    "split_sequential": v_split_sequential,
+    "split_server_sharded": v_split_server_sharded,
+    "head_sync_1": v_head_sync_1,
+    "grad_accum_4": v_grad_accum_4,
+    "grad_accum_8": v_grad_accum_8,
+    "ga8_bf16": v_ga8_bf16,
+    "loss_chunks_8": v_loss_chunks_8,
+    "window_4k": v_window_4k,
+}
+
+
+def measure(arch: str, shape: str, variant: str, *, multi_pod=False) -> dict:
+    from repro.launch import dryrun
+
+    with VARIANTS[variant](arch, shape) as opts:
+        strategy = opts.get("strategy")
+        overrides = opts.get("run_overrides", {})
+        if overrides:
+            orig_run_cls = dryrun.RunConfig
+            def patched(*a, **kw):
+                kw.update(overrides)
+                return orig_run_cls(*a, **kw)
+            dryrun.RunConfig = patched
+        try:
+            rec = dryrun.run_one(arch, shape, strategy=strategy,
+                                 multi_pod=multi_pod, verbose=False)
+        finally:
+            if overrides:
+                dryrun.RunConfig = orig_run_cls
+    rec["variant"] = variant
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variants", default="baseline")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    rows = []
+    base = None
+    for v in args.variants.split(","):
+        r = measure(args.arch, args.shape, v)
+        rows.append(r)
+        if v == "baseline" or base is None:
+            base = r
+        print(f"{args.arch} x {args.shape} [{v:>20s}] "
+              f"t=({r['t_compute_s']:.4f},{r['t_memory_s']:.4f},"
+              f"{r['t_collective_s']:.4f})s "
+              f"dom={r['dominant']} "
+              f"peak={r['peak_bytes_per_device']/2**30:.1f}GiB "
+              f"Δdom={_delta(base, r):+.1%}", flush=True)
+    if args.out:
+        with open(args.out, "a") as f:
+            for r in rows:
+                f.write(json.dumps(r) + "\n")
+
+
+def _delta(base, r):
+    key = {"compute": "t_compute_s", "memory": "t_memory_s",
+           "collective": "t_collective_s"}[base["dominant"]]
+    if base[key] == 0:
+        return 0.0
+    return (r[key] - base[key]) / base[key]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Optimized-decode sweep: re-runs the decode combos for the weight-heavy
+architectures with ``decode_layout="auto"`` (replicated-batch + 2D-KV
+resident-weight layout, §Perf pair 2) and emits the baseline-vs-optimized
+comparison appended to EXPERIMENTS.md §Perf.
+
+  PYTHONPATH=src python -m benchmarks.optimized_decode_sweep
+"""
+from __future__ import annotations
+
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import json
+
+ARCHS = ["dbrx-132b", "command-r-35b", "internvl2-26b",
+         "jamba-1.5-large-398b", "qwen3-moe-30b-a3b"]
+SHAPES = ["decode_32k", "long_500k"]
+
+
+def main():
+    from repro.launch.dryrun import run_one
+
+    baseline = {}
+    with open("results/dryrun_single_pod.jsonl") as f:
+        for line in f:
+            r = json.loads(line)
+            baseline[(r["arch"], r["shape"])] = r
+
+    out = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            rec = run_one(arch, shape, verbose=True)
+            rec["layout"] = "auto(optimized)"
+            out.append(rec)
+            b = baseline.get((arch, shape))
+            if b:
+                print(f"  vs baseline: coll {b['t_collective_s']:.3f}->"
+                      f"{rec['t_collective_s']:.3f}s  mem "
+                      f"{b['t_memory_s']:.3f}->{rec['t_memory_s']:.3f}s  "
+                      f"peak {b['peak_bytes_per_device']/2**30:.1f}->"
+                      f"{rec['peak_bytes_per_device']/2**30:.1f}GiB",
+                      flush=True)
+    with open("results/dryrun_optimized_decode.jsonl", "w") as f:
+        for r in out:
+            f.write(json.dumps(r) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Roofline benchmark: consumes the dry-run JSONL records (produced by
+``python -m repro.launch.dryrun --all``) and emits the per-(arch x shape)
+roofline table used by EXPERIMENTS.md §Roofline, plus the three hillclimb
+candidates (worst roofline fraction / most collective-bound / most
+representative of the paper's technique)."""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load(path: str) -> list[dict]:
+    recs = []
+    with open(path) as f:
+        for line in f:
+            if line.strip():
+                recs.append(json.loads(line))
+    return recs
+
+
+def summarize(recs: list[dict]) -> list[dict]:
+    rows = []
+    for r in recs:
+        t = {"compute": r["t_compute_s"], "memory": r["t_memory_s"],
+             "collective": r["t_collective_s"]}
+        bound = max(t.values())
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "strategy": r["strategy"],
+            "t_compute_s": round(r["t_compute_s"], 5),
+            "t_memory_s": round(r["t_memory_s"], 5),
+            "t_collective_s": round(r["t_collective_s"], 5),
+            "dominant": r["dominant"],
+            "useful_flops_ratio": round(r["useful_ratio"], 3),
+            "roofline_fraction": round(
+                r["t_compute_s"] / bound if bound else 0.0, 3),
+            "peak_GiB_per_dev": round(r["peak_bytes_per_device"] / 2**30, 2),
+        })
+    return rows
+
+
+def pick_hillclimb(rows: list[dict]) -> dict:
+    train = [r for r in rows if r["shape"] == "train_4k"]
+    worst = min(rows, key=lambda r: r["roofline_fraction"]
+                if r["t_compute_s"] else 1.0)
+    coll = max(rows, key=lambda r: r["t_collective_s"])
+    rep = max(train, key=lambda r: r["t_memory_s"]) if train else rows[0]
+    return {"worst_roofline": worst, "most_collective_bound": coll,
+            "paper_representative": rep}
+
+
+def run(path: str | None = None):
+    path = path or os.path.join(RESULTS, "dryrun_single_pod.jsonl")
+    if not os.path.exists(path):
+        return [{"error": f"run the dry-run first: {path} missing"}]
+    rows = summarize(load(path))
+    return rows
+
+
+if __name__ == "__main__":
+    rows = run()
+    for r in rows:
+        print(r)
+    print("\nhillclimb candidates:")
+    for k, v in pick_hillclimb(rows).items():
+        print(f"  {k}: {v['arch']} x {v['shape']} (dominant={v['dominant']})")

@@ -1,0 +1,117 @@
+"""Benchmark harness: one entry per paper table/figure + the roofline table.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus the detailed records) so
+results are machine-comparable across runs.  Scaled-down sizes run inside a
+CPU budget; pass --full for paper-scale settings.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _csv(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def bench_table2(full: bool):
+    from benchmarks import table2_knn
+
+    kw = dict(n_train=20000, n_test=1000, image_size=28, tickets=50) \
+        if full else {}
+    t0 = time.perf_counter()
+    rows = table2_knn.run(**kw)
+    us = (time.perf_counter() - t0) * 1e6
+    for r in rows:
+        print(f"  {r}")
+    ratios = "|".join(str(r["ratio"]) for r in rows)
+    _csv("table2_knn_scaling", us, f"elapsed_ratios={ratios}")
+    return rows
+
+
+def bench_table4(full: bool):
+    from benchmarks import table4_speed
+
+    t0 = time.perf_counter()
+    rows = table4_speed.run(seconds=20.0 if full else 6.0)
+    us = (time.perf_counter() - t0) * 1e6
+    for r in rows:
+        print(f"  {r}")
+    _csv("table4_sukiyaki_speedup", us,
+         f"jit_over_eager={rows[-1]['batches_per_min']}x")
+    return rows
+
+
+def bench_fig3(full: bool):
+    from benchmarks import fig3_convergence
+
+    t0 = time.perf_counter()
+    rows = fig3_convergence.run(batches=200 if full else 40)
+    us = (time.perf_counter() - t0) * 1e6
+    last = {r["optimizer"]: r["error_rate"] for r in rows}
+    for r in rows:
+        print(f"  {r}")
+    _csv("fig3_convergence", us, f"final_err={last}")
+    return rows
+
+
+def bench_fig5(full: bool):
+    from benchmarks import fig5_split
+
+    t0 = time.perf_counter()
+    rows = fig5_split.run(seconds=12.0 if full else 5.0, max_clients=4)
+    us = (time.perf_counter() - t0) * 1e6
+    for r in rows:
+        print(f"  {r}")
+    conv = [r["conv_batches_per_min"] for r in rows]
+    _csv("fig5_split_scaling", us, f"conv_bpm={conv}")
+    return rows
+
+
+def bench_roofline(full: bool):
+    from benchmarks import roofline
+
+    t0 = time.perf_counter()
+    rows = roofline.run()
+    us = (time.perf_counter() - t0) * 1e6
+    ok = [r for r in rows if "error" not in r]
+    for r in ok[:5]:
+        print(f"  {r}")
+    if len(ok) > 5:
+        print(f"  ... ({len(ok)} rows total; see EXPERIMENTS.md §Roofline)")
+    _csv("roofline_table", us, f"rows={len(ok)}")
+    return rows
+
+
+BENCHES = {
+    "table2": bench_table2,
+    "table4": bench_table4,
+    "fig3": bench_fig3,
+    "fig5": bench_fig5,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=list(BENCHES))
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (slow on CPU)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    names = [args.only] if args.only else list(BENCHES)
+    failures = 0
+    for name in names:
+        print(f"== {name} ==", flush=True)
+        try:
+            BENCHES[name](args.full)
+        except Exception as e:  # keep the harness going
+            failures += 1
+            print(f"  FAILED: {e!r}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Table 2 reproduction: distributed nearest-neighbour classification of an
+MNIST stand-in, varying the number of (simulated browser) clients 1..4.
+
+The paper classified 1,000 MNIST test images against 60,000 training images
+with Chrome clients.  Correctness of the distributed kNN (results identical
+to local) is covered by ``tests/test_system.py``.  This benchmark measures
+the *scaling* behaviour of the Sashimi distributor.
+
+HOST NOTE: this container has ONE cpu core, so genuinely parallel client
+compute is impossible.  In the default ``simulate_work`` mode the per-ticket
+kNN cost is measured once for real, then each client "computes" by holding
+the ticket for that measured duration (a timed work unit that overlaps
+across threads) — the distributor protocol (ticket queue, task/static
+download + caching, result collection) runs for real.  On a multi-core host
+pass ``simulate_work=False`` to run the real numpy workload.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.distributor import ClientProfile, Distributor, TaskDef
+from repro.data import clustered_images
+
+
+def _knn_chunk(te, tr, tr_y, lo, hi):
+    q = te[lo:hi]
+    # BLAS-backed distance computation
+    d = (q * q).sum(1)[:, None] - 2.0 * q @ tr.T + (tr * tr).sum(1)[None]
+    return tr_y[np.argmin(d, axis=1)].tolist()
+
+
+def knn_elapsed(n_clients: int, *, n_train: int, n_test: int,
+                image_size: int, tickets: int,
+                simulate_work: bool = True) -> float:
+    train_x, train_y = clustered_images(n_train, image_size=image_size,
+                                        channels=1, seed=0)
+    test_x, _ = clustered_images(n_test, image_size=image_size, channels=1,
+                                 seed=1)
+    tr = train_x.reshape(n_train, -1)
+    te = test_x.reshape(n_test, -1)
+    chunk = max(n_test // tickets, 1)
+    bounds = [(i, min(i + chunk, n_test)) for i in range(0, n_test, chunk)]
+
+    unit_cost = 0.0
+    if simulate_work:
+        costs = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            _knn_chunk(te, tr, train_y, *bounds[0])
+            costs.append(time.perf_counter() - t0)
+        unit_cost = min(costs)
+
+    def knn_task(args, static):
+        tr_x, tr_y = static["train"]
+        if simulate_work:
+            time.sleep(unit_cost)       # measured real cost, overlappable
+            return []
+        return _knn_chunk(te, tr_x, tr_y, *args)
+
+    d = Distributor(timeout=30.0, redistribute_min=0.05,
+                    project_name="table2-knn")
+    d.static_store["train"] = (tr, train_y)
+    d.register_task(TaskDef("knn", knn_task, static_files=("train",)))
+
+    t0 = time.perf_counter()
+    d.queue.add_many("knn", bounds)
+    # per-roundtrip latency models the paper's browser/network overhead
+    d.spawn_clients([ClientProfile(name=f"c{i}", cache_capacity=8,
+                                   latency=unit_cost * 0.15)
+                     for i in range(n_clients)])
+    ok = d.queue.wait_all(timeout=600)
+    elapsed = time.perf_counter() - t0
+    d.shutdown()
+    assert ok
+    return elapsed
+
+
+def run(*, n_train: int = 4000, n_test: int = 256, image_size: int = 16,
+        tickets: int = 32, max_clients: int = 4,
+        simulate_work: bool = True):
+    rows = []
+    base = None
+    for c in range(1, max_clients + 1):
+        e = knn_elapsed(c, n_train=n_train, n_test=n_test,
+                        image_size=image_size, tickets=tickets,
+                        simulate_work=simulate_work)
+        base = base or e
+        rows.append({"clients": c, "elapsed_s": round(e, 3),
+                     "ratio": round(e / base, 3)})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

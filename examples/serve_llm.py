@@ -1,0 +1,60 @@
+"""Batched serving demo: prefill a batch of prompts, then greedy-decode with
+the KV-cache/state path — runs every architecture family (pass --arch).
+
+  PYTHONPATH=src python examples/serve_llm.py --arch rwkv6-1.6b --gen 32
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.launch.serve import generate
+from repro.models.model import build_model
+from repro.sharding.spec import values_tree
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="rwkv6-1.6b", choices=list(ARCH_IDS))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    api = build_model(cfg, compute_dtype=jnp.float32, remat=False)
+    params = values_tree(api.init(jax.random.PRNGKey(0)))
+    rng = np.random.default_rng(0)
+    s_text = args.prompt_len - (cfg.num_patches if cfg.family == "vlm"
+                                else 0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, s_text)), jnp.int32)
+    extra = {}
+    if cfg.family == "vlm":
+        extra["patches"] = jnp.asarray(
+            rng.normal(0, 0.02, (args.batch, cfg.num_patches, cfg.d_model)),
+            jnp.float32)
+    if cfg.family == "encdec":
+        extra["frames"] = jnp.asarray(
+            rng.normal(0, 0.02,
+                       (args.batch, cfg.encoder_seq_len, cfg.d_model)),
+            jnp.float32)
+
+    print(f"serving {cfg.name} ({cfg.family}): batch={args.batch} "
+          f"prompt={s_text} gen={args.gen}")
+    t0 = time.time()
+    toks = generate(api, params, prompts, gen=args.gen, extra_inputs=extra)
+    dt = time.time() - t0
+    print(f"generated {toks.shape[0]}x{toks.shape[1]} tokens in {dt:.2f}s "
+          f"({args.batch*args.gen/dt:.1f} tok/s incl. compile)")
+    print("sample tokens:", np.asarray(toks[0][:12]))
+
+
+if __name__ == "__main__":
+    main()

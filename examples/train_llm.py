@@ -1,0 +1,86 @@
+"""End-to-end LLM training driver: a ~100M-parameter qwen-family model
+trained for a few hundred steps on the synthetic Markov stream with the
+paper's split_concurrent strategy and modified AdaGrad.
+
+Defaults are sized for this CPU container (a ~20M model, 200 steps); pass
+--d-model 768 --layers 12 --steps 300 for the full ~100M run on real
+hardware.
+
+  PYTHONPATH=src python examples/train_llm.py --steps 200
+"""
+import argparse
+import dataclasses
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.split_parallel import init_prev_features, make_train_step
+from repro.data import make_lm_batch
+from repro.models.model import build_model, count_params_analytic
+from repro.optim import get_optimizer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--d-model", type=int, default=384)
+    ap.add_argument("--layers", type=int, default=6)
+    ap.add_argument("--vocab", type=int, default=8192)
+    ap.add_argument("--lr", type=float, default=3e-2)
+    ap.add_argument("--strategy", default="split_concurrent")
+    ap.add_argument("--optimizer", default="adagrad")
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        get_smoke_config("qwen3-4b"),
+        name="qwen3-mini",
+        num_layers=args.layers, d_model=args.d_model,
+        num_heads=max(args.d_model // 64, 1),
+        num_kv_heads=max(args.d_model // 128, 1),
+        head_dim=64, d_ff=args.d_model * 4, vocab_size=args.vocab,
+        tie_embeddings=False)
+    n_params = count_params_analytic(cfg)
+    print(f"model: {cfg.name} {cfg.num_layers}L d={cfg.d_model} "
+          f"({n_params/1e6:.1f}M params), strategy={args.strategy}")
+
+    api = build_model(cfg, compute_dtype=jnp.float32)
+    opt = get_optimizer(args.optimizer, args.lr, adagrad_beta=1.0)
+    init_state, step = make_train_step(api, opt, strategy=args.strategy)
+    state = init_state(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    def batch():
+        return {k: jnp.asarray(v) for k, v in make_lm_batch(
+            rng, args.batch, args.seq, cfg.vocab_size).items()}
+
+    first = batch()
+    if args.strategy in ("split_concurrent", "split_server_sharded"):
+        state = init_prev_features(state, api, first, dtype=jnp.float32)
+    jstep = jax.jit(step, donate_argnums=(0,))
+
+    losses = []
+    t0 = time.time()
+    for i in range(args.steps):
+        b = first if i == 0 else batch()
+        state, m = jstep(state, b)
+        losses.append(float(m["loss"]))
+        if i % 20 == 0 or i == args.steps - 1:
+            dt = time.time() - t0
+            tok_s = (i + 1) * args.batch * args.seq / dt
+            print(f"step {i:4d} loss {losses[-1]:.4f} "
+                  f"({tok_s:,.0f} tok/s)", flush=True)
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"(noise floor ~{np.log(1/0.9):.2f} for 10% flip noise)")
+    assert losses[-1] < losses[0], "training must reduce loss"
+
+
+if __name__ == "__main__":
+    main()

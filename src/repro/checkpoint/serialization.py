@@ -1,0 +1,125 @@
+"""Checkpointing.
+
+Two formats:
+  * the paper's model-file format — JSON with **base64-encoded parameters**
+    ("although the model file is a platform independent string format, it can
+    be exchanged among machines without rounding errors") — bit-exact
+    round-trip, used for cross-host exchange;
+  * a fast ``.npz`` path for large checkpoints.
+"""
+from __future__ import annotations
+
+import base64
+import json
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _encode_leaf(x) -> dict:
+    a = np.asarray(x)
+    return {
+        "__tensor__": True,
+        "dtype": str(a.dtype),
+        "shape": list(a.shape),
+        "data": base64.b64encode(a.tobytes()).decode("ascii"),
+    }
+
+
+def _decode_leaf(d: dict):
+    a = np.frombuffer(base64.b64decode(d["data"]),
+                      dtype=np.dtype(d["dtype"]))
+    return a.reshape(d["shape"]).copy()
+
+
+def tree_to_json(tree) -> str:
+    """Serialise a pytree of arrays to the paper's JSON+base64 format."""
+
+    def conv(x):
+        if isinstance(x, dict):
+            return {"__dict__": {k: conv(v) for k, v in x.items()}}
+        if isinstance(x, (list, tuple)):
+            tag = "__list__" if isinstance(x, list) else "__tuple__"
+            return {tag: [conv(v) for v in x]}
+        if isinstance(x, (int, float, str, bool)) or x is None:
+            return {"__scalar__": x}
+        return _encode_leaf(x)
+
+    return json.dumps(conv(tree))
+
+
+def tree_from_json(s: str):
+    def conv(d):
+        if "__dict__" in d:
+            return {k: conv(v) for k, v in d["__dict__"].items()}
+        if "__list__" in d:
+            return [conv(v) for v in d["__list__"]]
+        if "__tuple__" in d:
+            return tuple(conv(v) for v in d["__tuple__"])
+        if "__scalar__" in d:
+            return d["__scalar__"]
+        return _decode_leaf(d)
+
+    return conv(json.loads(s))
+
+
+def save_json_model(path: str, tree) -> None:
+    tree = jax.tree_util.tree_map(np.asarray, tree)
+    with open(path, "w") as f:
+        f.write(tree_to_json(tree))
+
+
+def load_json_model(path: str):
+    with open(path) as f:
+        return tree_from_json(f.read())
+
+
+# --- npz fast path ---------------------------------------------------------
+
+
+def _flatten_paths(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten_paths(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        tag = "T" if isinstance(tree, tuple) else "L"
+        for i, v in enumerate(tree):
+            out.update(_flatten_paths(v, f"{prefix}__{tag}{i}/"))
+    else:
+        out[prefix.rstrip("/")] = np.asarray(tree)
+    return out
+
+
+def save_npz(path: str, tree) -> None:
+    np.savez(path, **_flatten_paths(tree))
+
+
+def load_npz(path: str):
+    flat = dict(np.load(path))
+
+    def insert(root, keys, val):
+        k = keys[0]
+        if len(keys) == 1:
+            root[k] = val
+            return
+        root = root.setdefault(k, {})
+        insert(root, keys[1:], val)
+
+    nested: dict = {}
+    for k, v in flat.items():
+        insert(nested, k.split("/"), v)
+
+    def fix(node):
+        if isinstance(node, dict):
+            keys = list(node.keys())
+            if keys and all(k.startswith("__T") or k.startswith("__L")
+                            for k in keys):
+                seq = [fix(node[k]) for k in sorted(
+                    keys, key=lambda s: int(s[3:]))]
+                return tuple(seq) if keys[0].startswith("__T") else seq
+            return {k: fix(v) for k, v in node.items()}
+        return node
+
+    return fix(nested)

@@ -1,0 +1,27 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    INPUT_SHAPES,
+    ArchConfig,
+    InputShape,
+    MambaConfig,
+    MoEConfig,
+    RWKVConfig,
+    RunConfig,
+    all_arch_configs,
+    get_arch_config,
+    get_smoke_config,
+)
+
+__all__ = [
+    "ARCH_IDS",
+    "INPUT_SHAPES",
+    "ArchConfig",
+    "InputShape",
+    "MambaConfig",
+    "MoEConfig",
+    "RWKVConfig",
+    "RunConfig",
+    "all_arch_configs",
+    "get_arch_config",
+    "get_smoke_config",
+]

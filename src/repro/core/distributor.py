@@ -1,0 +1,215 @@
+"""The Sashimi Distributor: HTTPServer + TicketDistributor analogue with
+simulated browser clients.
+
+The paper's browsers become ``BrowserClient`` threads.  Each client:
+  1. connects to the distributor (WebSocket analogue: method calls),
+  2. requests a ticket,
+  3. downloads the task code if not cached (LRU-GC'd cache, as in §2.1.2),
+  4. downloads required datasets/static files from the "HTTPServer",
+  5. executes the task, 6. returns the result, 7. loops.
+On an execution error the client files an error report (with traceback) and
+*reloads itself* (cache cleared), exactly as the paper describes.  Clients
+can be configured to be slow or to die mid-task, which exercises the
+ticket-redistribution fault tolerance.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+import traceback
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+from repro.core.tickets import TicketQueue
+
+
+class LRUCache:
+    """Least-recently-used cache (the paper's in-browser GC)."""
+
+    def __init__(self, capacity: int = 16):
+        self.capacity = capacity
+        self._d: "collections.OrderedDict[str, Any]" = collections.OrderedDict()
+        self.evictions = 0
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: str):
+        if key in self._d:
+            self._d.move_to_end(key)
+            self.hits += 1
+            return self._d[key]
+        self.misses += 1
+        return None
+
+    def put(self, key: str, value: Any):
+        if key in self._d:
+            self._d.move_to_end(key)
+        self._d[key] = value
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+            self.evictions += 1
+
+    def clear(self):
+        self._d.clear()
+
+
+@dataclass
+class TaskDef:
+    """A distributable task: code + the static files/datasets it needs."""
+
+    name: str
+    run: Callable[[Any, dict], Any]          # (args, static_data) -> result
+    static_files: tuple = ()                 # dataset keys served over "HTTP"
+
+
+@dataclass
+class ClientProfile:
+    """Simulated browser behaviour."""
+
+    name: str = "client"
+    speed: float = 1.0            # multiplier on task work_fn duration
+    fail_prob: float = 0.0        # probability a task raises
+    die_after: Optional[int] = None   # abandon (thread exit) after N tickets
+    latency: float = 0.0          # network latency per round-trip (s)
+    cache_capacity: int = 16
+
+
+class Distributor:
+    """TicketDistributor + HTTPServer in one object."""
+
+    def __init__(self, *, timeout: float = 300.0,
+                 redistribute_min: float = 10.0,
+                 clock: Callable[[], float] = time.monotonic,
+                 project_name: str = "project"):
+        self.queue = TicketQueue(timeout=timeout,
+                                 redistribute_min=redistribute_min,
+                                 clock=clock)
+        self.project_name = project_name
+        self.tasks: dict[str, TaskDef] = {}
+        self.static_store: dict[str, Any] = {}   # HTTPServer assets
+        self.download_count: collections.Counter = collections.Counter()
+        self.clients: list["BrowserClient"] = []
+        self._lock = threading.Lock()
+
+    # HTTPServer API -----------------------------------------------------
+
+    def register_task(self, task: TaskDef):
+        self.tasks[task.name] = task
+
+    def serve_static(self, key: str):
+        with self._lock:
+            self.download_count[key] += 1
+        return self.static_store[key]
+
+    def fetch_task(self, name: str) -> TaskDef:
+        with self._lock:
+            self.download_count[f"task:{name}"] += 1
+        return self.tasks[name]
+
+    # client management ----------------------------------------------------
+
+    def spawn_clients(self, profiles) -> list["BrowserClient"]:
+        cs = [BrowserClient(self, p) for p in profiles]
+        self.clients.extend(cs)
+        for c in cs:
+            c.start()
+        return cs
+
+    def shutdown(self):
+        for c in self.clients:
+            c.stop()
+        for c in self.clients:
+            c.join(timeout=5)
+        self.clients.clear()
+
+    def console(self) -> dict:
+        """The paper's control console view."""
+        snap = self.queue.snapshot()
+        snap["project"] = self.project_name
+        snap["clients"] = [
+            {"name": c.profile.name, "executed": c.executed,
+             "errors": c.errors, "alive": c.is_alive()}
+            for c in self.clients
+        ]
+        return snap
+
+
+class BrowserClient(threading.Thread):
+    """A simulated browser node running the paper's basic-program loop."""
+
+    def __init__(self, distributor: Distributor, profile: ClientProfile):
+        super().__init__(daemon=True)
+        self.dist = distributor
+        self.profile = profile
+        self.cache = LRUCache(profile.cache_capacity)
+        self.executed = 0
+        self.errors = 0
+        self.reloads = 0
+        self._stop = threading.Event()
+        self._rng_state = hash(profile.name) & 0xFFFFFFFF
+
+    def stop(self):
+        self._stop.set()
+
+    def _rand(self) -> float:
+        # tiny deterministic LCG so failures are reproducible
+        self._rng_state = (1103515245 * self._rng_state + 12345) & 0x7FFFFFFF
+        return self._rng_state / 0x7FFFFFFF
+
+    def _get_task(self, name: str) -> TaskDef:
+        cached = self.cache.get(f"task:{name}")
+        if cached is not None:
+            return cached
+        task = self.dist.fetch_task(name)           # step 3: download code
+        self.cache.put(f"task:{name}", task)
+        return task
+
+    def _get_static(self, task: TaskDef) -> dict:
+        data = {}
+        for key in task.static_files:               # step 4: download data
+            cached = self.cache.get(f"static:{key}")
+            if cached is None:
+                cached = self.dist.serve_static(key)
+                self.cache.put(f"static:{key}", cached)
+            data[key] = cached
+        return data
+
+    def _reload(self):
+        """Paper: on error the browser reloads itself."""
+        self.cache.clear()
+        self.reloads += 1
+
+    def run(self):
+        while not self._stop.is_set():
+            ticket = self.dist.queue.request()       # step 2: ticket request
+            if ticket is None:
+                if self.dist.queue.all_done():
+                    time.sleep(0.001)
+                else:
+                    time.sleep(0.002)
+                continue
+            if self.profile.latency:
+                time.sleep(self.profile.latency)
+            try:
+                task = self._get_task(ticket.task_name)
+                static = self._get_static(task)
+                if self.profile.fail_prob and self._rand() < self.profile.fail_prob:
+                    raise RuntimeError(
+                        f"simulated browser crash in {ticket.task_name}")
+                result = task.run(ticket.args, static)
+                if self.profile.speed != 1.0:
+                    time.sleep(0)  # speed modelled inside task work functions
+                self.dist.queue.submit(ticket.ticket_id, result,
+                                       self.profile.name)
+                self.executed += 1
+            except Exception:
+                self.errors += 1
+                self.dist.queue.report_error(
+                    ticket.ticket_id, traceback.format_exc(),
+                    self.profile.name)
+                self._reload()                        # paper: reload browser
+            if (self.profile.die_after is not None
+                    and self.executed + self.errors
+                    >= self.profile.die_after):
+                return                                # browser tab closed

@@ -1,0 +1,98 @@
+"""The CalculationFramework: the paper's Project / Task programming model.
+
+Python rendering of the paper's Appendix API:
+
+    class IsPrimeTask(TaskBase):
+        static_code_files = ["is_prime"]
+        def run(self, input, static):
+            return {"is_prime": static["is_prime"](input["candidate"])}
+
+    class PrimeListMakerProject(ProjectBase):
+        name = "PrimeListMakerProject"
+        def run(self):
+            task = self.create_task(IsPrimeTask)
+            task.calculate([{"candidate": i} for i in range(1, 10001)])
+            task.block(lambda results: ...)
+
+Results arrive ordered by input index, "as if they were processed by the
+local machine".
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Sequence
+
+from repro.core.distributor import Distributor, TaskDef
+
+
+class TaskBase:
+    """Subclass and override ``run``; list dataset keys in static_code_files."""
+
+    static_code_files: Sequence[str] = ()
+
+    @classmethod
+    def task_name(cls) -> str:
+        return cls.__name__
+
+    def run(self, input: Any, static: dict) -> Any:  # noqa: A002
+        raise NotImplementedError
+
+
+class TaskHandle:
+    def __init__(self, framework: "CalculationFramework", task_cls):
+        self.framework = framework
+        self.task_cls = task_cls
+        self._ticket_ids: list[int] = []
+        inst = task_cls()
+        self.framework.distributor.register_task(TaskDef(
+            name=task_cls.task_name(),
+            run=inst.run,
+            static_files=tuple(task_cls.static_code_files),
+        ))
+
+    def calculate(self, inputs: Sequence[Any]):
+        """Divide the arguments into tickets and enqueue them (paper §2.1.1)."""
+        self._ticket_ids = self.framework.distributor.queue.add_many(
+            self.task_cls.task_name(), inputs)
+
+    def block(self, callback: Optional[Callable] = None,
+              timeout: Optional[float] = None):
+        """Wait for all tickets; return results ordered like the inputs."""
+        ok = self.framework.distributor.queue.wait_all(timeout)
+        if not ok:
+            raise TimeoutError(
+                f"tickets unfinished: {self.framework.distributor.console()}")
+        res = self.framework.distributor.queue.results()
+        ordered = [res[tid] for tid in self._ticket_ids]
+        if callback is not None:
+            callback(ordered)
+        return ordered
+
+
+class ProjectBase:
+    name = "Project"
+
+    def __init__(self, framework: "CalculationFramework"):
+        self.framework = framework
+
+    def create_task(self, task_cls) -> TaskHandle:
+        return TaskHandle(self.framework, task_cls)
+
+    def run(self):
+        raise NotImplementedError
+
+
+@dataclass
+class CalculationFramework:
+    distributor: Distributor
+
+    def add_static(self, key: str, value: Any):
+        """Publish a dataset/helper on the HTTPServer."""
+        self.distributor.static_store[key] = value
+
+    def run_project(self, project_cls, *args, **kwargs):
+        project = project_cls(self, *args, **kwargs) if not isinstance(
+            project_cls, ProjectBase) else project_cls
+        self.distributor.project_name = getattr(project, "name",
+                                                project.__class__.__name__)
+        return project.run()

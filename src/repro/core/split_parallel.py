@@ -1,0 +1,285 @@
+"""The paper's distributed deep-learning algorithm (§4.1) as first-class
+training strategies, plus the baselines it is compared against.
+
+  * ``dp_full``          — MLitB (Meeds et al. 2014): synchronous data
+                           parallelism; every parameter's gradient crosses
+                           the data axis every step.
+  * ``split_sequential`` — He et al. 2015: backbone data-parallel, head
+                           ("FC") on the server, *synchronous*: head trains
+                           on current features, backbone waits.
+  * ``split_concurrent`` — the paper: backbone data-parallel on "clients",
+                           head trained on the "server" **concurrently** —
+                           the head updates from the *previous* step's
+                           features while the backbone's backward pass uses
+                           a *stale* head copy refreshed every K steps.  The
+                           two computations are data-independent inside one
+                           step, so XLA overlaps them, and the head gradient
+                           never crosses the data axis (head params are
+                           server-sharded; only features move).
+  * ``fsdp_tp``          — modern baseline mapping (no split), used for
+                           beyond-paper comparisons.
+
+All strategies share the same pure-pytree optimizer interface and the same
+model API; they differ in the step function and the sharding-rule table
+(``repro/sharding/rules.py``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import ModelApi, lm_loss
+from repro.optim import Optimizer
+
+HEAD_KEYS = ("head",)  # server-owned subtree(s) of the param pytree
+
+
+def split_params(params: dict):
+    backbone = {k: v for k, v in params.items() if k not in HEAD_KEYS}
+    head = {k: v for k, v in params.items() if k in HEAD_KEYS}
+    return backbone, head
+
+
+def merge_params(backbone: dict, head: dict) -> dict:
+    return {**backbone, **head}
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class TrainState:
+    params: Any                 # backbone params (clients)
+    head: Any                   # server head params
+    head_stale: Any             # client-side stale head copy (split_concurrent)
+    opt_state: Any              # backbone optimizer state
+    head_opt_state: Any         # head optimizer state
+    prev_features: Any          # features from step t-1 (split_concurrent)
+    prev_labels: Any
+    prev_mask: Any
+    step: Any                   # scalar int32
+
+
+def _text_logits(api: ModelApi, logits):
+    if api.cfg.family == "vlm":
+        return logits[:, api.cfg.num_patches:]
+    return logits
+
+
+def _head_loss(api: ModelApi, head_params, full_params_wo_head, feats,
+               labels, mask):
+    """Server-side loss: head logits from (stop-gradient) features."""
+    params = merge_params(full_params_wo_head, head_params)
+    logits = _text_logits(api, api.head_logits(params, feats))
+    return lm_loss(logits, labels, mask)
+
+
+def _split_micro(batch, k: int):
+    """(B, ...) arrays -> (k, B/k, ...) microbatch stacks."""
+    return jax.tree_util.tree_map(
+        lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]), batch)
+
+
+def _accum(grad_fn, batch, k: int):
+    """Gradient accumulation: scan ``grad_fn`` over k microbatches, mean the
+    outputs.  Peak activation memory drops ~k-fold (only one microbatch's
+    forward/backward is live at a time)."""
+    from repro.models import flags
+
+    micro = _split_micro(batch, k)
+
+    def body(acc, mb):
+        out = grad_fn(mb)
+        return jax.tree_util.tree_map(jnp.add, acc, out), None
+
+    zeros = jax.tree_util.tree_map(
+        lambda sd: jnp.zeros(sd.shape, sd.dtype),
+        jax.eval_shape(grad_fn, jax.tree_util.tree_map(lambda x: x[0],
+                                                       micro)))
+    tot, _ = jax.lax.scan(body, zeros, micro, **flags.scan_kwargs())
+    return jax.tree_util.tree_map(lambda x: x / k, tot)
+
+
+def make_train_step(api: ModelApi, opt: Optimizer, *, strategy: str,
+                    head_sync_period: int = 4,
+                    grad_accum: int = 1) -> tuple[Callable, Callable]:
+    """Returns (init_state, step_fn).
+
+    ``step_fn(state, batch) -> (state, metrics)`` is jit-friendly; batch is
+    {"tokens","labels","mask"[,"patches","frames"]}.  ``grad_accum`` > 1
+    splits the global batch into microbatches and accumulates gradients
+    (identical math for mean losses; ~k-fold lower activation memory).
+    """
+    cfg = api.cfg
+
+    if strategy in ("dp_full", "fsdp_tp"):
+
+        def init_state(rng):
+            from repro.sharding.spec import values_tree
+            params = values_tree(api.init(rng))
+            return TrainState(params=params, head={}, head_stale={},
+                              opt_state=opt.init(params), head_opt_state={},
+                              prev_features=(), prev_labels=(),
+                              prev_mask=(), step=jnp.zeros((), jnp.int32))
+
+        def step_fn(state: TrainState, batch):
+            def grad_fn(mb):
+                def loss_fn(params):
+                    loss, metrics = api.train_loss(params, mb)
+                    return loss, metrics
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(state.params)
+                return {"loss": loss, "metrics": metrics, "grads": grads}
+
+            out = (_accum(grad_fn, batch, grad_accum) if grad_accum > 1
+                   else grad_fn(batch))
+            new_params, new_opt = opt.update(out["grads"], state.opt_state,
+                                             state.params)
+            return TrainState(new_params, {}, {}, new_opt, {}, (), (), (),
+                              state.step + 1), \
+                {**out["metrics"], "total": out["loss"]}
+
+        return init_state, step_fn
+
+    if strategy not in ("split_sequential", "split_concurrent",
+                        "split_server_sharded"):
+        raise KeyError(strategy)
+
+    def init_state(rng):
+        from repro.sharding.spec import values_tree
+        params = values_tree(api.init(rng))
+        backbone, head = split_params(params)
+        if not jax.tree_util.tree_leaves(head):
+            raise ValueError(
+                f"{cfg.name}: split strategies need an untied head; "
+                "build the model with tie_embeddings=False "
+                "(configs are auto-untied by the launcher for split runs)")
+        # head_stale must be a distinct buffer (donation aliases otherwise)
+        stale = jax.tree_util.tree_map(lambda x: x.copy(), head)
+        return TrainState(
+            params=backbone, head=head, head_stale=stale,
+            opt_state=opt.init(backbone), head_opt_state=opt.init(head),
+            prev_features=(), prev_labels=(), prev_mask=(),
+            step=jnp.zeros((), jnp.int32))
+
+    if strategy == "split_sequential":
+        # He et al.: exact gradients, hard dependency between server and
+        # clients (head grads from *current* features; backbone backward
+        # through the *current* head).
+        def step_fn(state: TrainState, batch):
+            def loss_fn(backbone, head):
+                loss, metrics = api.train_loss(
+                    merge_params(backbone, head), batch)
+                return loss, metrics
+
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, argnums=(0, 1), has_aux=True)(
+                    state.params, state.head)
+            g_backbone, g_head = grads
+            new_backbone, new_opt = opt.update(g_backbone, state.opt_state,
+                                               state.params)
+            new_head, new_hopt = opt.update(g_head, state.head_opt_state,
+                                            state.head)
+            return TrainState(new_backbone, new_head, new_head, new_opt,
+                              new_hopt, (), (), (), state.step + 1), \
+                {**metrics, "total": loss}
+
+        return init_state, step_fn
+
+    # --- split_concurrent: the paper's algorithm -----------------------------
+
+    def step_fn(state: TrainState, batch):
+        # ---- clients: backbone fwd/bwd through the STALE head ------------
+        def grad_fn(mb):
+            def client_loss(backbone):
+                params = merge_params(backbone, state.head_stale)
+                logits, aux, feats = api.forward_features(params, mb)
+                loss = lm_loss(_text_logits(api, logits), mb["labels"],
+                               mb["mask"])
+                metrics = {"loss": loss, "aux": aux}
+                # features are what the server trains on NEXT step
+                return loss + aux, (metrics, jax.lax.stop_gradient(feats))
+            (loss, (metrics, feats)), g = jax.value_and_grad(
+                client_loss, has_aux=True)(state.params)
+            return {"loss": loss, "metrics": metrics, "grads": g,
+                    "feats": feats}
+
+        if grad_accum > 1:
+            # microbatched: mean grads; feature replay keeps the per-token
+            # layout by re-assembling microbatch features along batch
+            micro = _split_micro(batch, grad_accum)
+
+            def body(acc, mb):
+                out = grad_fn(mb)
+                acc = jax.tree_util.tree_map(
+                    jnp.add, acc,
+                    {"loss": out["loss"], "metrics": out["metrics"],
+                     "grads": out["grads"]})
+                return acc, out["feats"]
+
+            zeros = jax.tree_util.tree_map(
+                lambda sd: jnp.zeros(sd.shape, sd.dtype),
+                jax.eval_shape(
+                    lambda mb: {k: grad_fn(mb)[k]
+                                for k in ("loss", "metrics", "grads")},
+                    jax.tree_util.tree_map(lambda x: x[0], micro)))
+            from repro.models import flags as _flags
+            tot, feats_stack = jax.lax.scan(body, zeros, micro,
+                                            **_flags.scan_kwargs())
+            out = jax.tree_util.tree_map(lambda x: x / grad_accum, tot)
+            loss, metrics = out["loss"], out["metrics"]
+            feats = feats_stack.reshape(
+                (-1,) + feats_stack.shape[2:])
+        else:
+            o = grad_fn(batch)
+            loss, metrics, feats = o["loss"], o["metrics"], o["feats"]
+            out = o
+        new_backbone, new_opt = opt.update(out["grads"], state.opt_state,
+                                           state.params)
+
+        # ---- server: head trains on PREVIOUS step's features -------------
+        have_prev = state.step > 0
+
+        def head_grads():
+            g = jax.grad(_head_loss, argnums=1)(
+                api, state.head, state.params, state.prev_features,
+                state.prev_labels, state.prev_mask)
+            return g
+
+        def zero_head_grads():
+            return jax.tree_util.tree_map(jnp.zeros_like, state.head)
+
+        g_head = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(have_prev, a, b),
+            head_grads(), zero_head_grads())
+        new_head, new_hopt = opt.update(g_head, state.head_opt_state,
+                                        state.head)
+
+        # ---- stale-head refresh every K steps ------------------------------
+        do_sync = (state.step + 1) % head_sync_period == 0
+        new_stale = jax.tree_util.tree_map(
+            lambda fresh, stale: jnp.where(do_sync, fresh, stale),
+            new_head, state.head_stale)
+
+        return TrainState(
+            new_backbone, new_head, new_stale, new_opt, new_hopt,
+            feats, batch["labels"], batch["mask"], state.step + 1), \
+            {**metrics, "total": loss}
+
+    return init_state, step_fn
+
+
+def init_prev_features(state: TrainState, api: ModelApi, batch,
+                       dtype=jnp.bfloat16) -> TrainState:
+    """Materialise zero placeholders for the feature-replay slots (shapes
+    depend on the batch, so this runs once before jit)."""
+    cfg = api.cfg
+    b, s = batch["tokens"].shape
+    if cfg.family == "vlm":
+        s = s + cfg.num_patches
+    feats = jnp.zeros((b, s, cfg.d_model), dtype)
+    from dataclasses import replace
+    return replace(state, prev_features=feats,
+                   prev_labels=jnp.zeros_like(batch["labels"]),
+                   prev_mask=jnp.zeros_like(batch["mask"]))

@@ -1,0 +1,144 @@
+"""The Sashimi ticket queue — the paper's §2.1.2 algorithm, verbatim.
+
+Tickets are served in ascending **virtual created time** (VCT):
+
+  * an undistributed ticket's VCT is its creation time;
+  * once distributed, its VCT becomes ``last_distributed_at + timeout``
+    (paper: five minutes) — i.e. if no result arrives within the timeout the
+    ticket sorts as if re-created and another client picks it up;
+  * when no fresh tickets remain, distributed-but-unfinished tickets are
+    *redistributed* in ascending last-distribution order, but never more
+    often than ``redistribute_min`` (paper: ten seconds) per ticket — this
+    prevents the last ticket from stampeding to every idle client.
+
+The first result submitted for a ticket wins; duplicates are dropped.
+Thread-safe; the clock is injectable so tests can run timeouts in
+milliseconds.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+
+@dataclass
+class Ticket:
+    ticket_id: int
+    task_name: str
+    args: Any
+    created_at: float
+    distribute_count: int = 0
+    last_distributed_at: float = -float("inf")
+    completed: bool = False
+    result: Any = None
+    completed_by: Optional[str] = None
+    error_reports: list = field(default_factory=list)
+
+    def virtual_created_time(self, timeout: float) -> float:
+        if self.distribute_count == 0:
+            return self.created_at
+        return self.last_distributed_at + timeout
+
+
+class TicketQueue:
+    def __init__(self, *, timeout: float = 300.0,
+                 redistribute_min: float = 10.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.timeout = timeout
+        self.redistribute_min = redistribute_min
+        self.clock = clock
+        self._lock = threading.Lock()
+        self._tickets: dict[int, Ticket] = {}
+        self._ids = itertools.count()
+        self._done = threading.Event()
+        self._done.set()
+
+    # -- producer side ------------------------------------------------------
+
+    def add(self, task_name: str, args: Any) -> int:
+        with self._lock:
+            tid = next(self._ids)
+            self._tickets[tid] = Ticket(tid, task_name, args, self.clock())
+            self._done.clear()
+            return tid
+
+    def add_many(self, task_name: str, args_list) -> list[int]:
+        return [self.add(task_name, a) for a in args_list]
+
+    # -- distributor side ----------------------------------------------------
+
+    def request(self) -> Optional[Ticket]:
+        """Hand out the next ticket by ascending VCT (the paper's SQL query)."""
+        now = self.clock()
+        with self._lock:
+            best = None
+            best_key = None
+            for t in self._tickets.values():
+                if t.completed:
+                    continue
+                if (t.distribute_count > 0
+                        and now - t.last_distributed_at
+                        < self.redistribute_min):
+                    continue  # min 10 s between redistributions
+                key = (t.virtual_created_time(self.timeout), t.ticket_id)
+                if best_key is None or key < best_key:
+                    best, best_key = t, key
+            if best is None:
+                return None
+            best.distribute_count += 1
+            best.last_distributed_at = now
+            return Ticket(best.ticket_id, best.task_name, best.args,
+                          best.created_at, best.distribute_count,
+                          best.last_distributed_at)
+
+    def submit(self, ticket_id: int, result: Any, client: str = "?") -> bool:
+        """Record a result; returns False for duplicates/unknown tickets."""
+        with self._lock:
+            t = self._tickets.get(ticket_id)
+            if t is None or t.completed:
+                return False
+            t.completed = True
+            t.result = result
+            t.completed_by = client
+            if all(x.completed for x in self._tickets.values()):
+                self._done.set()
+            return True
+
+    def report_error(self, ticket_id: int, error: str, client: str = "?"):
+        """Paper: error report incl. stack trace is sent, browser reloads."""
+        with self._lock:
+            t = self._tickets.get(ticket_id)
+            if t is not None:
+                t.error_reports.append((client, error))
+
+    # -- introspection -------------------------------------------------------
+
+    def wait_all(self, timeout: Optional[float] = None) -> bool:
+        return self._done.wait(timeout)
+
+    def results(self) -> dict[int, Any]:
+        with self._lock:
+            return {tid: t.result for tid, t in self._tickets.items()
+                    if t.completed}
+
+    def snapshot(self) -> dict:
+        """The paper's control-console counters."""
+        with self._lock:
+            ts = list(self._tickets.values())
+            return {
+                "tickets": len(ts),
+                "waiting": sum(1 for t in ts if not t.completed
+                               and t.distribute_count == 0),
+                "in_flight": sum(1 for t in ts if not t.completed
+                                 and t.distribute_count > 0),
+                "executed": sum(1 for t in ts if t.completed),
+                "errors": sum(len(t.error_reports) for t in ts),
+                "redistributions": sum(max(t.distribute_count - 1, 0)
+                                       for t in ts),
+            }
+
+    def all_done(self) -> bool:
+        return self._done.is_set()

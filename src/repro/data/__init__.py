@@ -1,0 +1,9 @@
+from repro.data.synthetic import (
+    clustered_images,
+    make_lm_batch,
+    lm_batches,
+    TicketDataLoader,
+)
+
+__all__ = ["clustered_images", "make_lm_batch", "lm_batches",
+           "TicketDataLoader"]

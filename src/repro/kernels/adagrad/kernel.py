@@ -1,0 +1,63 @@
+"""Fused modified-AdaGrad update TPU kernel (Pallas) — the paper's optimizer:
+
+    acc += g²;   θ -= α · g / sqrt(β + acc)
+
+One fused elementwise pass over (param, grad, acc) producing (param', acc')
+— 3 reads + 2 writes instead of the ~7 transfers of the unfused update.
+Tensors are flattened and tiled (8, 1024) to match the VPU lane layout.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 8
+BLOCK_COLS = 1024
+
+
+def _adagrad_kernel(p_ref, g_ref, a_ref, po_ref, ao_ref, *, lr: float,
+                    beta: float, weight_decay: float):
+    g = g_ref[...].astype(jnp.float32)
+    p = p_ref[...].astype(jnp.float32)
+    if weight_decay:
+        g = g + weight_decay * p
+    a = a_ref[...] + jnp.square(g)
+    step = lr * g * jax.lax.rsqrt(beta + a)
+    po_ref[...] = (p - step).astype(po_ref.dtype)
+    ao_ref[...] = a
+
+
+def adagrad_kernel(p, g, acc, *, lr: float, beta: float = 1.0,
+                   weight_decay: float = 0.0, interpret: bool = True):
+    """p/g: any shape; acc: f32 same shape.  Returns (p', acc')."""
+    shape, dtype = p.shape, p.dtype
+    n = p.size
+    cols = BLOCK_COLS
+    rows_per_block = BLOCK_ROWS
+    block = rows_per_block * cols
+    n_p = (n + block - 1) // block * block
+    flat = lambda x, dt: jnp.pad(x.reshape(-1).astype(dt),
+                                 (0, n_p - n)).reshape(n_p // cols, cols)
+    pf = flat(p, dtype)
+    gf = flat(g, g.dtype)
+    af = flat(acc, jnp.float32)
+
+    grid = (n_p // block,)
+    spec = pl.BlockSpec((rows_per_block, cols), lambda i: (i, 0))
+    po, ao = pl.pallas_call(
+        functools.partial(_adagrad_kernel, lr=lr, beta=beta,
+                          weight_decay=weight_decay),
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct(pf.shape, dtype),
+            jax.ShapeDtypeStruct(af.shape, jnp.float32),
+        ],
+        interpret=interpret,
+    )(pf, gf, af)
+    return (po.reshape(-1)[:n].reshape(shape),
+            ao.reshape(-1)[:n].reshape(shape))

@@ -1,0 +1,21 @@
+"""Jit'd public wrapper for the fused modified-AdaGrad kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.adagrad.kernel import adagrad_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("lr", "beta", "weight_decay", "interpret"))
+def adagrad_update(p, g, acc, *, lr: float, beta: float = 1.0,
+                   weight_decay: float = 0.0,
+                   interpret: bool | None = None):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return adagrad_kernel(p, g, acc, lr=lr, beta=beta,
+                          weight_decay=weight_decay, interpret=interp)

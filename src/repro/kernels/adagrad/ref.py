@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused modified-AdaGrad kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adagrad_ref(p, g, acc, *, lr: float, beta: float = 1.0,
+                weight_decay: float = 0.0):
+    gf = g.astype(jnp.float32)
+    if weight_decay:
+        gf = gf + weight_decay * p.astype(jnp.float32)
+    a = acc + jnp.square(gf)
+    step = lr * gf * jax.lax.rsqrt(beta + a)
+    return (p.astype(jnp.float32) - step).astype(p.dtype), a

@@ -1,0 +1,30 @@
+"""Jit'd public wrapper for the flash attention kernel.
+
+Accepts the model's (B, S, H, hd) layout, handles GQA, picks interpret mode
+automatically off-TPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    interpret: bool | None = None):
+    """q: (B, Sq, Hq, hd); k/v: (B, Skv, Hkv, hd) -> (B, Sq, Hq, hd)."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention_kernel(qt, kt, vt, causal=causal, window=window,
+                                 interpret=interp)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  scale: float | None = None):
+    """q: (B, Hq, Sq, hd); k/v: (B, Hkv, Skv, hd) -> (B, Hq, Sq, hd)."""
+    b, hq, sq, hd = q.shape
+    _, hkv, skv, _ = k.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    g = hq // hkv
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqe,bhke->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhke->bhqe", w,
+                      v.astype(jnp.float32)).astype(q.dtype)

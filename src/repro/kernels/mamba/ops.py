@@ -1,0 +1,19 @@
+"""Jit'd public wrapper for the Mamba selective-scan kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.mamba.kernel import mamba_scan_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def mamba_scan(dt, x, b_t, c_t, a, h0, *, interpret: bool | None = None):
+    """dt/x: (B,T,DI); b_t/c_t: (B,T,ds); a: (DI,ds); h0: (B,DI,ds)."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return mamba_scan_kernel(dt, x, b_t, c_t, a, h0, interpret=interp)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the Mamba selective-scan kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba_scan_ref(dt, x, b_t, c_t, a, h0):
+    """Same contract as kernel.mamba_scan_kernel."""
+    af = a.astype(jnp.float32)
+
+    def step(h, inp):
+        dt_t, x_t, b_tt, c_tt = (z.astype(jnp.float32) for z in inp)
+        da = jnp.exp(dt_t[:, :, None] * af[None])
+        h = da * h + (dt_t * x_t)[:, :, None] * b_tt[:, None, :]
+        y = jnp.einsum("bcs,bs->bc", h, c_tt)
+        return h, y
+
+    xs = tuple(z.transpose(1, 0, 2) for z in (dt, x, b_t, c_t))
+    hT, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2), hT

@@ -1,0 +1,19 @@
+"""Jit'd public wrapper for the RWKV-6 WKV kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.rwkv6.kernel import wkv_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def wkv(r, k, v, w, u, s0, *, interpret: bool | None = None):
+    """r/k/v/w: (B,T,H,hd); u: (H,hd); s0: (B,H,hd,hd) -> (y, sT)."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return wkv_kernel(r, k, v, w, u, s0, interpret=interp)

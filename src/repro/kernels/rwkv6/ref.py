@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the RWKV-6 WKV kernel (lax.scan recurrence)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_ref(r, k, v, w, u, s0):
+    """Same contract as kernel.wkv_kernel."""
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = (z.astype(jnp.float32) for z in inp)  # (B,H,hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", r_t,
+                       s + u[None, :, :, None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(z.transpose(1, 0, 2, 3) for z in (r, k, v, w))
+    sT, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype), sT

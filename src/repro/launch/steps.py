@@ -1,0 +1,314 @@
+"""Step builders: turn (arch config, run config, mesh) into jit-able step
+functions with fully-specified in/out shardings for training, prefill and
+decode — used by the real launcher and by the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape, RunConfig
+from repro.core.split_parallel import (TrainState, init_prev_features,
+                                       make_train_step, split_params)
+from repro.models.model import build_model
+from repro.optim import get_optimizer
+from repro.sharding.rules import rules_for_strategy
+from repro.sharding.spec import (ShardCtx, axes_tree, spec_tree, to_pspec,
+                                 use_shard_ctx, values_tree)
+
+LONG_CONTEXT_WINDOW = 8192  # sliding window used by full-attention archs
+                            # for the long_500k shape
+
+
+# ---------------------------------------------------------------------------
+# Shape-aware rule adjustment
+# ---------------------------------------------------------------------------
+
+
+def resolve_decode_layout(cfg: ArchConfig, mesh, layout: str) -> str:
+    """Resolve "auto" ONCE against the full-size config (reduced-depth
+    accounting compiles must inherit the same concrete layout)."""
+    if layout != "auto":
+        return layout
+    per_shard = cfg.param_count() * 2 / mesh.shape["model"]
+    return "replicated_batch" if per_shard > 2 * 2**30 else "batch_sharded"
+
+
+def make_rules(strategy: str, mesh, shape: InputShape,
+               global_batch: int | None = None,
+               decode_layout: str = "batch_sharded",
+               cfg: ArchConfig | None = None) -> dict:
+    """Strategy rules specialised to the input shape.
+
+    * decode: query heads are replicated and the KV cache is sharded along
+      its sequence dim over 'model' (plus 'data' too when the batch is too
+      small to occupy the data axis) — distributed flash-decode layout.
+      ``decode_layout="replicated_batch"`` additionally replicates the
+      batch over the data axes so contraction-dim-sharded (FSDP) weights
+      stay RESIDENT — GSPMD partial-sums the tiny per-step activations
+      instead of all-gathering the weights (measured −92.6% collective on
+      jamba-398B decode_32k; §Perf).  "auto" picks it when the bf16 weight
+      bytes per model shard exceed 2 GiB.
+    * any shape: drop 'batch' sharding when the global batch doesn't divide
+      the data axes.
+    """
+    rules = dict(rules_for_strategy(strategy, mesh.axis_names))
+    b = global_batch or shape.global_batch
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    data_size = 1
+    for a in data_axes:
+        data_size *= mesh.shape[a]
+    batch_shardable = b % data_size == 0
+    if not batch_shardable:
+        rules["batch"] = None
+    if shape.kind == "decode":
+        layout = decode_layout
+        if layout == "auto":
+            layout = "batch_sharded"
+            if cfg is not None:
+                per_shard = cfg.param_count() * 2 / mesh.shape["model"]
+                if per_shard > 2 * 2**30:
+                    layout = "replicated_batch"
+        rules["heads"] = None
+        if layout == "replicated_batch":
+            rules["batch"] = None
+            batch_shardable = False
+        rules["kv_seq"] = ("data", "model") if not batch_shardable \
+            else "model"
+        rules["kv_seq"] = tuple(a for a in (rules["kv_seq"]
+                                if isinstance(rules["kv_seq"], tuple)
+                                else (rules["kv_seq"],))
+                                if a in mesh.axis_names)
+        if len(rules["kv_seq"]) == 1:
+            rules["kv_seq"] = rules["kv_seq"][0]
+    return rules
+
+
+def arch_for_run(cfg: ArchConfig, shape: InputShape,
+                 strategy: str) -> ArchConfig:
+    """Apply run-level config surgery: untie heads for split strategies,
+    sliding window for long-context decode on full-attention archs."""
+    if strategy.startswith("split") and cfg.tie_embeddings:
+        cfg = dataclasses.replace(cfg, tie_embeddings=False)
+    if (shape.name == "long_500k" and not cfg.supports_long_context
+            and not cfg.sliding_window):
+        cfg = cfg.with_sliding_window(LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# Axes trees for states / batches / caches
+# ---------------------------------------------------------------------------
+
+
+def batch_axes(batch_spec: dict) -> dict:
+    out = {}
+    for k, v in batch_spec.items():
+        out[k] = ("batch",) + (None,) * (len(v.shape) - 1)
+    return out
+
+
+_CACHE_AXES_BY_KEY = {
+    "k": ("layers", "batch", "kv_seq", "kv_heads", None),
+    "v": ("layers", "batch", "kv_seq", "kv_heads", None),
+    "pos": ("layers", "kv_seq"),
+    "cross_k": ("layers", "batch", None, "kv_heads", None),
+    "cross_v": ("layers", "batch", None, "kv_heads", None),
+    "ssm": ("layers", None, "batch", "mamba", None),
+    "conv": ("layers", None, "batch", None, "mamba"),
+    "wkv": ("layers", "batch", "rwkv_head", None, None),
+    "shift_tm": ("layers", "batch", None),
+    "shift_cm": ("layers", "batch", None),
+}
+
+
+def cache_axes(cache_sds: dict) -> dict:
+    return {k: _CACHE_AXES_BY_KEY[k] for k in cache_sds}
+
+
+def _mirror(axes, like):
+    """Build an axes tree for an optimizer-state subtree mirroring params."""
+    return jax.tree_util.tree_map(lambda _: axes_copy(_), like)
+
+
+def opt_state_axes(opt_name: str, params_axes):
+    if opt_name == "adagrad":
+        return {"acc": params_axes}
+    if opt_name == "adamw":
+        return {"m": params_axes, "v": params_axes, "t": ()}
+    if opt_name == "sgd":
+        return {}
+    raise KeyError(opt_name)
+
+
+def train_state_axes(api, opt_name: str, strategy: str,
+                     batch_spec: dict) -> TrainState:
+    p_axes = axes_tree(jax.eval_shape(
+        lambda: api.init(jax.random.PRNGKey(0))))
+    if strategy in ("dp_full", "fsdp_tp"):
+        return TrainState(
+            params=p_axes, head={}, head_stale={},
+            opt_state=opt_state_axes(opt_name, p_axes), head_opt_state={},
+            prev_features=(), prev_labels=(), prev_mask=(), step=())
+    backbone_axes, head_axes = split_params(p_axes)
+    concurrent = strategy in ("split_concurrent", "split_server_sharded")
+    feats = ("batch", None, None) if concurrent else ()
+    lbl = ("batch", None) if concurrent else ()
+    return TrainState(
+        params=backbone_axes, head=head_axes, head_stale=head_axes,
+        opt_state=opt_state_axes(opt_name, backbone_axes),
+        head_opt_state=opt_state_axes(opt_name, head_axes),
+        prev_features=feats, prev_labels=lbl, prev_mask=lbl, step=())
+
+
+# ---------------------------------------------------------------------------
+# Bundles
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class StepBundle:
+    """Everything needed to lower/compile/run one step kind."""
+
+    fn: Callable                 # jit-able python callable
+    args_sds: tuple              # ShapeDtypeStruct pytree of example args
+    in_shardings: tuple
+    rules: dict
+    mesh: Any
+    api: Any
+    cfg: ArchConfig
+
+    def lower(self, donate: bool = True):
+        jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                         donate_argnums=(0,) if donate else ())
+        with use_shard_ctx(ShardCtx(self.mesh, self.rules)):
+            return jitted.lower(*self.args_sds)
+
+
+def _cast_float_sds(tree, dtype):
+    def one(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(x.shape, dtype)
+        return x
+    return jax.tree_util.tree_map(one, tree)
+
+
+def _shardings(tree_axes, rules, mesh, tree_sds=None):
+    """Axes tree (+ optional SDS tree for divisibility checks) -> shardings."""
+    if tree_sds is None:
+        return jax.tree_util.tree_map(
+            lambda ax: NamedSharding(mesh, to_pspec(ax, rules)), tree_axes,
+            is_leaf=lambda x: isinstance(x, tuple))
+    return jax.tree_util.tree_map(
+        lambda ax, sds: NamedSharding(
+            mesh, to_pspec(ax, rules, mesh=mesh,
+                           shape=getattr(sds, "shape", ()))),
+        tree_axes, tree_sds, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def build_train_step(cfg: ArchConfig, run: RunConfig, shape: InputShape,
+                     mesh, *, global_batch: int | None = None) -> StepBundle:
+    cfg = arch_for_run(cfg, shape, run.strategy)
+    compute_dtype = jnp.dtype(run.compute_dtype)
+    api = build_model(cfg, compute_dtype=compute_dtype, remat=run.remat,
+                      loss_chunks=run.loss_chunks)
+    opt = get_optimizer(run.optimizer, run.learning_rate,
+                        adagrad_beta=run.adagrad_beta,
+                        weight_decay=run.weight_decay)
+    init_state, step_fn = make_train_step(
+        api, opt, strategy=run.strategy,
+        head_sync_period=run.head_sync_period, grad_accum=run.grad_accum)
+
+    batch_sds = api.batch_spec(shape, global_batch=global_batch)
+    rules = make_rules(run.strategy, mesh, shape, global_batch)
+
+    def init_all():
+        state = init_state(jax.random.PRNGKey(run.seed))
+        if run.strategy in ("split_concurrent", "split_server_sharded"):
+            state = init_prev_features(state, api, batch_sds,
+                                       dtype=compute_dtype)
+        return state
+
+    state_sds = jax.eval_shape(init_all)
+    if run.param_dtype != "float32":
+        state_sds = _cast_float_sds(state_sds, jnp.dtype(run.param_dtype))
+    st_axes = train_state_axes(api, run.optimizer, run.strategy, batch_sds)
+    in_shardings = (_shardings(st_axes, rules, mesh, state_sds),
+                    _shardings(batch_axes(batch_sds), rules, mesh, batch_sds))
+    return StepBundle(step_fn, (state_sds, batch_sds), in_shardings, rules,
+                      mesh, api, cfg)
+
+
+def build_prefill_step(cfg: ArchConfig, run: RunConfig, shape: InputShape,
+                       mesh, *, global_batch: int | None = None) -> StepBundle:
+    cfg = arch_for_run(cfg, shape, run.strategy)
+    compute_dtype = jnp.dtype(run.compute_dtype)
+    api = build_model(cfg, compute_dtype=compute_dtype, remat=False)
+    batch_sds = api.batch_spec(shape, global_batch=global_batch)
+    rules = make_rules(run.strategy, mesh, shape, global_batch)
+    params_sds = _cast_float_sds(
+        jax.eval_shape(lambda: values_tree(api.init(jax.random.PRNGKey(0)))),
+        compute_dtype)
+    p_axes = axes_tree(jax.eval_shape(
+        lambda: api.init(jax.random.PRNGKey(0))))
+    in_shardings = (_shardings(p_axes, rules, mesh, params_sds),
+                    _shardings(batch_axes(batch_sds), rules, mesh, batch_sds))
+
+    def fn(params, batch):
+        return api.prefill(params, batch)
+
+    return StepBundle(fn, (params_sds, batch_sds), in_shardings, rules,
+                      mesh, api, cfg)
+
+
+def build_decode_step(cfg: ArchConfig, run: RunConfig, shape: InputShape,
+                      mesh, *, global_batch: int | None = None) -> StepBundle:
+    cfg = arch_for_run(cfg, shape, run.strategy)
+    compute_dtype = jnp.dtype(run.compute_dtype)
+    api = build_model(cfg, compute_dtype=compute_dtype, remat=False)
+    b = global_batch or shape.global_batch
+    rules = make_rules(run.strategy, mesh, shape, global_batch,
+                       decode_layout=run.decode_layout, cfg=cfg)
+
+    cache_sds = jax.eval_shape(
+        lambda: api.init_cache(b, shape.seq_len))
+    params_sds = _cast_float_sds(
+        jax.eval_shape(lambda: values_tree(api.init(jax.random.PRNGKey(0)))),
+        compute_dtype)
+    p_axes = axes_tree(jax.eval_shape(
+        lambda: api.init(jax.random.PRNGKey(0))))
+    token_sds = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    index_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    in_shardings = (
+        _shardings(p_axes, rules, mesh, params_sds),
+        _shardings(cache_axes(cache_sds), rules, mesh, cache_sds),
+        NamedSharding(mesh, to_pspec(("batch", None), rules)),
+        NamedSharding(mesh, P()),
+    )
+
+    def fn(params, cache, token, index):
+        return api.decode_step(params, cache, token, index)
+
+    return StepBundle(fn, (params_sds, cache_sds, token_sds, index_sds),
+                      in_shardings, rules, mesh, api, cfg)
+
+
+def build_step(cfg: ArchConfig, run: RunConfig, shape: InputShape, mesh,
+               **kw) -> StepBundle:
+    if shape.kind == "train":
+        return build_train_step(cfg, run, shape, mesh, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, run, shape, mesh, **kw)
+    if shape.kind == "decode":
+        return build_decode_step(cfg, run, shape, mesh, **kw)
+    raise ValueError(shape.kind)
+
+
+def axes_copy(x):
+    return x

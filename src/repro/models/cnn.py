@@ -1,0 +1,79 @@
+"""The paper's deep CNN (Sukiyaki): conv -> activation -> max-pool stacks and
+a fully-connected softmax classifier (Figures 2/4 of the paper).
+
+Exposed as two halves — ``conv_features`` (the "client" part under the
+paper's distribution algorithm) and ``fc_logits`` (the "server" part) — so
+``core/split_parallel.py`` can train them with the paper's concurrency.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.spec import Param, param, shard_act
+
+
+def init_cnn(key, ccfg):
+    ks = jax.random.split(key, len(ccfg.convs) + 1)
+    convs = []
+    cin = ccfg.in_channels
+    for i, spec in enumerate(ccfg.convs):
+        convs.append({
+            "w": param(ks[i], (spec.kernel, spec.kernel, cin,
+                               spec.out_channels),
+                       (None, None, None, "conv_out"),
+                       scale=1.0 / math.sqrt(spec.kernel ** 2 * cin)),
+            "b": Param(jnp.zeros((spec.out_channels,)), ("conv_out",)),
+        })
+        cin = spec.out_channels
+    dims = [ccfg.feature_dim, *ccfg.fc_hidden, ccfg.num_classes]
+    fck = jax.random.split(ks[-1], len(dims) - 1)
+    fc = [{
+        "w": param(fck[i], (dims[i], dims[i + 1]),
+                   ("head_embed", "head_vocab"),
+                   scale=1.0 / math.sqrt(dims[i])),
+        "b": Param(jnp.zeros((dims[i + 1],)), ("head_vocab",)),
+    } for i in range(len(dims) - 1)]
+    return {"convs": convs, "fc": fc}
+
+
+def conv_features(params, ccfg, images):
+    """images: (B, H, W, C) -> flat features (B, feature_dim)."""
+    x = images
+    for spec, cp in zip(ccfg.convs, params["convs"]):
+        x = jax.lax.conv_general_dilated(
+            x, cp["w"].astype(x.dtype), window_strides=(1, 1),
+            padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = jax.nn.relu(x + cp["b"].astype(x.dtype))
+        x = jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, spec.pool, spec.pool, 1),
+            (1, spec.pool, spec.pool, 1), "VALID")
+        x = shard_act(x, "batch", None, None, "conv_out")
+    return x.reshape(x.shape[0], -1)
+
+
+def fc_logits(params, ccfg, feats):
+    """The server-side fully-connected classifier (optionally deep)."""
+    x = feats
+    layers_ = params["fc"]
+    for i, lp in enumerate(layers_):
+        x = x @ lp["w"].astype(x.dtype) + lp["b"].astype(x.dtype)
+        if i < len(layers_) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def forward(params, ccfg, images):
+    return fc_logits(params, ccfg, conv_features(params, ccfg, images))
+
+
+def nll_loss(logits, labels):
+    """Mean softmax cross-entropy; labels: (B,) int."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def error_rate(logits, labels):
+    return jnp.mean((jnp.argmax(logits, -1) != labels).astype(jnp.float32))

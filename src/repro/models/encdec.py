@@ -1,0 +1,211 @@
+"""Whisper-style encoder-decoder backbone.
+
+The mel-spectrogram + conv feature extractor is STUBBED per the assignment:
+``frames`` arrive as precomputed (B, T_enc, d_model) embeddings.  Positions
+are fixed sinusoids (Whisper uses no RoPE).  Decode uses a self-attention
+ring cache plus per-layer precomputed cross-attention K/V.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import flags, layers as L
+from repro.models.transformer import stack_layer_axes
+from repro.sharding.spec import shard_act
+
+
+def _init_enc_block(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": L.init_norm(cfg),
+        "attn": L.init_attention(k1, cfg),
+        "ffn_norm": L.init_norm(cfg),
+        "mlp": L.init_mlp(k2, cfg),
+    }
+
+
+def _init_dec_block(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "attn_norm": L.init_norm(cfg),
+        "attn": L.init_attention(k1, cfg),
+        "cross_norm": L.init_norm(cfg),
+        "cross": L.init_attention(k2, cfg, cross=True),
+        "ffn_norm": L.init_norm(cfg),
+        "mlp": L.init_mlp(k3, cfg),
+    }
+
+
+def init_model(key, cfg):
+    ks = jax.random.split(key, 4)
+    enc = jax.vmap(lambda k: _init_enc_block(k, cfg))(
+        jax.random.split(ks[0], cfg.encoder_layers))
+    dec = jax.vmap(lambda k: _init_dec_block(k, cfg))(
+        jax.random.split(ks[1], cfg.num_layers))
+    return {
+        "embed": L.init_embedding(ks[2], cfg),
+        "enc_blocks": stack_layer_axes(enc),
+        "enc_norm": L.init_norm(cfg),
+        "dec_blocks": stack_layer_axes(dec),
+        "final_norm": L.init_norm(cfg),
+        "head": L.init_lm_head(ks[3], cfg),
+    }
+
+
+def encode(params, cfg, frames, *, dtype=jnp.bfloat16):
+    """frames: (B, T_enc, D) stub embeddings -> (B, T_enc, D)."""
+    t = frames.shape[1]
+    x = frames.astype(dtype) + L.sinusoidal_positions(
+        t, cfg.d_model).astype(dtype)[None]
+    x = shard_act(x, "batch", "seq", None)
+    positions = jnp.arange(t, dtype=jnp.int32)
+
+    def body(x, bp):
+        h, _ = L.attention(bp["attn"], cfg,
+                           L.apply_norm(bp["attn_norm"], cfg, x),
+                           positions=positions, causal=False, use_rope=False)
+        x = x + h
+        x = x + L.apply_mlp(bp["mlp"], cfg,
+                            L.apply_norm(bp["ffn_norm"], cfg, x))
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"],
+                        **flags.scan_kwargs())
+    return L.apply_norm(params["enc_norm"], cfg, x)
+
+
+def _dec_block(bp, cfg, x, enc_out, *, positions, cache=None,
+               cross_cache=None, cache_index=None):
+    h, new_cache = L.attention(
+        bp["attn"], cfg, L.apply_norm(bp["attn_norm"], cfg, x),
+        positions=positions, causal=True, use_rope=False, cache=cache,
+        cache_index=cache_index)
+    x = x + h
+    h, _ = L.attention(
+        bp["cross"], cfg, L.apply_norm(bp["cross_norm"], cfg, x),
+        positions=positions, encoder_out=enc_out, cache=cross_cache,
+        use_rope=False)
+    x = x + h
+    x = x + L.apply_mlp(bp["mlp"], cfg, L.apply_norm(bp["ffn_norm"], cfg, x))
+    return x, new_cache
+
+
+def forward_train(params, cfg, tokens, *, frames, dtype=jnp.bfloat16,
+                  remat=True, window=None, compute_logits=True):
+    enc_out = encode(params, cfg, frames, dtype=dtype)
+    s = tokens.shape[1]
+    x = L.embed_tokens(params["embed"], cfg, tokens, dtype)
+    x = x + L.sinusoidal_positions(s, cfg.d_model).astype(dtype)[None]
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    def body(x, bp):
+        x, _ = _dec_block(bp, cfg, x, enc_out, positions=positions)
+        return x, None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["dec_blocks"],
+                        **flags.scan_kwargs())
+    x = L.apply_norm(params["final_norm"], cfg, x)
+    logits = (L.lm_logits(params["head"], params["embed"], cfg, x)
+              if compute_logits else None)
+    return logits, jnp.float32(0.0), x
+
+
+def init_cache(cfg, batch: int, cache_len: int, *, window=None,
+               dtype=jnp.bfloat16):
+    window = cfg.sliding_window if window is None else window
+    size = min(window, cache_len) if window else cache_len
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    lyr = cfg.num_layers
+    return {
+        "k": jnp.zeros((lyr, batch, size, kv, hd), dtype),
+        "v": jnp.zeros((lyr, batch, size, kv, hd), dtype),
+        "pos": jnp.full((lyr, size), -1, jnp.int32),
+        "cross_k": jnp.zeros((lyr, batch, cfg.encoder_seq_len, kv, hd),
+                             dtype),
+        "cross_v": jnp.zeros((lyr, batch, cfg.encoder_seq_len, kv, hd),
+                             dtype),
+    }
+
+
+def prefill(params, cfg, tokens, *, frames, dtype=jnp.bfloat16, window=None,
+            cache_len=None):
+    """Encode audio, run the decoder prompt, build self+cross caches."""
+    window = cfg.sliding_window if window is None else window
+    enc_out = encode(params, cfg, frames, dtype=dtype)
+    b, s = tokens.shape
+    cache_len = cache_len or s
+    size = min(window, cache_len) if window else cache_len
+    x = L.embed_tokens(params["embed"], cfg, tokens, dtype)
+    x = x + L.sinusoidal_positions(s, cfg.d_model).astype(dtype)[None]
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    def body(x, bp):
+        xn = L.apply_norm(bp["attn_norm"], cfg, x)
+        h, (k, v) = L.attention(bp["attn"], cfg, xn, positions=positions,
+                                causal=True, use_rope=False)
+        x = x + h
+        # precompute this layer's cross K/V from encoder output
+        ck = jnp.einsum("btd,dnh->btnh", enc_out,
+                        bp["cross"]["wk"].astype(dtype))
+        cv = jnp.einsum("btd,dnh->btnh", enc_out,
+                        bp["cross"]["wv"].astype(dtype))
+        if "bk" in bp["cross"]:
+            ck = ck + bp["cross"]["bk"].astype(dtype)
+            cv = cv + bp["cross"]["bv"].astype(dtype)
+        h, _ = L.attention(bp["cross"], cfg,
+                           L.apply_norm(bp["cross_norm"], cfg, x),
+                           positions=positions, encoder_out=enc_out,
+                           use_rope=False)
+        x = x + h
+        x = x + L.apply_mlp(bp["mlp"], cfg,
+                            L.apply_norm(bp["ffn_norm"], cfg, x))
+        if size < s:
+            keep = positions[s - size:]
+            slots = keep % size
+            sk = jnp.zeros((b, size) + k.shape[2:], dtype).at[:, slots].set(
+                k[:, s - size:].astype(dtype))
+            sv = jnp.zeros((b, size) + v.shape[2:], dtype).at[:, slots].set(
+                v[:, s - size:].astype(dtype))
+            spos = jnp.full((size,), -1, jnp.int32).at[slots].set(keep)
+        else:
+            pad = size - s
+            sk = jnp.pad(k.astype(dtype), ((0, 0), (0, pad), (0, 0), (0, 0)))
+            sv = jnp.pad(v.astype(dtype), ((0, 0), (0, pad), (0, 0), (0, 0)))
+            spos = jnp.concatenate([positions,
+                                    jnp.full((pad,), -1, jnp.int32)])
+        return x, {"k": sk, "v": sv, "pos": spos,
+                   "cross_k": ck.astype(dtype), "cross_v": cv.astype(dtype)}
+
+    x, cache = jax.lax.scan(body, x, params["dec_blocks"],
+                            **flags.scan_kwargs())
+    x = L.apply_norm(params["final_norm"], cfg, x)
+    logits = L.lm_logits(params["head"], params["embed"], cfg, x[:, -1:])
+    return logits, cache
+
+
+def decode_step(params, cfg, cache, token, index, *, dtype=jnp.bfloat16,
+                window=None):
+    window = cfg.sliding_window if window is None else window
+    x = L.embed_tokens(params["embed"], cfg, token, dtype)
+    pos_row = L.sinusoidal_positions(cfg.max_seq_len, cfg.d_model)
+    x = x + jax.lax.dynamic_slice_in_dim(
+        pos_row, jnp.minimum(index, pos_row.shape[0] - 1), 1)[None].astype(
+            dtype)
+    positions = jnp.full((1,), index, jnp.int32)
+
+    def body(x, xs):
+        bp, k, v, pos, ck, cv = xs
+        x, nc = _dec_block(bp, cfg, x, None, positions=positions,
+                           cache=(k, v, pos), cross_cache=(ck, cv),
+                           cache_index=index)
+        return x, {"k": nc[0], "v": nc[1], "pos": nc[2],
+                   "cross_k": ck, "cross_v": cv}
+
+    x, new_cache = jax.lax.scan(
+        body, x, (params["dec_blocks"], cache["k"], cache["v"], cache["pos"],
+                  cache["cross_k"], cache["cross_v"]), **flags.scan_kwargs())
+    x = L.apply_norm(params["final_norm"], cfg, x)
+    logits = L.lm_logits(params["head"], params["embed"], cfg, x)
+    return logits, new_cache

@@ -1,0 +1,233 @@
+"""Jamba-style hybrid assembly: Mamba+attention 1:7 interleave, MoE every
+other layer.  The layer stack is scanned over *periods* of
+``attn_layer_period`` sublayers (the repeating unit), with the period body
+unrolled — HLO stays one-period-sized regardless of depth (72 layers = 9
+scanned periods for Jamba-1.5-Large).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import flags, layers as L
+from repro.models.mamba import (init_mamba, mamba_forward, mamba_init_state,
+                                _dims as mamba_dims)
+from repro.models.moe import apply_moe, init_moe
+from repro.sharding.spec import Param, shard_act
+
+_is_param = lambda x: isinstance(x, Param)
+
+
+def _prepend_axis(tree, name="layers"):
+    return jax.tree_util.tree_map(
+        lambda p: Param(p.value, (name,) + p.axes), tree, is_leaf=_is_param)
+
+
+def _index(tree, i):
+    return jax.tree_util.tree_map(lambda a: a[i], tree)
+
+
+def _period_layout(cfg):
+    p = cfg.attn_layer_period
+    attn_pos = cfg.attn_layer_offset
+    moe_every = cfg.moe_layer_period
+    layout = []
+    for i in range(p):
+        mixer = "attn" if i == attn_pos else "mamba"
+        ffn = "moe" if (cfg.is_moe and i % moe_every == moe_every - 1) \
+            else "dense"
+        layout.append((mixer, ffn))
+    return layout
+
+
+def init_model(key, cfg):
+    layout = _period_layout(cfg)
+    p_len = len(layout)
+    assert cfg.num_layers % p_len == 0, (cfg.num_layers, p_len)
+    n_periods = cfg.num_layers // p_len
+    n_mamba = sum(m == "mamba" for m, _ in layout)
+    n_dense = sum(f == "dense" for _, f in layout)
+    n_moe = sum(f == "moe" for _, f in layout)
+
+    def init_period(key):
+        ks = jax.random.split(key, 4)
+        pp = {
+            "norm1": {"scale": Param(jnp.ones((p_len, cfg.d_model)),
+                                     ("layers", None))},
+            "norm2": {"scale": Param(jnp.ones((p_len, cfg.d_model)),
+                                     ("layers", None))},
+            "attn": L.init_attention(ks[0], cfg),
+            "mamba": _prepend_axis(jax.vmap(
+                lambda k: init_mamba(k, cfg))(
+                    jax.random.split(ks[1], n_mamba))),
+            "dense": _prepend_axis(jax.vmap(
+                lambda k: L.init_mlp(k, cfg))(
+                    jax.random.split(ks[2], n_dense))),
+        }
+        if n_moe:
+            pp["moe"] = _prepend_axis(jax.vmap(
+                lambda k: init_moe(k, cfg))(jax.random.split(ks[3], n_moe)))
+        return pp
+
+    ks = jax.random.split(key, 3)
+    periods = jax.vmap(init_period)(jax.random.split(ks[0], n_periods))
+    return {
+        "embed": L.init_embedding(ks[1], cfg),
+        "periods": _prepend_axis(periods),
+        "final_norm": L.init_norm(cfg),
+        "head": L.init_lm_head(ks[2], cfg),
+    }
+
+
+def _apply_period(pp, cfg, x, *, positions, mode, attn_cache=None,
+                  mamba_state=None, cache_index=None, window=0):
+    """One period (unrolled).  mode: train | prefill | decode.
+
+    Returns (x, aux, new_attn_cache, new_mamba_state).
+    """
+    layout = _period_layout(cfg)
+    aux = jnp.float32(0.0)
+    mi = di = mo = 0
+    new_attn_cache = None
+    new_states = []
+    for i, (mixer, ffn) in enumerate(layout):
+        xn = L.apply_norm(_index(pp["norm1"], i), cfg, x)
+        if mixer == "attn":
+            if mode == "decode":
+                h, new_attn_cache = L.attention(
+                    pp["attn"], cfg, xn, positions=positions, window=window,
+                    cache=attn_cache, cache_index=cache_index)
+            else:
+                h, kv = L.attention(pp["attn"], cfg, xn, positions=positions,
+                                    window=window)
+                new_attn_cache = kv
+        else:
+            st = _index(mamba_state, mi) if mamba_state is not None else None
+            h, new_st = mamba_forward(_index(pp["mamba"], mi), cfg, xn,
+                                      state=st)
+            new_states.append(new_st)
+            mi += 1
+        x = x + h
+        xn = L.apply_norm(_index(pp["norm2"], i), cfg, x)
+        if ffn == "moe":
+            h, a = apply_moe(_index(pp["moe"], mo), cfg, xn,
+                             capacity_factor=max(2.0, cfg.moe.capacity_factor) if mode == "decode" else None)
+            aux = aux + a
+            mo += 1
+        else:
+            h = L.apply_mlp(_index(pp["dense"], di), cfg, xn)
+            di += 1
+        x = x + h
+    stacked_states = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *new_states)
+    return x, aux, new_attn_cache, stacked_states
+
+
+def forward_train(params, cfg, tokens, *, dtype=jnp.bfloat16, remat=True,
+                  window=None, compute_logits=True):
+    window = cfg.sliding_window if window is None else window
+    x = L.embed_tokens(params["embed"], cfg, tokens, dtype)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(carry, pp):
+        x, aux = carry
+        x, a, _, _ = _apply_period(pp, cfg, x, positions=positions,
+                                   mode="train", window=window)
+        return (x, aux + a), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.float32(0.0)),
+                               params["periods"], **flags.scan_kwargs())
+    x = L.apply_norm(params["final_norm"], cfg, x)
+    logits = (L.lm_logits(params["head"], params["embed"], cfg, x)
+              if compute_logits else None)
+    return logits, aux, x
+
+
+def init_cache(cfg, batch: int, cache_len: int, *, window=None,
+               dtype=jnp.bfloat16):
+    """Hybrid cache: attention ring buffers + mamba states, per period."""
+    window = cfg.sliding_window if window is None else window
+    layout = _period_layout(cfg)
+    n_periods = cfg.num_layers // len(layout)
+    n_mamba = sum(m == "mamba" for m, _ in layout)
+    size = min(window, cache_len) if window else cache_len
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    d_inner, _, d_state, d_conv = mamba_dims(cfg)
+    return {
+        "k": jnp.zeros((n_periods, batch, size, kv, hd), dtype),
+        "v": jnp.zeros((n_periods, batch, size, kv, hd), dtype),
+        "pos": jnp.full((n_periods, size), -1, jnp.int32),
+        "ssm": jnp.zeros((n_periods, n_mamba, batch, d_inner, d_state),
+                         jnp.float32),
+        "conv": jnp.zeros((n_periods, n_mamba, batch, d_conv - 1, d_inner),
+                          dtype),
+    }
+
+
+def prefill(params, cfg, tokens, *, dtype=jnp.bfloat16, window=None,
+            cache_len: int | None = None):
+    window = cfg.sliding_window if window is None else window
+    x = L.embed_tokens(params["embed"], cfg, tokens, dtype)
+    b, s, _ = x.shape
+    cache_len = cache_len or s
+    size = min(window, cache_len) if window else cache_len
+    positions = jnp.arange(s, dtype=jnp.int32)
+    layout = _period_layout(cfg)
+    n_mamba = sum(m == "mamba" for m, _ in layout)
+    d_inner, _, d_state, d_conv = mamba_dims(cfg)
+
+    def body(x, pp):
+        zero_states = (
+            jnp.zeros((n_mamba, b, d_inner, d_state), jnp.float32),
+            jnp.zeros((n_mamba, b, d_conv - 1, d_inner), x.dtype))
+        x, _, kv, states = _apply_period(pp, cfg, x, positions=positions,
+                                         mode="prefill", window=window,
+                                         mamba_state=zero_states)
+        k, v = kv
+        if size < s:
+            keep = positions[s - size:]
+            slots = keep % size
+            ck = jnp.zeros((b, size) + k.shape[2:], dtype).at[:, slots].set(
+                k[:, s - size:].astype(dtype))
+            cv = jnp.zeros((b, size) + v.shape[2:], dtype).at[:, slots].set(
+                v[:, s - size:].astype(dtype))
+            cpos = jnp.full((size,), -1, jnp.int32).at[slots].set(keep)
+        else:
+            pad = size - s
+            ck = jnp.pad(k.astype(dtype), ((0, 0), (0, pad), (0, 0), (0, 0)))
+            cv = jnp.pad(v.astype(dtype), ((0, 0), (0, pad), (0, 0), (0, 0)))
+            cpos = jnp.concatenate([positions,
+                                    jnp.full((pad,), -1, jnp.int32)])
+        return x, {"k": ck, "v": cv, "pos": cpos, "ssm": states[0],
+                   "conv": states[1].astype(dtype)}
+
+    x, cache = jax.lax.scan(body, x, params["periods"],
+                            **flags.scan_kwargs())
+    x = L.apply_norm(params["final_norm"], cfg, x)
+    logits = L.lm_logits(params["head"], params["embed"], cfg, x[:, -1:])
+    return logits, cache
+
+
+def decode_step(params, cfg, cache, token, index, *, dtype=jnp.bfloat16,
+                window=None):
+    window = cfg.sliding_window if window is None else window
+    x = L.embed_tokens(params["embed"], cfg, token, dtype)
+    positions = jnp.full((1,), index, jnp.int32)
+
+    def body(x, xs):
+        pp, ck, cv, cpos, ssm, conv = xs
+        x, _, new_kv, new_states = _apply_period(
+            pp, cfg, x, positions=positions, mode="decode", window=window,
+            attn_cache=(ck, cv, cpos), cache_index=index,
+            mamba_state=(ssm, conv))
+        return x, {"k": new_kv[0], "v": new_kv[1], "pos": new_kv[2],
+                   "ssm": new_states[0],
+                   "conv": new_states[1].astype(conv.dtype)}
+
+    x, new_cache = jax.lax.scan(
+        body, x, (params["periods"], cache["k"], cache["v"], cache["pos"],
+                  cache["ssm"], cache["conv"]), **flags.scan_kwargs())
+    x = L.apply_norm(params["final_norm"], cfg, x)
+    logits = L.lm_logits(params["head"], params["embed"], cfg, x)
+    return logits, new_cache

@@ -1,0 +1,149 @@
+"""Selective SSM (Mamba-1) block for the Jamba hybrid architecture.
+
+Full-sequence mode runs a chunked selective scan: an outer ``lax.scan`` over
+sequence chunks (rematerialised for the backward pass) with a sequential
+inner scan — the carried state is only (B, d_inner, d_state), so activation
+memory is O(n_chunks) not O(seq).  Decode mode is a single recurrence step.
+The TPU hot-loop version lives in ``repro/kernels/mamba``.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.spec import Param, param, shard_act
+
+SCAN_CHUNK = 256
+
+
+def _dims(cfg):
+    d_inner = cfg.mamba.expand * cfg.d_model
+    dt_rank = cfg.mamba.dt_rank or max(cfg.d_model // 16, 1)
+    return d_inner, dt_rank, cfg.mamba.d_state, cfg.mamba.d_conv
+
+
+def init_mamba(key, cfg):
+    d_inner, dt_rank, d_state, d_conv = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialisation for A
+    a = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32)[None, :],
+                 (d_inner, 1))
+    return {
+        "in_x": param(ks[0], (cfg.d_model, d_inner), ("embed", "mamba")),
+        "in_z": param(ks[1], (cfg.d_model, d_inner), ("embed", "mamba")),
+        "conv_w": param(ks[2], (d_conv, d_inner), (None, "mamba"),
+                        scale=1.0 / math.sqrt(d_conv)),
+        "conv_b": Param(jnp.zeros((d_inner,)), ("mamba",)),
+        "x_proj": param(ks[3], (d_inner, dt_rank + 2 * d_state),
+                        ("mamba", None)),
+        "dt_w": param(ks[4], (dt_rank, d_inner), (None, "mamba"),
+                      scale=dt_rank ** -0.5),
+        "dt_b": Param(jnp.full((d_inner,), -4.6), ("mamba",)),  # softplus≈0.01
+        "A_log": Param(jnp.log(a), ("mamba", None)),
+        "D": Param(jnp.ones((d_inner,)), ("mamba",)),
+        "out": param(ks[5], (d_inner, cfg.d_model), ("mamba", "embed"),
+                     scale=1.0 / math.sqrt(d_inner)),
+    }
+
+
+def _ssm_inputs(p, cfg, xh):
+    """xh: (B, T, d_inner) post-conv -> (dt, B_t, C_t)."""
+    _, dt_rank, d_state, _ = _dims(cfg)
+    proj = jnp.einsum("btd,dk->btk", xh, p["x_proj"].astype(xh.dtype))
+    dt_low, b_t, c_t = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("btr,rd->btd", dt_low, p["dt_w"].astype(xh.dtype))
+        .astype(jnp.float32) + p["dt_b"])
+    return dt, b_t.astype(jnp.float32), c_t.astype(jnp.float32)
+
+
+def _scan_chunk(a_log, dt, b_t, c_t, xh, h0):
+    """Sequential selective scan over one chunk.
+
+    dt: (B,T,di) f32; b_t/c_t: (B,T,ds); xh: (B,T,di); h0: (B,di,ds) f32.
+    Returns (y (B,T,di) f32, hT).
+    """
+    a = -jnp.exp(a_log)                                   # (di, ds)
+
+    def step(h, inp):
+        dt_t, b_tt, c_tt, x_tt = inp                      # (B,di),(B,ds),(B,ds),(B,di)
+        da = jnp.exp(dt_t[:, :, None] * a[None])          # (B,di,ds)
+        dbx = (dt_t * x_tt)[:, :, None] * b_tt[:, None, :]
+        h = da * h + dbx
+        y = jnp.einsum("bds,bs->bd", h, c_tt)
+        return h, y
+
+    xs = (dt.transpose(1, 0, 2), b_t.transpose(1, 0, 2),
+          c_t.transpose(1, 0, 2), xh.astype(jnp.float32).transpose(1, 0, 2))
+    hT, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2), hT
+
+
+def mamba_forward(p, cfg, x, *, state=None):
+    """Full-sequence forward.  x: (B, S, D).
+
+    Returns (y, final_state) where state = (ssm_h, conv_tail):
+      ssm_h (B, d_inner, d_state) f32, conv_tail (B, d_conv-1, d_inner).
+    """
+    d_inner, _, d_state, d_conv = _dims(cfg)
+    b, s, _ = x.shape
+    xz = jnp.einsum("bsd,di->bsi", x, p["in_x"].astype(x.dtype))
+    z = jnp.einsum("bsd,di->bsi", x, p["in_z"].astype(x.dtype))
+    xz = shard_act(xz, "batch", "seq", "mamba")
+    z = shard_act(z, "batch", "seq", "mamba")
+
+    # depthwise causal conv over seq
+    if state is not None:
+        tail = state[1].astype(xz.dtype)
+    else:
+        tail = jnp.zeros((b, d_conv - 1, d_inner), xz.dtype)
+    xp = jnp.concatenate([tail, xz], axis=1)
+    conv_w = p["conv_w"].astype(xz.dtype)
+    xh = sum(xp[:, i:i + s, :] * conv_w[i][None, None, :]
+             for i in range(d_conv))
+    xh = jax.nn.silu(xh + p["conv_b"].astype(xz.dtype))
+
+    dt, b_t, c_t = _ssm_inputs(p, cfg, xh)
+    h0 = (state[0] if state is not None
+          else jnp.zeros((b, d_inner, d_state), jnp.float32))
+
+    from repro.models import flags
+    chunk = min(SCAN_CHUNK, s)
+    if s % chunk == 0 and s > chunk and not flags.scan_unroll:
+        n = s // chunk
+
+        def body(h, inp):
+            dt_c, b_c, c_c, xh_c = inp
+            y, h = jax.checkpoint(
+                partial(_scan_chunk, p["A_log"]))(dt_c, b_c, c_c, xh_c, h)
+            return h, y
+
+        resh = lambda t: t.reshape(b, n, chunk, t.shape[-1]).transpose(1, 0, 2, 3)
+        hT, ys = jax.lax.scan(body, h0, (resh(dt), resh(b_t), resh(c_t),
+                                         resh(xh)))
+        y = ys.transpose(1, 0, 2, 3).reshape(b, s, d_inner)
+    else:
+        y, hT = _scan_chunk(p["A_log"], dt, b_t, c_t, xh, h0)
+
+    y = (y + xh.astype(jnp.float32) * p["D"][None, None, :]).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = shard_act(y, "batch", "seq", "mamba")
+    out = jnp.einsum("bsi,id->bsd", y, p["out"].astype(x.dtype))
+    new_state = (hT, xp[:, -(d_conv - 1):, :] if d_conv > 1
+                 else jnp.zeros((b, 0, d_inner), xz.dtype))
+    return shard_act(out, "batch", "seq", None), new_state
+
+
+def mamba_decode_step(p, cfg, x, state):
+    """Single-token decode.  x: (B, 1, D); state as in mamba_forward."""
+    y, new_state = mamba_forward(p, cfg, x, state=state)
+    return y, new_state
+
+
+def mamba_init_state(cfg, batch: int, dtype=jnp.bfloat16):
+    d_inner, _, d_state, d_conv = _dims(cfg)
+    return (jnp.zeros((batch, d_inner, d_state), jnp.float32),
+            jnp.zeros((batch, d_conv - 1, d_inner), dtype))

@@ -1,0 +1,241 @@
+"""Model factory: one uniform API over all assigned architecture families.
+
+``build_model(cfg)`` returns a ``ModelApi`` with:
+  init(rng)                    -> Param pytree (annotated)
+  train_loss(params, batch)    -> (loss, metrics)   [full values pytree]
+  prefill(params, batch)       -> (logits, cache)
+  decode_step(params, cache, token, index) -> (logits, cache)
+  init_cache(batch, cache_len) -> cache pytree
+  batch_spec(shape)            -> ShapeDtypeStruct inputs for the dry-run
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import encdec, hybrid, rwkv, transformer
+from repro.sharding.spec import Param, shard_act
+
+_is_param = lambda x: isinstance(x, Param)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(logits, labels, mask):
+    """Token-mean masked cross-entropy; labels: (B,S) int32, mask (B,S)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Factory
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ModelApi:
+    cfg: ArchConfig
+    init: Callable[..., Any]
+    train_loss: Callable[..., Any]
+    forward_features: Callable[..., Any]   # pre-head hidden states (split point)
+    head_logits: Callable[..., Any]        # features -> logits ("FC on server")
+    prefill: Callable[..., Any]
+    decode_step: Callable[..., Any]
+    init_cache: Callable[..., Any]
+    batch_spec: Callable[..., Any]
+
+
+def _text_len(cfg, seq_len: int) -> int:
+    if cfg.family == "vlm":
+        return seq_len - cfg.num_patches
+    return seq_len
+
+
+def build_model(cfg: ArchConfig, *, compute_dtype=jnp.bfloat16,
+                remat: bool = True, loss_chunks: int = 0) -> ModelApi:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        mod = transformer
+    elif fam == "hybrid":
+        mod = hybrid
+    elif fam == "ssm":
+        mod = rwkv
+    elif fam == "encdec":
+        mod = encdec
+    else:
+        raise ValueError(f"no LM assembly for family {fam!r}")
+
+    def init(rng):
+        return mod.init_model(rng, cfg)
+
+    def _fwd_kwargs(batch):
+        kw = {}
+        if fam == "vlm":
+            kw["patches"] = batch["patches"]
+        if fam == "encdec":
+            kw["frames"] = batch["frames"]
+        return kw
+
+    def forward_features(params, batch, *, window=None,
+                         compute_logits=True):
+        """Backbone forward up to the pre-head hidden states."""
+        logits, aux, feats = mod.forward_train(
+            params, cfg, batch["tokens"], dtype=compute_dtype, remat=remat,
+            window=window, compute_logits=compute_logits,
+            **_fwd_kwargs(batch))
+        return logits, aux, feats
+
+    def head_logits(params, feats):
+        from repro.models import layers as L
+        return L.lm_logits(params["head"], params["embed"], cfg, feats)
+
+    def train_loss(params, batch, *, window=None):
+        if loss_chunks > 1:
+            # fused vocab-chunked head+loss: full logits never materialise
+            _, aux, feats = forward_features(params, batch, window=window,
+                                             compute_logits=False)
+            if fam == "vlm":
+                feats = feats[:, cfg.num_patches:]
+            if cfg.tie_embeddings:
+                head_w = params["embed"]["table"].T
+            else:
+                head_w = params["head"]["w"]
+            loss = lm_loss_chunked(feats, head_w, batch["labels"],
+                                   batch["mask"], n_chunks=loss_chunks)
+            return loss + aux, {"loss": loss, "aux": aux}
+        logits, aux, _ = forward_features(params, batch, window=window)
+        if fam == "vlm":  # loss only on text positions (patches are prefix)
+            logits = logits[:, cfg.num_patches:]
+        loss = lm_loss(logits, batch["labels"], batch["mask"])
+        return loss + aux, {"loss": loss, "aux": aux}
+
+    def prefill(params, batch, *, window=None, cache_len=None):
+        return mod.prefill(params, cfg, batch["tokens"],
+                           dtype=compute_dtype, window=window,
+                           cache_len=cache_len, **_fwd_kwargs(batch))
+
+    def decode_step(params, cache, token, index, *, window=None):
+        return mod.decode_step(params, cfg, cache, token, index,
+                               dtype=compute_dtype, window=window)
+
+    def init_cache(batch, cache_len, *, window=None):
+        return mod.init_cache(cfg, batch, cache_len, window=window,
+                              dtype=compute_dtype)
+
+    def batch_spec(shape: InputShape, *, global_batch=None):
+        b = global_batch or shape.global_batch
+        s_text = _text_len(cfg, shape.seq_len)
+        i32 = jnp.int32
+        sds = jax.ShapeDtypeStruct
+        if shape.kind == "train":
+            spec = {
+                "tokens": sds((b, s_text), i32),
+                "labels": sds((b, s_text), i32),
+                "mask": sds((b, s_text), jnp.float32),
+            }
+        else:
+            spec = {"tokens": sds((b, s_text), i32)}
+        if fam == "vlm":
+            spec["patches"] = sds((b, cfg.num_patches), jnp.float32)
+            spec["patches"] = sds((b, cfg.num_patches, cfg.d_model),
+                                  jnp.float32)
+        if fam == "encdec":
+            spec["frames"] = sds((b, cfg.encoder_seq_len, cfg.d_model),
+                                 jnp.float32)
+        return spec
+
+    return ModelApi(cfg=cfg, init=init, train_loss=train_loss,
+                    forward_features=forward_features,
+                    head_logits=head_logits, prefill=prefill,
+                    decode_step=decode_step, init_cache=init_cache,
+                    batch_spec=batch_spec)
+
+
+# ---------------------------------------------------------------------------
+# Analytic parameter counts (for MODEL_FLOPS = 6·N·D roofline term)
+# ---------------------------------------------------------------------------
+
+
+def count_params_analytic(cfg: ArchConfig, active_only: bool = False) -> int:
+    """Count params via eval_shape of the real init (exact, no duplication).
+
+    ``active_only``: MoE expert weights counted at k/E of their size.
+    """
+    api = build_model(cfg)
+    tree = jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0)))
+    flat = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=_is_param)[0]
+    total = 0
+    expert = 0
+    for path, leaf in flat:
+        v = leaf.value if isinstance(leaf, Param) else leaf
+        n = 1
+        for d in v.shape:
+            n *= d
+        total += n
+        keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        if any(k == "moe" for k in keys) and any(
+                str(k).startswith("w_") for k in keys):
+            expert += n
+    if active_only and cfg.is_moe and expert:
+        frac = cfg.moe.num_experts_per_tok / cfg.moe.num_experts
+        return int(total - expert * (1.0 - frac))
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Vocab-chunked fused head+loss (beyond-paper: never materialise full logits)
+# ---------------------------------------------------------------------------
+
+
+def lm_loss_chunked(feats, head_w, labels, mask, *, n_chunks: int = 8):
+    """Cross-entropy without materialising the (B, S, V) logits tensor.
+
+    Scans over vocab chunks of the head matmul with an online logsumexp
+    (flash-attention-style running max/sum) and picks the label logit from
+    whichever chunk owns it.  With the remat'd body, peak logits memory is
+    V/n_chunks of the naive path.  feats: (B,S,D); head_w: (D,V).
+    """
+    b, s, d = feats.shape
+    v = head_w.shape[1]
+    assert v % n_chunks == 0, (v, n_chunks)
+    vc = v // n_chunks
+    w_chunks = head_w.reshape(d, n_chunks, vc).transpose(1, 0, 2)  # (K,D,Vc)
+    offsets = jnp.arange(n_chunks, dtype=jnp.int32) * vc
+
+    def body(carry, xs):
+        m, ssum, gold = carry
+        w_c, off = xs
+        logits = jnp.einsum("bsd,dv->bsv", feats,
+                            w_c.astype(feats.dtype)).astype(jnp.float32)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        ssum = ssum * jnp.exp(m - m_new) + jnp.exp(
+            logits - m_new[..., None]).sum(axis=-1)
+        local = labels - off
+        in_chunk = (local >= 0) & (local < vc)
+        picked = jnp.take_along_axis(
+            logits, jnp.clip(local, 0, vc - 1)[..., None], axis=-1)[..., 0]
+        gold = jnp.where(in_chunk, picked, gold)
+        return (m_new, ssum, gold), None
+
+    init = (jnp.full((b, s), -1e30, jnp.float32),
+            jnp.zeros((b, s), jnp.float32),
+            jnp.zeros((b, s), jnp.float32))
+    from repro.models import flags
+    (m, ssum, gold), _ = jax.lax.scan(
+        jax.checkpoint(body), init, (w_chunks, offsets),
+        **flags.scan_kwargs())
+    lse = jnp.log(jnp.maximum(ssum, 1e-30)) + m
+    nll = (lse - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)

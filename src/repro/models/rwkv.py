@@ -1,0 +1,318 @@
+"""RWKV-6 "Finch" block: time-mix with data-dependent decay + channel-mix.
+
+The hallmark of RWKV-6 over v5 is the *data-dependent* per-channel decay
+``w_t = exp(-exp(w0 + lora_w(x_t)))``.  State per head is an (hd, hd)
+key-value outer-product matrix:
+
+    y_t = r_t · (S_{t-1} + diag(u) k_t v_tᵀ)
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+
+Full-sequence mode is a chunked scan (remat'd chunk bodies, carried state
+only); decode is a single recurrence.  TPU hot-loop in ``repro/kernels/rwkv6``.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.spec import Param, param, shard_act
+from repro.models import flags
+
+SCAN_CHUNK = 256
+DECAY_LORA = 64
+
+
+def _dims(cfg):
+    hd = cfg.rwkv.head_size
+    heads = cfg.d_model // hd
+    return heads, hd
+
+
+def init_time_mix(key, cfg):
+    h, hd = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    # per-channel decay base: spread across channels (RWKV init)
+    w0 = -5.0 + 8.0 * (jnp.arange(d) / max(d - 1, 1)) ** 3.0
+    return {
+        "mu_r": Param(jnp.full((d,), 0.5), (None,)),
+        "mu_k": Param(jnp.full((d,), 0.5), (None,)),
+        "mu_v": Param(jnp.full((d,), 0.5), (None,)),
+        "mu_g": Param(jnp.full((d,), 0.5), (None,)),
+        "mu_w": Param(jnp.full((d,), 0.5), (None,)),
+        "w_r": param(ks[0], (d, d), ("embed", "rwkv_head")),
+        "w_k": param(ks[1], (d, d), ("embed", "rwkv_head")),
+        "w_v": param(ks[2], (d, d), ("embed", "rwkv_head")),
+        "w_g": param(ks[3], (d, d), ("embed", "rwkv_head")),
+        "w_o": param(ks[4], (d, d), ("rwkv_head", "embed"),
+                     scale=1.0 / math.sqrt(d)),
+        # data-dependent decay LoRA (the Finch mechanism)
+        "w0": Param(w0, (None,)),
+        "w_lora_a": param(ks[5], (d, DECAY_LORA), ("embed", None), scale=0.01),
+        "w_lora_b": param(ks[6], (DECAY_LORA, d), (None, "rwkv_head"),
+                          scale=0.01),
+        "u": param(ks[7], (h, hd), ("rwkv_head", None), scale=0.1),
+        "ln_scale": Param(jnp.ones((d,)), (None,)),
+        "ln_bias": Param(jnp.zeros((d,)), (None,)),
+    }
+
+
+def init_channel_mix(key, cfg):
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": Param(jnp.full((d,), 0.5), (None,)),
+        "mu_r": Param(jnp.full((d,), 0.5), (None,)),
+        "w_k": param(ks[0], (d, cfg.d_ff), ("embed", "mlp")),
+        "w_v": param(ks[1], (cfg.d_ff, d), ("mlp", "embed"),
+                     scale=1.0 / math.sqrt(cfg.d_ff)),
+        "w_r": param(ks[2], (d, d), ("embed", None)),
+    }
+
+
+def _shift(x, prev):
+    """Token shift: x_{t-1} with ``prev`` (B, D) as the t=0 predecessor."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu.astype(x.dtype)
+
+
+def _group_norm(y, scale, bias, heads: int, eps: float = 1e-5):
+    """Per-head group norm on (B, T, D)."""
+    b, t, d = y.shape
+    yf = y.reshape(b, t, heads, d // heads).astype(jnp.float32)
+    mu = yf.mean(-1, keepdims=True)
+    var = ((yf - mu) ** 2).mean(-1, keepdims=True)
+    yf = (yf - mu) * jax.lax.rsqrt(var + eps)
+    return (yf.reshape(b, t, d) * scale + bias).astype(y.dtype)
+
+
+def _wkv_chunk(u, r, k, v, w, s0):
+    """Sequential WKV over one chunk.
+
+    r/k/v: (B,T,H,hd); w: (B,T,H,hd) decay in (0,1); s0: (B,H,hd,hd) f32.
+    Returns (y (B,T,H,hd) f32, sT).
+    """
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = (z.astype(jnp.float32) for z in inp)  # (B,H,hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]                  # (B,H,hd,hd)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None, :, :, None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(z.transpose(1, 0, 2, 3) for z in (r, k, v, w))
+    sT, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3), sT
+
+
+def time_mix_forward(p, cfg, x, *, state=None):
+    """x: (B, S, D) -> (y, (wkv_state, shift_prev))."""
+    h, hd = _dims(cfg)
+    b, s, d = x.shape
+    prev = state[1].astype(x.dtype) if state is not None else jnp.zeros(
+        (b, d), x.dtype)
+    xs = _shift(x, prev)
+    xr = _mix(x, xs, p["mu_r"])
+    xk = _mix(x, xs, p["mu_k"])
+    xv = _mix(x, xs, p["mu_v"])
+    xg = _mix(x, xs, p["mu_g"])
+    xw = _mix(x, xs, p["mu_w"])
+
+    r = jnp.einsum("bsd,de->bse", xr, p["w_r"].astype(x.dtype))
+    k = jnp.einsum("bsd,de->bse", xk, p["w_k"].astype(x.dtype))
+    v = jnp.einsum("bsd,de->bse", xv, p["w_v"].astype(x.dtype))
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["w_g"].astype(x.dtype)))
+    # data-dependent decay (Finch): w_t = exp(-exp(w0 + lora(x_w)))
+    lora = jnp.einsum("bsd,dr->bsr", jnp.tanh(xw.astype(jnp.float32)),
+                      p["w_lora_a"])
+    dec_log = p["w0"][None, None, :] + jnp.einsum("bsr,re->bse", lora,
+                                                  p["w_lora_b"])
+    w = jnp.exp(-jnp.exp(dec_log))                      # (B,S,D) f32
+
+    r4 = shard_act(r.reshape(b, s, h, hd), "batch", "seq", "rwkv_head", None)
+    k4 = shard_act(k.reshape(b, s, h, hd), "batch", "seq", "rwkv_head", None)
+    v4 = shard_act(v.reshape(b, s, h, hd), "batch", "seq", "rwkv_head", None)
+    w4 = shard_act(w.reshape(b, s, h, hd), "batch", "seq", "rwkv_head", None)
+    s0 = (state[0] if state is not None
+          else jnp.zeros((b, h, hd, hd), jnp.float32))
+
+    chunk = min(SCAN_CHUNK, s)
+    if s % chunk == 0 and s > chunk and not flags.scan_unroll:
+        n = s // chunk
+        resh = lambda t: t.reshape(b, n, chunk, h, hd).transpose(
+            1, 0, 2, 3, 4)
+
+        def body(carry, inp):
+            r_c, k_c, v_c, w_c = inp
+            y, carry = jax.checkpoint(partial(_wkv_chunk, p["u"]))(
+                r_c, k_c, v_c, w_c, carry)
+            return carry, y
+
+        sT, ys = jax.lax.scan(body, s0, (resh(r4), resh(k4), resh(v4),
+                                         resh(w4)))
+        y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd)
+    else:
+        y, sT = _wkv_chunk(p["u"], r4, k4, v4, w4, s0)
+
+    y = y.reshape(b, s, d).astype(x.dtype)
+    y = _group_norm(y, p["ln_scale"], p["ln_bias"], h) * g
+    out = jnp.einsum("bse,ed->bsd", y, p["w_o"].astype(x.dtype))
+    return shard_act(out, "batch", "seq", None), (sT, x[:, -1, :])
+
+
+def channel_mix_forward(p, cfg, x, *, state=None):
+    """x: (B, S, D) -> (y, shift_prev)."""
+    b, s, d = x.shape
+    prev = state.astype(x.dtype) if state is not None else jnp.zeros(
+        (b, d), x.dtype)
+    xs = _shift(x, prev)
+    xk = _mix(x, xs, p["mu_k"])
+    xr = _mix(x, xs, p["mu_r"])
+    k = jnp.einsum("bsd,df->bsf", xk, p["w_k"].astype(x.dtype))
+    k = jnp.square(jax.nn.relu(k))
+    k = shard_act(k, "batch", "seq", "mlp")
+    kv = jnp.einsum("bsf,fd->bsd", k, p["w_v"].astype(x.dtype))
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr,
+                                  p["w_r"].astype(x.dtype)))
+    return shard_act(r * kv, "batch", "seq", None), x[:, -1, :]
+
+
+def rwkv_init_state(cfg, batch: int, dtype=jnp.bfloat16):
+    h, hd = _dims(cfg)
+    return {
+        "wkv": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "shift_tm": jnp.zeros((batch, cfg.d_model), dtype),
+        "shift_cm": jnp.zeros((batch, cfg.d_model), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Full-model assembly (attention-free decoder)
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": {"scale": Param(jnp.ones((cfg.d_model,)), (None,)),
+                "bias": Param(jnp.zeros((cfg.d_model,)), (None,))},
+        "ln2": {"scale": Param(jnp.ones((cfg.d_model,)), (None,)),
+                "bias": Param(jnp.zeros((cfg.d_model,)), (None,))},
+        "tm": init_time_mix(k1, cfg),
+        "cm": init_channel_mix(k2, cfg),
+    }
+
+
+def init_model(key, cfg):
+    from repro.models import layers as L
+    from repro.models.transformer import stack_layer_axes
+
+    ks = jax.random.split(key, 3)
+    blocks = jax.vmap(lambda k: init_block(k, cfg))(
+        jax.random.split(ks[0], cfg.num_layers))
+    return {
+        "embed": L.init_embedding(ks[1], cfg),
+        "embed_norm": L.init_norm(cfg),
+        "blocks": stack_layer_axes(blocks),
+        "final_norm": L.init_norm(cfg),
+        "head": L.init_lm_head(ks[2], cfg),
+    }
+
+
+def _apply_block(bp, cfg, x, *, state=None):
+    from repro.models import layers as L
+
+    tm_state = (state["wkv"], state["shift_tm"]) if state is not None else None
+    h, (wkv, shift_tm) = time_mix_forward(
+        bp["tm"], cfg, L.apply_norm(bp["ln1"], cfg, x), state=tm_state)
+    x = x + h
+    cm_state = state["shift_cm"] if state is not None else None
+    h, shift_cm = channel_mix_forward(
+        bp["cm"], cfg, L.apply_norm(bp["ln2"], cfg, x), state=cm_state)
+    x = x + h
+    return x, {"wkv": wkv, "shift_tm": shift_tm.astype(x.dtype),
+               "shift_cm": shift_cm.astype(x.dtype)}
+
+
+def forward_train(params, cfg, tokens, *, dtype=jnp.bfloat16, remat=True,
+                  window=None, compute_logits=True):
+    from repro.models import layers as L
+
+    x = L.embed_tokens(params["embed"], cfg, tokens, dtype)
+    x = L.apply_norm(params["embed_norm"], cfg, x)
+
+    def body(x, bp):
+        x, _ = _apply_block(bp, cfg, x)
+        return x, None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["blocks"],
+                        **flags.scan_kwargs())
+    x = L.apply_norm(params["final_norm"], cfg, x)
+    logits = (L.lm_logits(params["head"], params["embed"], cfg, x)
+              if compute_logits else None)
+    return logits, jnp.float32(0.0), x
+
+
+def init_cache(cfg, batch: int, cache_len: int = 0, *, window=None,
+               dtype=jnp.bfloat16):
+    """RWKV 'cache' is the recurrent state (O(1) in sequence length)."""
+    h, hd = _dims(cfg)
+    L_ = cfg.num_layers
+    return {
+        "wkv": jnp.zeros((L_, batch, h, hd, hd), jnp.float32),
+        "shift_tm": jnp.zeros((L_, batch, cfg.d_model), dtype),
+        "shift_cm": jnp.zeros((L_, batch, cfg.d_model), dtype),
+    }
+
+
+def prefill(params, cfg, tokens, *, dtype=jnp.bfloat16, window=None,
+            cache_len=None):
+    from repro.models import layers as L
+
+    x = L.embed_tokens(params["embed"], cfg, tokens, dtype)
+    x = L.apply_norm(params["embed_norm"], cfg, x)
+    b = x.shape[0]
+
+    def body(x, bp):
+        zero = {
+            "wkv": jnp.zeros((b,) + ( _dims(cfg)[0], _dims(cfg)[1],
+                                      _dims(cfg)[1]), jnp.float32),
+            "shift_tm": jnp.zeros((b, cfg.d_model), x.dtype),
+            "shift_cm": jnp.zeros((b, cfg.d_model), x.dtype),
+        }
+        x, st = _apply_block(bp, cfg, x, state=zero)
+        return x, st
+
+    x, cache = jax.lax.scan(body, x, params["blocks"],
+                            **flags.scan_kwargs())
+    x = L.apply_norm(params["final_norm"], cfg, x)
+    logits = L.lm_logits(params["head"], params["embed"], cfg, x[:, -1:])
+    return logits, cache
+
+
+def decode_step(params, cfg, cache, token, index, *, dtype=jnp.bfloat16,
+                window=None):
+    from repro.models import layers as L
+
+    x = L.embed_tokens(params["embed"], cfg, token, dtype)
+    x = L.apply_norm(params["embed_norm"], cfg, x)
+
+    def body(x, xs):
+        bp, wkv, stm, scm = xs
+        x, st = _apply_block(bp, cfg, x,
+                             state={"wkv": wkv, "shift_tm": stm,
+                                    "shift_cm": scm})
+        return x, st
+
+    x, new_cache = jax.lax.scan(
+        body, x, (params["blocks"], cache["wkv"], cache["shift_tm"],
+                  cache["shift_cm"]), **flags.scan_kwargs())
+    x = L.apply_norm(params["final_norm"], cfg, x)
+    logits = L.lm_logits(params["head"], params["embed"], cfg, x)
+    return logits, new_cache

@@ -1,0 +1,230 @@
+"""Decoder-only transformer assembly (dense / MoE / VLM) with scanned layers.
+
+Layer parameters are *stacked* (leading 'layers' axis, never sharded) and the
+forward pass is a single ``lax.scan`` over the stack — tiny HLO regardless of
+depth, remat-friendly, and identical math to an unrolled loop.
+
+Modes:
+  * ``forward_train``: full sequence, returns (logits, aux_loss)
+  * ``prefill``: full sequence, returns (logits_last, cache)
+  * ``decode_step``: one token against a KV cache (ring buffer when a
+    sliding window is configured)
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import flags, layers as L
+from repro.models.moe import apply_moe, init_moe
+from repro.sharding.spec import Param, param, shard_act
+
+_is_param = lambda x: isinstance(x, Param)
+
+
+def stack_layer_axes(tree):
+    """Prepend the 'layers' logical axis to every Param in a vmapped stack."""
+    return jax.tree_util.tree_map(
+        lambda p: Param(p.value, ("layers",) + p.axes), tree,
+        is_leaf=_is_param)
+
+
+# ---------------------------------------------------------------------------
+# Block init
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, cfg, *, moe_block: bool):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "attn_norm": L.init_norm(cfg),
+        "attn": L.init_attention(k1, cfg),
+        "ffn_norm": L.init_norm(cfg),
+    }
+    if moe_block:
+        p["moe"] = init_moe(k2, cfg)
+    else:
+        p["mlp"] = L.init_mlp(k2, cfg)
+    return p
+
+
+def init_model(key, cfg):
+    """-> Param pytree for dense / moe / vlm decoder families."""
+    ks = jax.random.split(key, 4)
+    moe_block = cfg.is_moe
+    layer_keys = jax.random.split(ks[0], cfg.num_layers)
+    blocks = jax.vmap(lambda k: init_block(k, cfg, moe_block=moe_block))(
+        layer_keys)
+    p = {
+        "embed": L.init_embedding(ks[1], cfg),
+        "blocks": stack_layer_axes(blocks),
+        "final_norm": L.init_norm(cfg),
+        "head": L.init_lm_head(ks[2], cfg),
+    }
+    if cfg.family == "vlm":
+        # projector stub: patch embeddings arrive pre-extracted (frontend is
+        # stubbed per assignment); a single linear maps them into d_model.
+        p["patch_proj"] = {
+            "w": param(ks[3], (cfg.d_model, cfg.d_model),
+                       ("embed", None), scale=0.02),
+        }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Block apply
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(bp, cfg, x, *, positions, window, cache=None,
+                 cache_index=None):
+    h, new_cache = L.attention(
+        bp["attn"], cfg, L.apply_norm(bp["attn_norm"], cfg, x),
+        positions=positions, window=window, cache=cache,
+        cache_index=cache_index)
+    x = x + h
+    hn = L.apply_norm(bp["ffn_norm"], cfg, x)
+    if "moe" in bp:
+        h, aux = apply_moe(bp["moe"], cfg, hn)
+    else:
+        h, aux = L.apply_mlp(bp["mlp"], cfg, hn), jnp.float32(0.0)
+    return x + h, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, cfg, tokens, patches, dtype):
+    x = L.embed_tokens(params["embed"], cfg, tokens, dtype)
+    if cfg.family == "vlm":
+        pe = jnp.einsum("bpd,de->bpe", patches.astype(dtype),
+                        params["patch_proj"]["w"].astype(dtype))
+        x = jnp.concatenate([pe, x], axis=1)
+    return x
+
+
+def forward_train(params, cfg, tokens, *, patches=None,
+                  dtype=jnp.bfloat16, window=None, remat=True,
+                  compute_logits=True):
+    """tokens: (B, S_text).  VLM: patches (B, P, D) prepended (S = P+S_text).
+
+    Returns (logits, aux_loss, features) — ``features`` are the pre-head
+    hidden states (the paper's split point between "conv" and "FC").
+    """
+    window = cfg.sliding_window if window is None else window
+    x = _embed_inputs(params, cfg, tokens, patches, dtype)
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    def body(carry, bp):
+        x, aux = carry
+        x, a, _ = _apply_block(bp, cfg, x, positions=positions, window=window)
+        return (x, aux + a), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.float32(0.0)),
+                               params["blocks"], **flags.scan_kwargs())
+    x = L.apply_norm(params["final_norm"], cfg, x)
+    logits = (L.lm_logits(params["head"], params["embed"], cfg, x)
+              if compute_logits else None)
+    return logits, aux, x
+
+
+def init_cache(cfg, batch: int, cache_len: int, *, window=None,
+               dtype=jnp.bfloat16):
+    window = cfg.sliding_window if window is None else window
+    size = min(window, cache_len) if window else cache_len
+    kv = cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((cfg.num_layers, batch, size, kv, hd), dtype),
+        "v": jnp.zeros((cfg.num_layers, batch, size, kv, hd), dtype),
+        "pos": jnp.full((cfg.num_layers, size), -1, jnp.int32),
+    }
+
+
+def prefill(params, cfg, tokens, *, patches=None, dtype=jnp.bfloat16,
+            window=None, cache_len: int | None = None):
+    """Full-sequence forward that also builds the KV cache.
+
+    Returns (last_logits (B,1,V), cache).  The cache covers positions
+    [0, S) (ring-compressed to the window if one is set).
+    """
+    window = cfg.sliding_window if window is None else window
+    x = _embed_inputs(params, cfg, tokens, patches, dtype)
+    b, s, _ = x.shape
+    cache_len = cache_len or s
+    size = min(window, cache_len) if window else cache_len
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    def body(carry, bp):
+        x = carry
+        xn = L.apply_norm(bp["attn_norm"], cfg, x)
+        h, kv = L.attention(bp["attn"], cfg, xn, positions=positions,
+                            window=window)
+        x = x + h
+        hn = L.apply_norm(bp["ffn_norm"], cfg, x)
+        if "moe" in bp:
+            h, _ = apply_moe(bp["moe"], cfg, hn)
+        else:
+            h = L.apply_mlp(bp["mlp"], cfg, hn)
+        k, v = kv
+        if size < s:  # keep the trailing window, ring-ordered by position
+            keep_pos = positions[s - size:]
+            slots = keep_pos % size
+            ck = jnp.zeros((b, size) + k.shape[2:], dtype).at[:, slots].set(
+                k[:, s - size:].astype(dtype))
+            cv = jnp.zeros((b, size) + v.shape[2:], dtype).at[:, slots].set(
+                v[:, s - size:].astype(dtype))
+            cpos = jnp.full((size,), -1, jnp.int32).at[slots].set(keep_pos)
+        else:
+            pad = size - s
+            ck = jnp.pad(k.astype(dtype), ((0, 0), (0, pad), (0, 0), (0, 0)))
+            cv = jnp.pad(v.astype(dtype), ((0, 0), (0, pad), (0, 0), (0, 0)))
+            cpos = jnp.concatenate(
+                [positions, jnp.full((pad,), -1, jnp.int32)])
+        return x + h, {"k": ck.astype(dtype), "v": cv.astype(dtype),
+                       "pos": cpos}
+
+    x, cache = jax.lax.scan(body, x, params["blocks"],
+                            **flags.scan_kwargs())
+    x = L.apply_norm(params["final_norm"], cfg, x)
+    logits = L.lm_logits(params["head"], params["embed"], cfg, x[:, -1:])
+    return logits, cache
+
+
+def decode_step(params, cfg, cache, token, index, *, dtype=jnp.bfloat16,
+                window=None):
+    """token: (B, 1) int32; index: scalar absolute position.
+
+    Returns (logits (B,1,V), new_cache).
+    """
+    window = cfg.sliding_window if window is None else window
+    x = L.embed_tokens(params["embed"], cfg, token, dtype)
+    positions = jnp.full((1,), index, jnp.int32)
+
+    def scan_body(x, xs):
+        bp, ck, cv, cpos = xs
+        xn = L.apply_norm(bp["attn_norm"], cfg, x)
+        h, nc = L.attention(bp["attn"], cfg, xn, positions=positions,
+                            window=window, cache=(ck, cv, cpos),
+                            cache_index=index)
+        y = x + h
+        hn = L.apply_norm(bp["ffn_norm"], cfg, y)
+        if "moe" in bp:
+            h2, _ = apply_moe(bp["moe"], cfg, hn, capacity_factor=max(2.0, cfg.moe.capacity_factor))
+        else:
+            h2 = L.apply_mlp(bp["mlp"], cfg, hn)
+        return y + h2, {"k": nc[0], "v": nc[1], "pos": nc[2]}
+
+    x, new_cache = jax.lax.scan(
+        scan_body, x,
+        (params["blocks"], cache["k"], cache["v"], cache["pos"]),
+        **flags.scan_kwargs())
+    x = L.apply_norm(params["final_norm"], cfg, x)
+    logits = L.lm_logits(params["head"], params["embed"], cfg, x)
+    return logits, new_cache

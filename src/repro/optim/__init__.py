@@ -1,0 +1,9 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adagrad,
+    adamw,
+    get_optimizer,
+    sgd,
+)
+
+__all__ = ["Optimizer", "adagrad", "adamw", "get_optimizer", "sgd"]

@@ -1,0 +1,134 @@
+"""Pure-pytree optimizers.
+
+The default is the paper's **modified AdaGrad** (Sukiyaki §3.1):
+
+    θ_{t} = θ_{t-1} − α · g_t / sqrt(β + Σ_{u<=t} g_u²)
+
+— plain AdaGrad with the stabilising constant β *inside* the square root so
+early steps (tiny accumulated squared gradient) don't explode.  The fused
+TPU update kernel lives in ``repro/kernels/adagrad``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]  # (grads, state, params) -> (params, state)
+    name: str = ""
+
+
+def _tmap(f, *trees, **kw):
+    return jax.tree_util.tree_map(f, *trees, **kw)
+
+
+def adagrad(lr: float, beta: float = 1.0, weight_decay: float = 0.0,
+            use_kernel: bool = False) -> Optimizer:
+    """The paper's modified AdaGrad.  ``beta`` is the paper's β."""
+
+    def init(params):
+        return {"acc": _tmap(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params):
+        if use_kernel:
+            from repro.kernels.adagrad.ops import adagrad_update as fused
+
+            new_p, new_acc = [], []
+            flat_p, tdef = jax.tree_util.tree_flatten(params)
+            flat_g = tdef.flatten_up_to(grads)
+            flat_a = tdef.flatten_up_to(state["acc"])
+            for p, g, a in zip(flat_p, flat_g, flat_a):
+                np_, na = fused(p, g, a, lr=lr, beta=beta,
+                                weight_decay=weight_decay)
+                new_p.append(np_)
+                new_acc.append(na)
+            return (jax.tree_util.tree_unflatten(tdef, new_p),
+                    {"acc": jax.tree_util.tree_unflatten(tdef, new_acc)})
+
+        def one(p, g, a):
+            gf = g.astype(jnp.float32)
+            if weight_decay:
+                gf = gf + weight_decay * p.astype(jnp.float32)
+            a = a + jnp.square(gf)
+            step = lr * gf * jax.lax.rsqrt(beta + a)
+            return (p.astype(jnp.float32) - step).astype(p.dtype), a
+
+        out = _tmap(one, params, grads, state["acc"])
+        new_params = _tmap(lambda o: o[0], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+        new_acc = _tmap(lambda o: o[1], out,
+                        is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"acc": new_acc}
+
+    return Optimizer(init, update, "adagrad")
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"m": _tmap(z, params), "v": _tmap(z, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        bc1 = 1.0 - b1 ** t.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** t.astype(jnp.float32)
+
+        def one(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * gf
+            v = b2 * v + (1 - b2) * jnp.square(gf)
+            step = lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                step = step + lr * weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - step).astype(p.dtype), m, v
+
+        out = _tmap(one, params, grads, state["m"], state["v"])
+        pick = lambda i: _tmap(lambda o: o[i], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        return pick(0), {"m": pick(1), "v": pick(2), "t": t}
+
+    return Optimizer(init, update, "adamw")
+
+
+def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum:
+            return {"mom": _tmap(lambda p: jnp.zeros_like(p, jnp.float32),
+                                 params)}
+        return {}
+
+    def update(grads, state, params):
+        if momentum:
+            def one(p, g, m):
+                m = momentum * m + g.astype(jnp.float32)
+                return (p.astype(jnp.float32) - lr * m).astype(p.dtype), m
+            out = _tmap(one, params, grads, state["mom"])
+            pick = lambda i: _tmap(lambda o: o[i], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+            return pick(0), {"mom": pick(1)}
+        new_p = _tmap(
+            lambda p, g: (p.astype(jnp.float32)
+                          - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new_p, state
+
+    return Optimizer(init, update, "sgd")
+
+
+def get_optimizer(name: str, lr: float, *, adagrad_beta: float = 1.0,
+                  weight_decay: float = 0.0, **kw) -> Optimizer:
+    if name == "adagrad":
+        return adagrad(lr, beta=adagrad_beta, weight_decay=weight_decay, **kw)
+    if name == "adamw":
+        return adamw(lr, weight_decay=weight_decay, **kw)
+    if name == "sgd":
+        return sgd(lr, **kw)
+    raise KeyError(f"unknown optimizer {name!r}")

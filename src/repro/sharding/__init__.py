@@ -1,0 +1,30 @@
+from repro.sharding.spec import (
+    Param,
+    ShardCtx,
+    abstract_params,
+    axes_tree,
+    current_ctx,
+    param,
+    shard_act,
+    spec_tree,
+    to_pspec,
+    use_shard_ctx,
+    values_tree,
+)
+from repro.sharding.rules import AXIS_RULES, rules_for_strategy
+
+__all__ = [
+    "AXIS_RULES",
+    "Param",
+    "ShardCtx",
+    "abstract_params",
+    "axes_tree",
+    "current_ctx",
+    "param",
+    "rules_for_strategy",
+    "shard_act",
+    "spec_tree",
+    "to_pspec",
+    "use_shard_ctx",
+    "values_tree",
+]

@@ -1,0 +1,170 @@
+"""Logical-axis parameter/activation sharding machinery.
+
+Parameters are created as ``Param(value, axes)`` where ``axes`` is a tuple of
+*logical* axis names (or ``None``).  A strategy supplies *rules* mapping
+logical names to mesh axes; ``to_pspec`` resolves them to PartitionSpecs.
+Activation constraints (``shard_act``) are no-ops unless a ``ShardCtx`` is
+installed, so all model code runs unchanged on a single CPU device.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass
+from typing import Any, Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Param pytree node
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class Param:
+    """A parameter value annotated with logical sharding axes."""
+
+    value: Any
+    axes: tuple
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, axes, children):
+        return cls(children[0], axes)
+
+
+def _is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def values_tree(tree):
+    """Strip Param wrappers -> plain array pytree."""
+    return jax.tree_util.tree_map(lambda p: p.value, tree, is_leaf=_is_param)
+
+
+def axes_tree(tree):
+    """Extract the logical-axes pytree (same structure as values_tree)."""
+    return jax.tree_util.tree_map(lambda p: p.axes, tree, is_leaf=_is_param)
+
+
+def param(key, shape, axes, *, dtype=jnp.float32, init: str = "normal",
+          scale: float | None = None) -> Param:
+    """Create an annotated parameter."""
+    assert len(axes) == len(shape), (shape, axes)
+    if init == "zeros":
+        v = jnp.zeros(shape, dtype)
+    elif init == "ones":
+        v = jnp.ones(shape, dtype)
+    elif init == "normal":
+        if scale is None:
+            scale = 1.0 / (shape[0] ** 0.5) if len(shape) >= 2 else 0.02
+        v = (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+    else:
+        raise ValueError(init)
+    return Param(v, tuple(axes))
+
+
+def abstract_params(init_fn: Callable[[], Any]):
+    """eval_shape an init function -> pytree of ShapeDtypeStruct (no alloc)."""
+    return jax.eval_shape(init_fn)
+
+
+# ---------------------------------------------------------------------------
+# Logical axis -> mesh axis resolution
+# ---------------------------------------------------------------------------
+
+
+def to_pspec(axes: Sequence, rules: Mapping[str, Any], *, mesh=None,
+             shape: Sequence[int] | None = None) -> P:
+    """Resolve a tuple of logical axes to a PartitionSpec under ``rules``.
+
+    With ``mesh``+``shape``, any mapping whose mesh-axis product does not
+    divide the tensor dim is dropped (e.g. 12 heads on a 16-way model axis).
+    """
+    out = []
+    used: list = []
+    for i, ax in enumerate(axes):
+        if ax is None:
+            out.append(None)
+            continue
+        mesh_ax = rules.get(ax)
+        if mesh_ax is not None:
+            flat = mesh_ax if isinstance(mesh_ax, tuple) else (mesh_ax,)
+            if any(m in used for m in flat):
+                mesh_ax = None
+            elif mesh is not None and shape is not None:
+                n = 1
+                for m in flat:
+                    n *= mesh.shape[m]
+                if shape[i] % n != 0:
+                    # try a prefix of the axes that does divide
+                    kept = []
+                    n = 1
+                    for m in flat:
+                        if shape[i] % (n * mesh.shape[m]) == 0:
+                            kept.append(m)
+                            n *= mesh.shape[m]
+                    mesh_ax = (tuple(kept) if len(kept) > 1
+                               else (kept[0] if kept else None))
+                    if mesh_ax is not None:
+                        used.extend(kept)
+                else:
+                    used.extend(flat)
+            else:
+                used.extend(flat)
+        out.append(mesh_ax)
+    return P(*out)
+
+
+def spec_tree(axes: Any, rules: Mapping[str, Any], mesh=None):
+    """Map an axes pytree to PartitionSpecs (or NamedShardings if mesh given)."""
+
+    def one(ax):
+        ps = to_pspec(ax, rules)
+        return NamedSharding(mesh, ps) if mesh is not None else ps
+
+    return jax.tree_util.tree_map(
+        one, axes, is_leaf=lambda x: isinstance(x, tuple))
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding context
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ShardCtx:
+    mesh: Any
+    rules: Mapping[str, Any]
+
+
+_tls = threading.local()
+
+
+def current_ctx() -> ShardCtx | None:
+    return getattr(_tls, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_shard_ctx(ctx: ShardCtx | None):
+    prev = getattr(_tls, "ctx", None)
+    _tls.ctx = ctx
+    try:
+        yield
+    finally:
+        _tls.ctx = prev
+
+
+def shard_act(x, *axes):
+    """Constrain an activation's sharding by logical axes; no-op w/o context."""
+    ctx = current_ctx()
+    if ctx is None or ctx.mesh is None:
+        return x
+    ps = to_pspec(axes, ctx.rules, mesh=ctx.mesh, shape=x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, ps))

@@ -1,0 +1,126 @@
+"""Integration tests for the Distributor + simulated browser clients."""
+import time
+
+from repro.core.distributor import (BrowserClient, ClientProfile, Distributor,
+                                    LRUCache, TaskDef)
+from repro.core.project import CalculationFramework, ProjectBase, TaskBase
+
+
+def make_distributor(**kw):
+    kw.setdefault("timeout", 2.0)
+    kw.setdefault("redistribute_min", 0.01)
+    return Distributor(**kw)
+
+
+def test_lru_cache_evicts_least_recently_used():
+    c = LRUCache(capacity=2)
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.get("a") == 1      # a is now most recent
+    c.put("c", 3)               # evicts b
+    assert c.get("b") is None
+    assert c.get("a") == 1
+    assert c.get("c") == 3
+    assert c.evictions == 1
+
+
+def test_distributed_execution_collects_all_results():
+    d = make_distributor()
+    d.register_task(TaskDef("square", lambda x, _: x * x))
+    tids = d.queue.add_many("square", list(range(20)))
+    d.spawn_clients([ClientProfile(name=f"c{i}") for i in range(3)])
+    assert d.queue.wait_all(timeout=10)
+    d.shutdown()
+    res = d.queue.results()
+    assert [res[t] for t in tids] == [i * i for i in range(20)]
+
+
+def test_fault_tolerance_dead_client_ticket_redistributed():
+    """A client that dies after grabbing tickets must not lose work."""
+    d = make_distributor()
+    d.register_task(TaskDef("slow", lambda x, _: x + 1))
+    tids = d.queue.add_many("slow", list(range(10)))
+    # one client dies after 2 tickets; a healthy one finishes the rest
+    d.spawn_clients([ClientProfile(name="dying", die_after=2),
+                     ClientProfile(name="healthy")])
+    assert d.queue.wait_all(timeout=10)
+    d.shutdown()
+    assert len(d.queue.results()) == 10
+
+
+def test_failing_client_reports_error_and_reloads():
+    d = make_distributor()
+    d.register_task(TaskDef("flaky", lambda x, _: x))
+    d.queue.add_many("flaky", list(range(8)))
+    flaky = ClientProfile(name="flaky", fail_prob=0.5)
+    clients = d.spawn_clients([flaky, ClientProfile(name="ok")])
+    assert d.queue.wait_all(timeout=10)
+    d.shutdown()
+    console = d.console()
+    assert console["executed"] == 8
+    # the flaky client reloaded at least once (cleared cache) if it errored
+    flaky_client = [c for c in clients if c.profile.name == "flaky"][0]
+    assert flaky_client.reloads == flaky_client.errors
+
+
+def test_static_files_served_and_cached():
+    d = make_distributor()
+    d.static_store["dataset"] = [1, 2, 3]
+    d.register_task(TaskDef("use_data", lambda x, static:
+                            static["dataset"][x], static_files=("dataset",)))
+    d.queue.add_many("use_data", [0, 1, 2, 0, 1, 2])
+    d.spawn_clients([ClientProfile(name="c0")])
+    assert d.queue.wait_all(timeout=10)
+    d.shutdown()
+    # dataset downloaded once (cached thereafter)
+    assert d.download_count["dataset"] == 1
+
+
+# --- the paper's appendix example -------------------------------------------
+
+
+def _is_prime(n: int) -> bool:
+    if n < 2:
+        return False
+    i = 2
+    while i * i <= n:
+        if n % i == 0:
+            return False
+        i += 1
+    return True
+
+
+class IsPrimeTask(TaskBase):
+    static_code_files = ("is_prime",)
+
+    def run(self, input, static):  # noqa: A002
+        return {"is_prime": static["is_prime"](input["candidate"])}
+
+
+class PrimeListMakerProject(ProjectBase):
+    name = "PrimeListMakerProject"
+    limit = 200
+
+    def run(self):
+        task = self.create_task(IsPrimeTask)
+        task.calculate([{"candidate": i} for i in range(1, self.limit + 1)])
+        out = {}
+
+        def cb(results):
+            out["primes"] = [i + 1 for i, r in enumerate(results)
+                             if r["is_prime"]]
+
+        task.block(cb, timeout=20)
+        return out["primes"]
+
+
+def test_prime_list_maker_project_end_to_end():
+    d = make_distributor(project_name="PrimeListMakerProject")
+    fw = CalculationFramework(d)
+    fw.add_static("is_prime", _is_prime)
+    d.spawn_clients([ClientProfile(name=f"browser{i}") for i in range(2)])
+    primes = fw.run_project(PrimeListMakerProject)
+    d.shutdown()
+    assert primes[:8] == [2, 3, 5, 7, 11, 13, 17, 19]
+    assert all(_is_prime(p) for p in primes)
+    assert len(primes) == 46  # primes <= 200

@@ -1,0 +1,51 @@
+"""Unit tests for the roofline-term extraction machinery."""
+import pytest
+
+from repro.launch.hlo_analysis import (Roofline, parse_collectives,
+                                       shape_bytes)
+
+
+def test_shape_bytes_simple():
+    assert shape_bytes("f32[128,256]") == 128 * 256 * 4
+    assert shape_bytes("bf16[2,3,4]{2,1,0}") == 24 * 2
+    assert shape_bytes("pred[8]") == 8
+    assert shape_bytes("s32[]") == 4  # scalar: empty dims -> one element
+
+
+def test_shape_bytes_tuple():
+    s = "(f32[64,64]{1,0}, u8[128])"
+    assert shape_bytes(s) == 64 * 64 * 4 + 128
+
+
+def test_parse_collectives_counts_and_kinds():
+    hlo = """
+  %ag = f32[512,128]{1,0} all-gather(%p0), replica_groups={...}
+  %ar.1 = bf16[256]{0} all-reduce(%x), to_apply=%add
+  %rs = (f32[64]{0}, f32[64]{0}) reduce-scatter(%a, %b), dimensions={0}
+  %a2a = f32[32,32]{1,0} all-to-all(%y), dimensions={0}
+  %cp = f32[16]{0} collective-permute(%z), source_target_pairs={{0,1}}
+  %ags = f32[512,128]{1,0} all-gather-start(%p1)
+  %normal = f32[10]{0} add(%u, %v)
+"""
+    stats = parse_collectives(hlo)
+    assert stats.count_by_kind["all-gather"] == 2  # incl. -start
+    assert stats.count_by_kind["all-reduce"] == 1
+    assert stats.count_by_kind["reduce-scatter"] == 1
+    assert stats.count_by_kind["all-to-all"] == 1
+    assert stats.count_by_kind["collective-permute"] == 1
+    assert stats.bytes_by_kind["all-gather"] == 2 * 512 * 128 * 4
+    assert stats.bytes_by_kind["reduce-scatter"] == 2 * 64 * 4
+    assert stats.total_bytes > 0
+
+
+def test_roofline_terms_and_dominant():
+    r = Roofline(flops=256 * 197e12, hbm_bytes=256 * 819e9 * 2,
+                 collective_bytes=256 * 50e9 * 0.5, chips=256,
+                 model_flops=256 * 197e12 * 0.8)
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(2.0)
+    assert r.t_collective == pytest.approx(0.5)
+    assert r.dominant == "memory"
+    assert r.useful_flops_ratio == pytest.approx(0.8)
+    d = r.as_dict()
+    assert d["dominant"] == "memory"

@@ -1,0 +1,144 @@
+"""Layer-level tests: RoPE, norms, attention semantics."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke_config
+from repro.models import layers as L
+from repro.sharding.spec import values_tree
+
+
+def _cfg(**kw):
+    cfg = get_smoke_config("qwen3-4b")
+    return dataclasses.replace(cfg, **kw) if kw else cfg
+
+
+def test_rope_preserves_norm_and_relative_positions():
+    cfg = _cfg()
+    hd = cfg.resolved_head_dim
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 2, hd))
+    cos, sin = L.rope_cos_sin(jnp.arange(8), hd, 10000.0)
+    xr = L.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(xr), axis=-1), rtol=1e-5)
+    # relative property: <R(p)q, R(p+d)k> depends only on d
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, hd))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, hd))
+    def dot_at(p, d):
+        cq, sq = L.rope_cos_sin(jnp.asarray([p]), hd, 10000.0)
+        ck, sk = L.rope_cos_sin(jnp.asarray([p + d]), hd, 10000.0)
+        return float(jnp.sum(L.apply_rope(q, cq, sq)
+                             * L.apply_rope(k, ck, sk)))
+    assert dot_at(3, 5) == pytest.approx(dot_at(10, 5), rel=1e-4)
+    assert dot_at(3, 5) != pytest.approx(dot_at(3, 6), rel=1e-3)
+
+
+def test_rmsnorm_and_layernorm_statistics():
+    cfg_r = _cfg(norm="rmsnorm")
+    cfg_l = _cfg(norm="layernorm")
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 4, cfg_r.d_model)) * 5
+    pr = {"scale": jnp.ones((cfg_r.d_model,))}
+    pl_ = {"scale": jnp.ones((cfg_l.d_model,)),
+           "bias": jnp.zeros((cfg_l.d_model,))}
+    yr = L.apply_norm(pr, cfg_r, x)
+    yl = L.apply_norm(pl_, cfg_l, x)
+    np.testing.assert_allclose(
+        np.sqrt((np.asarray(yr) ** 2).mean(-1)), 1.0, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(yl).mean(-1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(yl).std(-1), 1.0, atol=1e-2)
+
+
+def test_attention_is_causal():
+    """Changing a future token must not change past outputs."""
+    cfg = _cfg()
+    p = values_tree(L.init_attention(jax.random.PRNGKey(0), cfg))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 12, cfg.d_model))
+    pos = jnp.arange(12)
+    y1, _ = L.attention(p, cfg, x, positions=pos)
+    x2 = x.at[:, 9].set(13.0)
+    y2, _ = L.attention(p, cfg, x2, positions=pos)
+    np.testing.assert_allclose(np.asarray(y1[:, :9]), np.asarray(y2[:, :9]),
+                               atol=1e-5)
+    assert not np.allclose(np.asarray(y1[:, 9:]), np.asarray(y2[:, 9:]))
+
+
+def test_sliding_window_attention_limits_receptive_field():
+    cfg = _cfg()
+    p = values_tree(L.init_attention(jax.random.PRNGKey(0), cfg))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, cfg.d_model))
+    pos = jnp.arange(16)
+    y1, _ = L.attention(p, cfg, x, positions=pos, window=4)
+    x2 = x.at[:, 0].set(7.0)          # outside the window of position >= 4
+    y2, _ = L.attention(p, cfg, x2, positions=pos, window=4)
+    np.testing.assert_allclose(np.asarray(y1[:, 6:]), np.asarray(y2[:, 6:]),
+                               atol=1e-5)
+
+
+def test_chunked_attention_equals_unchunked():
+    cfg = _cfg()
+    p = values_tree(L.init_attention(jax.random.PRNGKey(0), cfg))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model))
+    pos = jnp.arange(64)
+    old = L.ATTN_QUERY_CHUNK
+    try:
+        L.ATTN_QUERY_CHUNK = 16
+        y_chunked, _ = L.attention(p, cfg, x, positions=pos)
+        L.ATTN_QUERY_CHUNK = 4096
+        y_full, _ = L.attention(p, cfg, x, positions=pos)
+    finally:
+        L.ATTN_QUERY_CHUNK = old
+    np.testing.assert_allclose(np.asarray(y_chunked), np.asarray(y_full),
+                               atol=1e-5)
+
+
+def test_gqa_grouped_decode_matches_full_attention():
+    """Decode with ring cache must agree with full-sequence attention."""
+    cfg = _cfg()
+    p = values_tree(L.init_attention(jax.random.PRNGKey(0), cfg))
+    s = 10
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, s, cfg.d_model))
+    pos = jnp.arange(s)
+    y_full, (k, v) = L.attention(p, cfg, x, positions=pos)
+
+    # replay through the decode path one token at a time
+    kv_ = cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    cache = (jnp.zeros((2, s, kv_, hd)), jnp.zeros((2, s, kv_, hd)),
+             jnp.full((s,), -1, jnp.int32))
+    outs = []
+    for t in range(s):
+        y_t, cache = L.attention(p, cfg, x[:, t:t + 1], positions=None,
+                                 cache=cache, cache_index=jnp.int32(t))
+        outs.append(y_t)
+    y_dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_dec),
+                               atol=1e-4)
+
+
+def test_qkv_bias_and_qk_norm_paths():
+    cfg_b = _cfg(qkv_bias=True, qk_norm=False)
+    cfg_n = _cfg(qkv_bias=False, qk_norm=True)
+    for cfg in (cfg_b, cfg_n):
+        p = values_tree(L.init_attention(jax.random.PRNGKey(0), cfg))
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, cfg.d_model))
+        y, _ = L.attention(p, cfg, x, positions=jnp.arange(8))
+        assert np.isfinite(np.asarray(y)).all()
+    assert "bq" in values_tree(L.init_attention(jax.random.PRNGKey(0), cfg_b))
+    assert "q_norm" in values_tree(
+        L.init_attention(jax.random.PRNGKey(0), cfg_n))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 3), st.integers(2, 24), st.sampled_from([32, 64]))
+def test_mlp_shapes_and_finiteness(b, s, d_ff):
+    cfg = dataclasses.replace(_cfg(), d_ff=d_ff)
+    p = values_tree(L.init_mlp(jax.random.PRNGKey(0), cfg))
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, cfg.d_model))
+    y = L.apply_mlp(p, cfg, x)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()

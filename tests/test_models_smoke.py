@@ -1,0 +1,149 @@
+"""Per-architecture smoke tests (REQUIRED by the assignment): for each of
+the 10 assigned architectures, instantiate the reduced same-family config
+(2 layers, d_model<=512, <=4 experts), run one forward/train step on CPU,
+assert output shapes and the absence of NaNs.  Also checks decode/prefill
+consistency per family."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.core.split_parallel import make_train_step
+from repro.models.model import build_model
+from repro.optim import get_optimizer
+from repro.sharding.spec import values_tree
+
+
+def _batch(cfg, b=2, s=24, rng_seed=0):
+    rng = np.random.default_rng(rng_seed)
+    s_text = s - (cfg.num_patches if cfg.family == "vlm" else 0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s_text)),
+                              jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s_text)),
+                              jnp.int32),
+        "mask": jnp.ones((b, s_text), jnp.float32),
+    }
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.asarray(
+            rng.normal(0, 0.02, (b, cfg.num_patches, cfg.d_model)),
+            jnp.float32)
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.normal(0, 0.02, (b, cfg.encoder_seq_len, cfg.d_model)),
+            jnp.float32)
+    return batch, s_text
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_reduced_config_constraints(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.num_layers <= 2
+    assert cfg.d_model <= 512
+    if cfg.is_moe:
+        assert cfg.moe.num_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    api = build_model(cfg, compute_dtype=jnp.float32)
+    params = values_tree(api.init(jax.random.PRNGKey(0)))
+    batch, s_text = _batch(cfg)
+
+    logits, aux, feats = api.forward_features(params, batch)
+    b = batch["tokens"].shape[0]
+    s_total = s_text + (cfg.num_patches if cfg.family == "vlm" else 0)
+    assert logits.shape == (b, s_total, cfg.padded_vocab)
+    assert feats.shape == (b, s_total, cfg.d_model)
+    assert np.isfinite(np.asarray(logits)).all(), "NaN/Inf in logits"
+
+    opt = get_optimizer("adagrad", 0.05)
+    init_state, step = make_train_step(api, opt, strategy="dp_full")
+    state = init_state(jax.random.PRNGKey(0))
+    state, metrics = jax.jit(step)(state, batch)
+    assert np.isfinite(float(metrics["total"])), "NaN loss"
+    # params actually changed
+    before = values_tree(api.init(jax.random.PRNGKey(0)))
+    diffs = jax.tree_util.tree_map(
+        lambda a, b_: float(jnp.abs(a - b_).max()), before, state.params)
+    assert max(jax.tree_util.tree_leaves(diffs)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_prefill_decode_consistency(arch):
+    """decode_step at position s must reproduce the full-forward logits at
+    position s (KV cache / recurrent state correctness).  MoE archs use an
+    ample capacity factor so token-choice drops (which legitimately differ
+    between a 15- and 16-token dispatch) don't mask cache bugs."""
+    cfg = get_smoke_config(arch)
+    if cfg.is_moe:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    api = build_model(cfg, compute_dtype=jnp.float32)
+    params = values_tree(api.init(jax.random.PRNGKey(0)))
+    b, s = 2, 16 + (cfg.num_patches if cfg.family == "vlm" else 0)
+    batch, s_text = _batch(cfg, b=b, s=s)
+    total = s_text + (cfg.num_patches if cfg.family == "vlm" else 0)
+
+    # full forward over all tokens
+    logits_full, _, _ = api.forward_features(params, batch)
+
+    # prefill on the prefix, then decode the last token
+    prefix = dict(batch)
+    prefix["tokens"] = batch["tokens"][:, :-1]
+    logits_pre, cache = api.prefill(params, prefix, cache_len=total)
+    last_tok = batch["tokens"][:, -1:]
+    logits_dec, _ = api.decode_step(params, cache, last_tok,
+                                    jnp.int32(total - 1))
+
+    # prefill's last-position logits == full forward at position -2
+    np.testing.assert_allclose(
+        np.asarray(logits_pre[:, 0]), np.asarray(logits_full[:, -2]),
+        atol=2e-3, rtol=1e-3)
+    # decode at the final position == full forward at the final position
+    np.testing.assert_allclose(
+        np.asarray(logits_dec[:, 0]), np.asarray(logits_full[:, -1]),
+        atol=2e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "rwkv6-1.6b",
+                                  "jamba-1.5-large-398b"])
+def test_smoke_training_reduces_loss(arch):
+    """A few steps on the Markov synthetic stream must reduce loss."""
+    from repro.data import make_lm_batch
+
+    cfg = get_smoke_config(arch)
+    api = build_model(cfg, compute_dtype=jnp.float32)
+    opt = get_optimizer("adagrad", 0.1)
+    init_state, step = make_train_step(api, opt, strategy="dp_full")
+    state = init_state(jax.random.PRNGKey(0))
+    jstep = jax.jit(step)
+    rng = np.random.default_rng(0)
+    losses = []
+    for _ in range(10):
+        batch = {k: jnp.asarray(v)
+                 for k, v in make_lm_batch(rng, 4, 32,
+                                           cfg.vocab_size).items()}
+        state, m = jstep(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0], losses
+
+
+def test_analytic_param_count_matches_init():
+    from repro.models.model import count_params_analytic
+
+    from repro.sharding.spec import values_tree as vt
+
+    for arch in ("qwen1.5-0.5b", "dbrx-132b", "rwkv6-1.6b"):
+        cfg = get_smoke_config(arch)
+        api = build_model(cfg)
+        tree = jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0)))
+        n_manual = sum(int(np.prod(x.shape))
+                       for x in jax.tree_util.tree_leaves(vt(tree)))
+        assert count_params_analytic(cfg) == n_manual
+        if cfg.is_moe:
+            assert count_params_analytic(cfg, active_only=True) < n_manual

@@ -1,0 +1,103 @@
+"""Optimizer tests: the paper's modified AdaGrad vs closed form, and
+hypothesis properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import adagrad, adamw, get_optimizer, sgd
+
+
+def test_adagrad_matches_paper_update_rule():
+    """θ_t = θ_{t-1} - α g / sqrt(β + Σ g²) — checked over 3 steps."""
+    lr, beta = 0.1, 2.0
+    opt = adagrad(lr, beta=beta)
+    p = {"w": jnp.array([1.0, -2.0, 3.0])}
+    s = opt.init(p)
+    gs = [jnp.array([0.5, -1.0, 2.0]), jnp.array([1.0, 1.0, -1.0]),
+          jnp.array([-0.5, 0.25, 0.0])]
+    acc = np.zeros(3)
+    theta = np.array([1.0, -2.0, 3.0])
+    for g in gs:
+        p, s = opt.update({"w": g}, s, p)
+        acc += np.asarray(g) ** 2
+        theta = theta - lr * np.asarray(g) / np.sqrt(beta + acc)
+        np.testing.assert_allclose(np.asarray(p["w"]), theta, rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(s["acc"]["w"]), acc, rtol=1e-6)
+
+
+def test_adagrad_beta_stabilises_first_step():
+    """Without β the first step is ±lr regardless of gradient magnitude;
+    with β it scales with the gradient (the paper's motivation)."""
+    p = {"w": jnp.zeros(1)}
+    tiny = {"w": jnp.array([1e-4])}
+    opt_nobeta = adagrad(0.1, beta=1e-12)
+    opt_beta = adagrad(0.1, beta=1.0)
+    p1, _ = opt_nobeta.update(tiny, opt_nobeta.init(p), p)
+    p2, _ = opt_beta.update(tiny, opt_beta.init(p), p)
+    assert abs(float(p1["w"][0])) == pytest.approx(0.1, rel=1e-3)
+    assert abs(float(p2["w"][0])) == pytest.approx(0.1 * 1e-4, rel=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(-5, 5, allow_nan=False).map(lambda x: x or 0.1),
+                min_size=2, max_size=8),
+       st.floats(0.1, 10.0))
+def test_adagrad_effective_lr_monotonically_decreases(grads, beta):
+    """Property: |Δθ|/|g| never increases over steps for a fixed-sign
+    gradient stream (accumulator only grows)."""
+    opt = adagrad(1.0, beta=beta)
+    p = {"w": jnp.zeros(())}
+    s = opt.init(p)
+    prev_scale = None
+    for g in grads:
+        g = abs(g) + 0.01
+        old = float(p["w"])
+        p, s = opt.update({"w": jnp.asarray(g)}, s, p)
+        scale = abs(float(p["w"]) - old) / g
+        if prev_scale is not None:
+            assert scale <= prev_scale * (1 + 1e-3) + 1e-7  # f32 rsqrt noise
+        prev_scale = scale
+
+
+def test_adagrad_kernel_path_matches_pytree_path():
+    opt_ref = adagrad(0.05, beta=1.5)
+    opt_kern = adagrad(0.05, beta=1.5, use_kernel=True)
+    p = {"a": jnp.asarray(np.random.default_rng(0).normal(size=(64, 33)),
+                          jnp.float32),
+         "b": jnp.asarray(np.random.default_rng(1).normal(size=(17,)),
+                          jnp.float32)}
+    g = jax.tree_util.tree_map(lambda x: x * 0.3 + 0.1, p)
+    s1 = opt_ref.init(p)
+    s2 = opt_kern.init(p)
+    p1, s1 = opt_ref.update(g, s1, p)
+    p2, s2 = opt_kern.update(g, s2, p)
+    for k in p:
+        np.testing.assert_allclose(np.asarray(p1[k]), np.asarray(p2[k]),
+                                   atol=1e-6)
+        np.testing.assert_allclose(np.asarray(s1["acc"][k]),
+                                   np.asarray(s2["acc"][k]), atol=1e-6)
+
+
+@pytest.mark.parametrize("name", ["adagrad", "adamw", "sgd"])
+def test_optimizers_reduce_quadratic(name):
+    opt = get_optimizer(name, 0.5 if name == "adagrad" else 0.1)
+    p = {"w": jnp.array([3.0, -2.0])}
+    s = opt.init(p)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    l0 = float(loss(p))
+    for _ in range(50):
+        g = jax.grad(loss)(p)
+        p, s = opt.update(g, s, p)
+    assert float(loss(p)) < l0 * 0.2
+
+
+def test_sgd_momentum():
+    opt = sgd(0.1, momentum=0.9)
+    p = {"w": jnp.array([1.0])}
+    s = opt.init(p)
+    p1, s = opt.update({"w": jnp.array([1.0])}, s, p)
+    p2, s = opt.update({"w": jnp.array([1.0])}, s, p1)
+    # second step larger due to momentum
+    assert float((p1["w"] - p2["w"])[0]) > float((p["w"] - p1["w"])[0])

@@ -1,0 +1,71 @@
+"""Property tests for logical-axis -> PartitionSpec resolution."""
+import jax
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.rules import AXIS_RULES, rules_for_strategy
+from repro.sharding.spec import Param, axes_tree, to_pspec, values_tree
+
+
+class FakeMesh:
+    def __init__(self, sizes):
+        self.shape = sizes
+        self.axis_names = tuple(sizes)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+LOGICAL = [None, "batch", "embed", "mlp", "heads", "kv_heads", "vocab",
+           "expert", "layers", "seq", "mamba", "rwkv_head"]
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.sampled_from(LOGICAL), min_size=1, max_size=5),
+       st.sampled_from(list(AXIS_RULES)),
+       st.lists(st.sampled_from([1, 2, 8, 16, 48, 64, 128, 256, 151936]),
+                min_size=1, max_size=5))
+def test_to_pspec_never_produces_invalid_sharding(axes, strategy, dims):
+    """For ANY combination of logical axes / rule table / tensor shape:
+    (1) no mesh axis is used twice, (2) every sharded dim is divisible by
+    its mesh-axis product."""
+    axes = tuple(axes)
+    dims = tuple((dims * 5)[: len(axes)])
+    for mesh in (MESH, MESH3):
+        rules = rules_for_strategy(strategy, mesh.axis_names)
+        spec = to_pspec(axes, rules, mesh=mesh, shape=dims)
+        used = []
+        for dim, entry in zip(dims, tuple(spec)):
+            if entry is None:
+                continue
+            flat = entry if isinstance(entry, tuple) else (entry,)
+            n = 1
+            for a in flat:
+                assert a not in used, (spec, axes)
+                used.append(a)
+                n *= mesh.shape[a]
+            assert dim % n == 0, (spec, axes, dims)
+
+
+def test_rules_filter_drops_missing_axes():
+    rules = rules_for_strategy("fsdp_tp", ("data", "model"))
+    assert rules["batch"] == "data"  # 'pod' dropped
+    rules3 = rules_for_strategy("fsdp_tp", ("pod", "data", "model"))
+    assert rules3["batch"] == ("pod", "data")
+
+
+def test_unknown_strategy_raises():
+    with pytest.raises(KeyError):
+        rules_for_strategy("nope", ("data",))
+
+
+def test_values_and_axes_trees_align():
+    import jax.numpy as jnp
+    tree = {"a": Param(jnp.ones((2, 3)), ("embed", "mlp")),
+            "b": {"c": Param(jnp.zeros((4,)), (None,))}}
+    vals = values_tree(tree)
+    axes = axes_tree(tree)
+    assert vals["a"].shape == (2, 3)
+    assert axes["a"] == ("embed", "mlp")
+    assert axes["b"]["c"] == (None,)

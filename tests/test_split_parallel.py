@@ -1,0 +1,139 @@
+"""Tests for the paper's split-parallel training strategies."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.split_parallel import (init_prev_features, make_train_step,
+                                       merge_params, split_params)
+from repro.data import make_lm_batch
+from repro.models.model import build_model
+from repro.optim import get_optimizer, sgd
+from repro.sharding.spec import values_tree
+
+
+def _setup(arch="qwen3-4b", lr=0.05, opt_name="adagrad"):
+    cfg = dataclasses.replace(get_smoke_config(arch), tie_embeddings=False)
+    api = build_model(cfg, compute_dtype=jnp.float32)
+    opt = get_optimizer(opt_name, lr)
+    return cfg, api, opt
+
+
+def _batches(cfg, n, b=4, s=32, seed=0):
+    rng = np.random.default_rng(seed)
+    return [{k: jnp.asarray(v)
+             for k, v in make_lm_batch(rng, b, s, cfg.vocab_size).items()}
+            for _ in range(n)]
+
+
+@pytest.mark.parametrize("strategy", ["dp_full", "split_sequential",
+                                      "split_concurrent"])
+def test_strategies_learn(strategy):
+    cfg, api, opt = _setup()
+    init_state, step = make_train_step(api, opt, strategy=strategy)
+    state = init_state(jax.random.PRNGKey(0))
+    batches = _batches(cfg, 10)
+    if strategy == "split_concurrent":
+        state = init_prev_features(state, api, batches[0],
+                                   dtype=jnp.float32)
+    jstep = jax.jit(step)
+    losses = []
+    for b in batches:
+        state, m = jstep(state, b)
+        losses.append(float(m["total"]))
+    assert losses[-1] < losses[0], (strategy, losses)
+
+
+def test_split_sequential_equals_dp_full_gradients():
+    """He-et-al split is mathematically identical to full DP (same grads,
+    different placement) — one SGD step must produce identical params."""
+    cfg, api, _ = _setup()
+    batch = _batches(cfg, 1)[0]
+    opt = sgd(0.1)
+
+    init_dp, step_dp = make_train_step(api, opt, strategy="dp_full")
+    init_sp, step_sp = make_train_step(api, opt, strategy="split_sequential")
+    s_dp = init_dp(jax.random.PRNGKey(0))
+    s_sp = init_sp(jax.random.PRNGKey(0))
+
+    s_dp, _ = jax.jit(step_dp)(s_dp, batch)
+    s_sp, _ = jax.jit(step_sp)(s_sp, batch)
+
+    merged_sp = merge_params(s_sp.params, s_sp.head)
+    for (k1, a), (k2, b) in zip(
+            sorted(jax.tree_util.tree_leaves_with_path(s_dp.params),
+                   key=lambda kv: str(kv[0])),
+            sorted(jax.tree_util.tree_leaves_with_path(merged_sp),
+                   key=lambda kv: str(kv[0]))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6,
+                                   err_msg=str(k1))
+
+
+def test_split_concurrent_head_trains_on_previous_features():
+    """Step 0 must not update the head (no previous features yet); step 1
+    must."""
+    cfg, api, opt = _setup()
+    init_state, step = make_train_step(api, opt, strategy="split_concurrent")
+    state = init_state(jax.random.PRNGKey(0))
+    batches = _batches(cfg, 2)
+    state = init_prev_features(state, api, batches[0], dtype=jnp.float32)
+    head0 = jax.tree_util.tree_map(np.asarray, state.head)
+
+    jstep = jax.jit(step)
+    state, _ = jstep(state, batches[0])
+    head1 = jax.tree_util.tree_map(np.asarray, state.head)
+    d01 = max(jax.tree_util.tree_leaves(jax.tree_util.tree_map(
+        lambda a, b: float(np.abs(a - b).max()), head0, head1)))
+    assert d01 == 0.0, "head must not move before features exist"
+
+    state, _ = jstep(state, batches[1])
+    head2 = jax.tree_util.tree_map(np.asarray, state.head)
+    d12 = max(jax.tree_util.tree_leaves(jax.tree_util.tree_map(
+        lambda a, b: float(np.abs(a - b).max()), head1, head2)))
+    assert d12 > 0.0, "head must train once features are available"
+
+
+def test_split_concurrent_stale_head_sync_period():
+    """head_stale refreshes only every K steps."""
+    cfg, api, opt = _setup()
+    K = 3
+    init_state, step = make_train_step(api, opt, strategy="split_concurrent",
+                                       head_sync_period=K)
+    state = init_state(jax.random.PRNGKey(0))
+    batches = _batches(cfg, 2 * K)
+    state = init_prev_features(state, api, batches[0], dtype=jnp.float32)
+    jstep = jax.jit(step)
+    stale_syncs = []
+    for i, b in enumerate(batches):
+        prev_stale = jax.tree_util.tree_map(np.asarray, state.head_stale)
+        state, _ = jstep(state, b)
+        cur_stale = jax.tree_util.tree_map(np.asarray, state.head_stale)
+        moved = max(jax.tree_util.tree_leaves(jax.tree_util.tree_map(
+            lambda a, b_: float(np.abs(a - b_).max()), prev_stale,
+            cur_stale))) > 0
+        stale_syncs.append(moved)
+    # syncs happen exactly at steps where (step+1) % K == 0 (and head moved)
+    expected = [((i + 1) % K == 0) and i >= 1 for i in range(2 * K)]
+    assert stale_syncs == expected, (stale_syncs, expected)
+
+
+def test_split_params_roundtrip():
+    cfg, api, _ = _setup()
+    params = values_tree(api.init(jax.random.PRNGKey(0)))
+    backbone, head = split_params(params)
+    assert "head" in head and "head" not in backbone
+    merged = merge_params(backbone, head)
+    assert set(merged.keys()) == set(params.keys())
+
+
+def test_split_requires_untied_head():
+    cfg = get_smoke_config("qwen1.5-0.5b")   # tied embeddings
+    assert cfg.tie_embeddings
+    api = build_model(cfg, compute_dtype=jnp.float32)
+    opt = get_optimizer("adagrad", 0.05)
+    init_state, _ = make_train_step(api, opt, strategy="split_concurrent")
+    with pytest.raises(ValueError, match="untied head"):
+        init_state(jax.random.PRNGKey(0))

@@ -1,0 +1,170 @@
+"""Unit + property tests for the Sashimi ticket queue (paper §2.1.2)."""
+import itertools
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tickets import Ticket, TicketQueue
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def make_queue(timeout=300.0, redist=10.0):
+    clock = FakeClock()
+    q = TicketQueue(timeout=timeout, redistribute_min=redist, clock=clock)
+    return q, clock
+
+
+def test_fresh_tickets_served_in_creation_order():
+    q, clock = make_queue()
+    ids = [q.add("t", i) for i in range(5)]
+    served = [q.request().ticket_id for _ in range(5)]
+    assert served == ids
+
+
+def test_vct_undistributed_is_creation_time():
+    q, clock = make_queue()
+    tid = q.add("t", 0)
+    t = q._tickets[tid]
+    assert t.virtual_created_time(q.timeout) == t.created_at
+
+
+def test_vct_distributed_is_distribution_plus_timeout():
+    q, clock = make_queue()
+    q.add("t", 0)
+    clock.advance(7.0)
+    t = q.request()
+    assert t is not None
+    live = q._tickets[t.ticket_id]
+    assert live.virtual_created_time(q.timeout) == pytest.approx(7.0 + 300.0)
+
+
+def test_no_redistribution_within_min_interval():
+    """Paper: tickets are redistributed at intervals of at least 10 s."""
+    q, clock = make_queue()
+    q.add("t", 0)
+    assert q.request() is not None
+    clock.advance(5.0)           # < 10 s
+    assert q.request() is None
+    clock.advance(6.0)           # >= 10 s since distribution
+    assert q.request() is not None
+
+
+def test_redistribution_order_is_ascending_distribution_time():
+    """Paper: when no fresh tickets remain, redistribute in ascending
+    last-distribution order."""
+    q, clock = make_queue()
+    a = q.add("t", "a")
+    b = q.add("t", "b")
+    assert q.request().ticket_id == a
+    clock.advance(1.0)
+    assert q.request().ticket_id == b
+    clock.advance(20.0)
+    # both eligible again: a was distributed first -> smaller VCT
+    assert q.request().ticket_id == a
+    assert q.request().ticket_id == b
+
+
+def test_fresh_ticket_preferred_over_timed_out():
+    q, clock = make_queue()
+    a = q.add("t", "a")
+    assert q.request().ticket_id == a
+    clock.advance(400.0)          # a timed out (VCT = 300 < now+created?)
+    b = q.add("t", "b")           # fresh ticket, created_at = 400
+    # a's VCT = 0 + 300 = 300 < b's 400 -> a first (it sorts as re-created
+    # at t=300, earlier than b's creation)
+    assert q.request().ticket_id == a
+    assert q.request().ticket_id == b
+
+
+def test_first_result_wins_duplicates_dropped():
+    q, clock = make_queue(redist=0.0)
+    tid = q.add("t", 0)
+    t1 = q.request()
+    t2 = q.request()    # redistribution allowed (redist=0)
+    assert t1.ticket_id == t2.ticket_id == tid
+    assert q.submit(tid, "r1", "c1") is True
+    assert q.submit(tid, "r2", "c2") is False
+    assert q.results()[tid] == "r1"
+    assert q._tickets[tid].completed_by == "c1"
+
+
+def test_error_reports_recorded():
+    q, clock = make_queue()
+    tid = q.add("t", 0)
+    q.request()
+    q.report_error(tid, "Traceback ...", "c1")
+    assert q.snapshot()["errors"] == 1
+    assert not q._tickets[tid].completed
+
+
+def test_snapshot_counts():
+    q, clock = make_queue()
+    for i in range(4):
+        q.add("t", i)
+    q.request()
+    snap = q.snapshot()
+    assert snap["tickets"] == 4
+    assert snap["waiting"] == 3
+    assert snap["in_flight"] == 1
+    assert snap["executed"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Property tests
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 3), min_size=1, max_size=40).filter(
+    lambda p: any(d != 0 for d in p)),   # client must sometimes succeed
+       st.integers(1, 10))
+def test_every_ticket_eventually_completes_despite_lost_tickets(
+        drop_pattern, n_tickets):
+    """Exactly-once completion: even when clients repeatedly lose tickets,
+    redistribution ensures every ticket finishes, and each result is
+    recorded exactly once."""
+    q, clock = make_queue(timeout=30.0, redist=5.0)
+    ids = [q.add("t", i) for i in range(n_tickets)]
+    drops = itertools.cycle(drop_pattern)
+    guard = 0
+    while not q.all_done():
+        guard += 1
+        assert guard < 10000
+        t = q.request()
+        if t is None:
+            clock.advance(6.0)
+            continue
+        if next(drops) == 0:
+            continue  # client died with the ticket
+        q.submit(t.ticket_id, t.args * 2, "c")
+    res = q.results()
+    assert sorted(res.keys()) == sorted(ids)
+    for tid, i in zip(ids, range(n_tickets)):
+        assert res[tid] == i * 2
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 50), st.floats(1.0, 100.0), st.floats(0.1, 20.0))
+def test_request_never_returns_completed_ticket(n, timeout, redist):
+    q, clock = make_queue(timeout=timeout, redist=redist)
+    ids = [q.add("t", i) for i in range(n)]
+    done = set()
+    for _ in range(n * 3):
+        t = q.request()
+        clock.advance(redist / 2)
+        if t is None:
+            continue
+        assert t.ticket_id not in done
+        q.submit(t.ticket_id, "ok", "c")
+        done.add(t.ticket_id)
+    assert q.all_done()
