@@ -1,0 +1,217 @@
+"""Distributor v2 scheduler benchmark: adaptive vs fixed-size tickets.
+
+Discrete-event simulation (virtual clock — runs in milliseconds, fully
+deterministic) of heterogeneous browser clients pulling lease batches from
+the real :class:`repro.core.tickets.TicketQueue`, under three client mixes:
+
+  * ``uniform``  — every client executes 10 work-units/s;
+  * ``bimodal``  — half the clients are 8x faster than the other half
+                   (the paper's desktop-Chrome vs Nexus-7 situation);
+  * ``churn``    — bimodal, plus a third of the clients die mid-task at
+                   staggered times (closed tabs).
+
+Each (mix, policy) cell reports **makespan** (virtual seconds until every
+ticket has a result) and **idle fraction** (time surviving clients spent
+waiting for an eligible ticket, over clients x makespan).  Policies:
+
+  * ``v1-fixed-1`` — one ticket per round-trip (the seed Distributor);
+  * ``fixed-8``    — naive batching, same size for every client;
+  * ``adaptive``   — Distributor v2: lease sized to the client's EWMA
+                     throughput, plus the proactive watchdog that releases
+                     a lease once it overruns its ETA 3x.
+
+Usage:
+  PYTHONPATH=src python benchmarks/scheduler_throughput.py [--json out.json]
+"""
+from __future__ import annotations
+
+import argparse
+import heapq
+import itertools
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core.distributor import AdaptiveSizer, FixedSizer
+from repro.core.tickets import TicketQueue
+
+RTT = 0.05            # per-lease round-trip latency (s) — browser to server
+N_TICKETS = 400
+N_CLIENTS = 8
+BASE_RATE = 10.0      # work units / s for a "slow" client
+
+
+class SimClock:
+    """Injectable virtual clock (see docs/ARCHITECTURE.md §Injectable
+    clock): the event loop sets ``t``; the queue just reads it."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def client_mix(kind: str):
+    """[(name, speed, die_at)] for the requested mix; die_at None = immortal."""
+    if kind == "uniform":
+        return [(f"c{i}", BASE_RATE, None) for i in range(N_CLIENTS)]
+    if kind == "bimodal":
+        return [(f"fast{i}", 8 * BASE_RATE, None)
+                for i in range(N_CLIENTS // 2)] + \
+               [(f"slow{i}", BASE_RATE, None) for i in range(N_CLIENTS // 2)]
+    if kind == "churn":
+        out = []
+        for i in range(N_CLIENTS // 2):
+            out.append((f"fast{i}", 8 * BASE_RATE,
+                        0.2 + 0.2 * i if i % 3 == 0 else None))
+        for i in range(N_CLIENTS // 2):
+            out.append((f"slow{i}", BASE_RATE,
+                        0.4 + 0.3 * i if i % 3 == 1 else None))
+        return out
+    raise KeyError(kind)
+
+
+def simulate(mix: str, sizer, *, watchdog: bool, grace: float = 3.0,
+             redistribute_min: float = 10.0, timeout: float = 300.0) -> dict:
+    """Run one (mix, policy) cell; returns makespan/idle/redistribution
+    metrics.  Event-driven: the heap holds (time, seq, kind, payload) with
+    kinds 'wake' (client asks for a lease) and 'done' (lease completes)."""
+    clock = SimClock()
+    q = TicketQueue(timeout=timeout, redistribute_min=redistribute_min,
+                    clock=clock)
+    q.add_many("work", list(range(N_TICKETS)), work=1.0)
+
+    clients = client_mix(mix)
+    alive = {name: True for name, _, _ in clients}
+    speed = {name: sp for name, sp, _ in clients}
+    die_at = {name: d for name, _, d in clients}
+    idle_since: dict[str, float] = {}
+    idle_total = 0.0
+    seq = itertools.count()
+    events: list = []
+    for name, _, _ in clients:
+        heapq.heappush(events, (0.0, next(seq), "wake", name, None))
+
+    makespan = None
+    watch_pending: dict[int, float] = {}   # lease_id -> eta deadline
+
+    while events:
+        t, _, kind, name, payload = heapq.heappop(events)
+        clock.t = t
+        if q.all_done():
+            makespan = makespan if makespan is not None else t
+            break
+
+        if kind == "wake":
+            if not alive[name]:
+                continue
+            if die_at[name] is not None and t >= die_at[name]:
+                alive[name] = False
+                continue
+            stats = q.stats.get(name)
+            n = sizer.lease_size(stats)
+            batch = q.lease(name, n)
+            if batch is None:
+                if name not in idle_since:
+                    idle_since[name] = t
+                heapq.heappush(events, (t + redistribute_min / 4, next(seq),
+                                        "wake", name, None))
+                continue
+            # ETA from the tickets actually granted, as the scheduler does
+            eta = sizer.expected_duration(stats, len(batch.ticket_ids))
+            batch.expected_duration = eta
+            if watchdog and eta is not None:
+                # v2 watchdog, modelled faithfully: EVERY lease is released
+                # once it overruns grace*eta (release() is a no-op for
+                # leases that completed or whose tickets moved on)
+                heapq.heappush(events,
+                               (batch.issued_at + grace * max(eta, 1e-3),
+                                next(seq), "watchdog", name, batch.lease_id))
+            if name in idle_since:
+                idle_total += t - idle_since.pop(name)
+            duration = RTT + batch.work / speed[name]
+            finish = t + duration
+            if die_at[name] is not None and finish >= die_at[name]:
+                # tab closes mid-lease: results are lost; without a
+                # watchdog the tickets only return via the VCT /
+                # redistribute_min path — exactly the v1 behaviour
+                alive[name] = False
+                continue
+            heapq.heappush(events, (finish, next(seq), "done", name, batch))
+        elif kind == "done":
+            batch = payload
+            q.submit_batch(batch.lease_id,
+                           {tid: tid for tid in batch.ticket_ids}, name)
+            if q.all_done():
+                makespan = t
+                break
+            heapq.heappush(events, (t, next(seq), "wake", name, None))
+        elif kind == "watchdog":
+            q.release(payload, client_failed=True)
+
+    if makespan is None:
+        makespan = clock.t
+    # close out clients still idle at the end
+    for name, since in idle_since.items():
+        if alive[name]:
+            idle_total += makespan - since
+    n_alive_seconds = sum(
+        (min(die_at[name], makespan) if die_at[name] is not None
+         else makespan) for name, _, _ in clients)
+    snap = q.snapshot()
+    return {
+        "makespan_s": round(makespan, 3),
+        "idle_frac": round(idle_total / max(n_alive_seconds, 1e-9), 4),
+        "redistributions": snap["redistributions"],
+        "lease_releases": snap["lease_releases"],
+        "completed": snap["executed"],
+    }
+
+
+POLICIES = {
+    "v1-fixed-1": (FixedSizer(1), False),
+    "fixed-8": (FixedSizer(8), False),
+    "adaptive": (AdaptiveSizer(target_lease_time=0.5, max_size=32), True),
+}
+
+
+def run_sweep() -> dict:
+    out: dict = {}
+    for mix in ("uniform", "bimodal", "churn"):
+        out[mix] = {}
+        for pname, (sizer, watchdog) in POLICIES.items():
+            out[mix][pname] = simulate(mix, sizer, watchdog=watchdog)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, help="write results here")
+    args = ap.parse_args()
+    results = run_sweep()
+    hdr = f"{'mix':<10}{'policy':<12}{'makespan(s)':>12}{'idle':>8}" \
+          f"{'redist':>8}{'released':>10}"
+    print(hdr)
+    print("-" * len(hdr))
+    for mix, cells in results.items():
+        for pname, m in cells.items():
+            print(f"{mix:<10}{pname:<12}{m['makespan_s']:>12.2f}"
+                  f"{m['idle_frac']:>8.3f}{m['redistributions']:>8}"
+                  f"{m['lease_releases']:>10}")
+    bi = results["bimodal"]
+    speedup = bi["v1-fixed-1"]["makespan_s"] / bi["adaptive"]["makespan_s"]
+    print(f"\nbimodal: adaptive is {speedup:.2f}x faster than v1-fixed-1 "
+          f"({bi['adaptive']['makespan_s']:.2f}s vs "
+          f"{bi['v1-fixed-1']['makespan_s']:.2f}s)")
+    assert bi["adaptive"]["makespan_s"] < bi["v1-fixed-1"]["makespan_s"], \
+        "adaptive sizing must beat fixed-size tickets on the bimodal mix"
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

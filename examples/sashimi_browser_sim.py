@@ -1,17 +1,25 @@
 """Sashimi demo: the paper's PrimeListMakerProject (Appendix) plus a
-distributed kNN job, with simulated browsers — including a flaky one that
-crashes and a tab that closes mid-job, to show ticket redistribution.
+distributed kNN job and a §4.1 split-training round, with simulated
+browsers — including a flaky one that crashes and a tab that closes
+mid-job, to show ticket redistribution.
+
+Demo 1 runs on the v1 thread-per-client Distributor exactly as in the
+paper; demos 2 and 3 run on Distributor v2 (asyncio, adaptively sized
+lease batches) with a bimodal fast/slow client mix.
 
   PYTHONPATH=src python examples/sashimi_browser_sim.py
 """
+import asyncio
 import sys
 
 sys.path.insert(0, "src")
 
 import numpy as np
 
-from repro.core.distributor import ClientProfile, Distributor, TaskDef
+from repro.core.distributor import (AdaptiveSizer, AsyncDistributor,
+                                    ClientProfile, Distributor, TaskDef)
 from repro.core.project import CalculationFramework, ProjectBase, TaskBase
+from repro.core.split_parallel import SplitConcurrentDispatcher
 from repro.data import clustered_images
 
 
@@ -46,8 +54,8 @@ class PrimeListMakerProject(ProjectBase):
         return primes
 
 
-def main():
-    # --- prime list, as in the paper -------------------------------------
+def demo_primes_v1():
+    """The paper's appendix example on the v1 thread simulator."""
     d = Distributor(timeout=5.0, redistribute_min=0.05)
     fw = CalculationFramework(d)
     fw.add_static("is_prime", is_prime)
@@ -68,9 +76,12 @@ def main():
     print(f"clients: {[(c['name'], c['executed']) for c in console['clients']]}")
     assert len(primes) == 1229  # π(10000)
 
-    # --- distributed kNN (Table-2 workload) ------------------------------
+
+async def demo_knn_v2():
+    """Distributed kNN (Table-2 workload) on Distributor v2: a bimodal
+    client mix, leases sized to each client's measured throughput."""
     train_x, train_y = clustered_images(2000, image_size=12, channels=1,
-                                        seed=0)
+                                       seed=0)
     test_x, test_y = clustered_images(200, image_size=12, channels=1, seed=1)
     tr = train_x.reshape(len(train_x), -1)
     te = test_x.reshape(len(test_x), -1)
@@ -82,20 +93,67 @@ def main():
         dist = ((q[:, None] - trx[None]) ** 2).sum(-1)
         return try_[np.argmin(dist, 1)].tolist()
 
-    d2 = Distributor(timeout=10.0, redistribute_min=0.05)
-    fw2 = CalculationFramework(d2)
-    fw2.add_static("train", (tr, train_y))
-    d2.register_task(TaskDef("knn", knn, static_files=("train",)))
-    tids = d2.queue.add_many("knn", [(i, i + 20)
-                                     for i in range(0, len(te), 20)])
-    d2.spawn_clients([ClientProfile(name=f"browser{i}") for i in range(4)])
-    assert d2.queue.wait_all(timeout=120)
-    res = d2.queue.results()
+    d = AsyncDistributor(timeout=10.0, redistribute_min=0.02,
+                         sizer=AdaptiveSizer(target_lease_time=0.05,
+                                             max_size=16),
+                         watchdog_interval=0.01,
+                         project_name="DistributedKnn")
+    d.add_static("train", (tr, train_y))
+    d.register_task(TaskDef("knn", knn, static_files=("train",)))
+    tids = d.add_work("knn", [(i, i + 10) for i in range(0, len(te), 10)])
+    d.spawn_clients(
+        [ClientProfile(name=f"fast{i}", speed=400.0) for i in range(2)] +
+        [ClientProfile(name=f"slow{i}", speed=50.0) for i in range(2)])
+    assert await d.run_until_done(timeout=120)
+    res = d.queue.results()
     pred = np.concatenate([res[t] for t in tids])
     acc = (pred == test_y).mean()
-    d2.shutdown()
+    snap = d.console()
+    rates = {n: round(s["rate"] or 0.0, 1)
+             for n, s in snap["clients"].items()}
     print(f"distributed kNN accuracy: {acc:.3f} "
-          f"({d2.console()['executed']} tickets)")
+          f"({snap['executed']} tickets, v2 adaptive leases)")
+    print(f"measured client rates (work/s): {rates}")
+
+
+async def demo_split_round_v2():
+    """One §4.1 split-concurrent round: backbone shard 'gradients' are
+    computed by browser clients via the scheduler; the head would update
+    server-side concurrently (here: the weighted aggregate)."""
+    rng = np.random.default_rng(0)
+    data = rng.normal(size=(64, 8)).astype(np.float32)
+
+    def backbone_shard(args, static):
+        lo, hi = args["lo"], args["hi"]
+        # stand-in for the backbone grad: per-shard mean feature
+        return {"grad": data[lo:hi].mean(axis=0), "n": hi - lo}
+
+    d = AsyncDistributor(timeout=10.0, redistribute_min=0.02,
+                         sizer=AdaptiveSizer(target_lease_time=0.05),
+                         watchdog_interval=0.01,
+                         project_name="SplitConcurrentRound")
+    d.register_task(TaskDef("backbone_shard", backbone_shard))
+    d.spawn_clients([ClientProfile(name="fast", speed=400.0),
+                     ClientProfile(name="slow", speed=80.0)])
+    disp = SplitConcurrentDispatcher(d)
+    shards = [{"lo": i, "hi": i + 8} for i in range(0, 64, 8)]
+    outs = await disp.run_round(shards, shard_work=[8.0] * len(shards),
+                                timeout=60.0)
+    agg = SplitConcurrentDispatcher.aggregate(
+        [{"grad": o["grad"]} for o in outs], [o["n"] for o in outs])
+    await d.shutdown()
+    direct = data.mean(axis=0)
+    err = float(np.abs(agg["grad"] - direct).max())
+    assert err < 1e-5, err
+    print(f"split-concurrent round: {len(outs)} backbone shards via "
+          f"scheduler, weighted aggregate matches direct mean "
+          f"(max err {err:.2e})")
+
+
+def main():
+    demo_primes_v1()
+    asyncio.run(demo_knn_v2())
+    asyncio.run(demo_split_round_v2())
 
 
 if __name__ == "__main__":

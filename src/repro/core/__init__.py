@@ -1,3 +1,15 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""Sashimi's distributed-calculation core (the paper's primary system).
+
+Modules map to the paper as follows (see README.md for the full table):
+
+  * ``tickets``        — §2.1.2 virtual-created-time ticket queue, plus the
+                         Distributor v2 lease-batch / client-speed
+                         extensions;
+  * ``distributor``    — the TicketDistributor + HTTPServer analogue: v2 is
+                         the asyncio adaptive scheduler, v1 the
+                         thread-per-client baseline;
+  * ``project``        — the Project / Task programming model from the
+                         paper's appendix;
+  * ``split_parallel`` — §4.1 split-training strategies and the dispatcher
+                         wiring them onto the ticket scheduler.
+"""

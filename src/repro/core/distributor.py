@@ -1,7 +1,24 @@
-"""The Sashimi Distributor: HTTPServer + TicketDistributor analogue with
-simulated browser clients.
+"""The Sashimi Distributor: HTTPServer + TicketDistributor analogue.
 
-The paper's browsers become ``BrowserClient`` threads.  Each client:
+Two generations live here:
+
+**Distributor v2** (``AsyncDistributor``) — the asyncio event-driven
+scheduler this repo's scaling work builds on.  Clients check out *lease
+batches* of tickets sized to their measured throughput (EWMA of completed
+work units per second, kept in ``TicketQueue.stats``):
+
+  * unknown clients get a small probe lease;
+  * a fast client's next lease grows toward ``rate * target_lease_time``;
+  * a slow client's shrinks — the paper's redistribution policy preserved,
+    but *proactive*: a watchdog releases leases that overrun their ETA by
+    ``grace``x instead of waiting out the full five-minute timeout.
+
+Idle clients park on a wake event and are woken when tickets arrive or a
+lease is released — no polling loops.
+
+**Distributor v1** (``Distributor`` + ``BrowserClient`` threads) — the
+original thread-per-client simulator, kept as the fixed-size baseline that
+``benchmarks/scheduler_throughput.py`` compares against.  Each client:
   1. connects to the distributor (WebSocket analogue: method calls),
   2. requests a ticket,
   3. downloads the task code if not cached (LRU-GC'd cache, as in §2.1.2),
@@ -14,18 +31,22 @@ ticket-redistribution fault tolerance.
 """
 from __future__ import annotations
 
+import asyncio
 import collections
 import threading
 import time
 import traceback
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
-from repro.core.tickets import TicketQueue
+from repro.core.tickets import ClientStats, LeaseBatch, TicketQueue
 
 
 class LRUCache:
-    """Least-recently-used cache (the paper's in-browser GC)."""
+    """Least-recently-used cache (the paper's in-browser GC).
+
+    Tracks ``hits`` / ``misses`` / ``evictions`` counters so tests and the
+    console can verify caching behaviour."""
 
     def __init__(self, capacity: int = 16):
         self.capacity = capacity
@@ -35,6 +56,7 @@ class LRUCache:
         self.misses = 0
 
     def get(self, key: str):
+        """Return the cached value (marking it most-recent) or None."""
         if key in self._d:
             self._d.move_to_end(key)
             self.hits += 1
@@ -43,6 +65,7 @@ class LRUCache:
         return None
 
     def put(self, key: str, value: Any):
+        """Insert/refresh ``key``, evicting least-recently-used overflow."""
         if key in self._d:
             self._d.move_to_end(key)
         self._d[key] = value
@@ -51,6 +74,7 @@ class LRUCache:
             self.evictions += 1
 
     def clear(self):
+        """Drop everything (the paper's browser reload)."""
         self._d.clear()
 
 
@@ -65,92 +89,124 @@ class TaskDef:
 
 @dataclass
 class ClientProfile:
-    """Simulated browser behaviour."""
+    """Simulated browser behaviour (shared by v1 threads and v2 tasks)."""
 
     name: str = "client"
-    speed: float = 1.0            # multiplier on task work_fn duration
+    speed: float = 1.0            # work units executed per second (v2) /
+    #                               multiplier on task duration (v1)
     fail_prob: float = 0.0        # probability a task raises
-    die_after: Optional[int] = None   # abandon (thread exit) after N tickets
+    die_after: Optional[int] = None   # abandon after N tickets (v1) or
+    #                                   N leases (v2)
     latency: float = 0.0          # network latency per round-trip (s)
     cache_capacity: int = 16
 
 
-class Distributor:
-    """TicketDistributor + HTTPServer in one object."""
+# ---------------------------------------------------------------------------
+# Ticket sizing policies (Distributor v2)
+# ---------------------------------------------------------------------------
 
-    def __init__(self, *, timeout: float = 300.0,
-                 redistribute_min: float = 10.0,
-                 clock: Callable[[], float] = time.monotonic,
-                 project_name: str = "project"):
-        self.queue = TicketQueue(timeout=timeout,
-                                 redistribute_min=redistribute_min,
-                                 clock=clock)
-        self.project_name = project_name
+
+@dataclass
+class FixedSizer:
+    """v1 policy: every lease is ``size`` tickets, regardless of client."""
+
+    size: int = 1
+
+    def lease_size(self, stats: Optional[ClientStats]) -> int:
+        """Constant batch size; client stats are ignored."""
+        return self.size
+
+    def expected_duration(self, stats, n_tickets: int) -> Optional[float]:
+        """ETA from the client's EWMA rate, or None before any
+        observation (the watchdog skips ETA-less leases)."""
+        if stats is None or not stats.rate:
+            return None
+        return n_tickets * stats.mean_ticket_work / stats.rate
+
+
+@dataclass
+class AdaptiveSizer:
+    """v2 policy: size each lease so it takes ~``target_lease_time`` seconds
+    on *that* client, based on its EWMA throughput.
+
+    ``lease_size = clamp(rate * target_lease_time, min_size, max_size)``.
+    Unknown clients get ``probe_size`` so one cheap lease calibrates the
+    EWMA before committing real volume."""
+
+    target_lease_time: float = 0.25
+    min_size: int = 1
+    max_size: int = 64
+    probe_size: int = 2
+
+    def lease_size(self, stats: Optional[ClientStats]) -> int:
+        """Tickets per lease for this client: rate-proportional, clamped
+        to [min_size, max_size]; probe_size until the rate is known.
+        ``rate`` is in work units/s, so convert through the client's mean
+        ticket work to get a ticket count."""
+        if (stats is None or not stats.rate
+                or not stats.mean_ticket_work):
+            return self.probe_size   # no (usable) measurement yet
+        n = int(round(stats.rate * self.target_lease_time
+                      / stats.mean_ticket_work))
+        return max(self.min_size, min(self.max_size, n))
+
+    def expected_duration(self, stats, n_tickets: int) -> Optional[float]:
+        """ETA for a lease of ``n_tickets`` on this client (watchdog
+        deadline input)."""
+        if stats is None or not stats.rate:
+            # No measurement yet: arm the watchdog with a generous multiple
+            # of the design target so a dead client's probe lease still
+            # comes back, while a merely-slow client gets to finish its
+            # probe and report a rate (a released lease's late submit
+            # still calibrates the EWMA via the queue's side-table).
+            return 4.0 * self.target_lease_time
+        return n_tickets * stats.mean_ticket_work / stats.rate
+
+
+class HttpServerBase:
+    """The paper's HTTPServer half, shared by Distributor v1 and v2: task
+    code + static assets published to clients, with download counters."""
+
+    def __init__(self):
         self.tasks: dict[str, TaskDef] = {}
-        self.static_store: dict[str, Any] = {}   # HTTPServer assets
+        self.static_store: dict[str, Any] = {}
         self.download_count: collections.Counter = collections.Counter()
-        self.clients: list["BrowserClient"] = []
-        self._lock = threading.Lock()
-
-    # HTTPServer API -----------------------------------------------------
+        self._count_lock = threading.Lock()
 
     def register_task(self, task: TaskDef):
+        """Publish a task's code on the HTTPServer."""
         self.tasks[task.name] = task
 
+    def add_static(self, key: str, value: Any):
+        """Publish a dataset/helper on the HTTPServer."""
+        self.static_store[key] = value
+
     def serve_static(self, key: str):
-        with self._lock:
+        """A client downloads a static file (counted for cache tests)."""
+        with self._count_lock:
             self.download_count[key] += 1
         return self.static_store[key]
 
     def fetch_task(self, name: str) -> TaskDef:
-        with self._lock:
+        """A client downloads task code (counted for cache tests)."""
+        with self._count_lock:
             self.download_count[f"task:{name}"] += 1
         return self.tasks[name]
 
-    # client management ----------------------------------------------------
 
-    def spawn_clients(self, profiles) -> list["BrowserClient"]:
-        cs = [BrowserClient(self, p) for p in profiles]
-        self.clients.extend(cs)
-        for c in cs:
-            c.start()
-        return cs
+class BrowserNodeBase:
+    """Per-client state and helpers shared by the v1 thread client and the
+    v2 asyncio client: LRU cache, counters, deterministic failure RNG, and
+    the paper's download-through-cache / reload-on-error behaviours."""
 
-    def shutdown(self):
-        for c in self.clients:
-            c.stop()
-        for c in self.clients:
-            c.join(timeout=5)
-        self.clients.clear()
-
-    def console(self) -> dict:
-        """The paper's control console view."""
-        snap = self.queue.snapshot()
-        snap["project"] = self.project_name
-        snap["clients"] = [
-            {"name": c.profile.name, "executed": c.executed,
-             "errors": c.errors, "alive": c.is_alive()}
-            for c in self.clients
-        ]
-        return snap
-
-
-class BrowserClient(threading.Thread):
-    """A simulated browser node running the paper's basic-program loop."""
-
-    def __init__(self, distributor: Distributor, profile: ClientProfile):
-        super().__init__(daemon=True)
+    def _init_browser(self, distributor, profile: ClientProfile):
         self.dist = distributor
         self.profile = profile
         self.cache = LRUCache(profile.cache_capacity)
         self.executed = 0
         self.errors = 0
         self.reloads = 0
-        self._stop = threading.Event()
         self._rng_state = hash(profile.name) & 0xFFFFFFFF
-
-    def stop(self):
-        self._stop.set()
 
     def _rand(self) -> float:
         # tiny deterministic LCG so failures are reproducible
@@ -180,8 +236,341 @@ class BrowserClient(threading.Thread):
         self.cache.clear()
         self.reloads += 1
 
+
+# ---------------------------------------------------------------------------
+# Distributor v2: asyncio event-driven scheduler
+# ---------------------------------------------------------------------------
+
+
+class AsyncDistributor(HttpServerBase):
+    """TicketDistributor + HTTPServer, asyncio edition (Distributor v2).
+
+    Serves batched ticket leases sized by ``sizer`` (default
+    :class:`AdaptiveSizer`).  A watchdog proactively releases leases that
+    overrun their throughput-based ETA by ``grace``x, so work stranded on a
+    stalled client is redistributed in seconds rather than after the
+    paper's five-minute timeout.
+
+    The clock is injectable for deterministic tests (see
+    ``docs/ARCHITECTURE.md`` §Injectable clock); it must agree with the
+    event loop's notion of elapsed time when simulated clients sleep.
+    """
+
+    def __init__(self, *, timeout: float = 300.0,
+                 redistribute_min: float = 10.0,
+                 clock: Callable[[], float] = time.monotonic,
+                 sizer=None, grace: float = 3.0,
+                 watchdog_interval: float = 0.05,
+                 keep_alive: bool = False,
+                 project_name: str = "project"):
+        super().__init__()
+        self.queue = TicketQueue(timeout=timeout,
+                                 redistribute_min=redistribute_min,
+                                 clock=clock)
+        self.sizer = sizer if sizer is not None else AdaptiveSizer()
+        self.grace = grace
+        # keep_alive: clients/watchdog survive a drained queue and wait for
+        # the next add_work round (used by SplitConcurrentDispatcher, which
+        # runs one ticket round per training step); shutdown() ends them.
+        self.keep_alive = keep_alive
+        self.watchdog_interval = watchdog_interval
+        self.project_name = project_name
+        self.clients: list["AsyncBrowserClient"] = []
+        self._work_added = False
+        self._wake: Optional[asyncio.Event] = None
+        self._client_tasks: list[asyncio.Task] = []
+        self._watchdog_task: Optional[asyncio.Task] = None
+
+    # -- scheduler core (HTTPServer API inherited from HttpServerBase) -------
+
+    def _wake_event(self) -> asyncio.Event:
+        """Current wake epoch.  Waiters capture it BEFORE probing the queue
+        (so a concurrent notify can't be lost), then await it; every notify
+        sets the old epoch and installs a fresh one.  Plain Events have
+        clean cancellation semantics, unlike asyncio.Condition on 3.10."""
+        if self._wake is None:
+            self._wake = asyncio.Event()
+        return self._wake
+
+    def _notify_waiters(self):
+        ev = self._wake
+        self._wake = asyncio.Event()
+        if ev is not None:
+            ev.set()
+
+    @staticmethod
+    async def _wait_on(wake: asyncio.Event, timeout: float):
+        """Park on a captured wake epoch for at most ``timeout`` seconds.
+        Uses asyncio.wait — NOT wait_for — because wait_for can swallow an
+        outer cancel arriving during its own timeout (bpo-42130), which
+        would leak the parked task past shutdown()."""
+        waiter = asyncio.ensure_future(wake.wait())
+        try:
+            await asyncio.wait({waiter}, timeout=timeout)
+        finally:
+            if not waiter.done():
+                waiter.cancel()
+
+    def _terminal(self) -> bool:
+        return (not self.keep_alive and self._work_added
+                and self.queue.all_done())
+
+    def add_work(self, task_name: str, args_list, *,
+                 work: float = 1.0) -> list[int]:
+        """Enqueue tickets (non-async producer API); wakes idle clients."""
+        tids = self.queue.add_many(task_name, args_list, work=work)
+        self._work_added = True
+        self._notify_waiters()
+        return tids
+
+    async def lease(self, client_name: str) -> Optional[LeaseBatch]:
+        """Check out the next lease for ``client_name``, sized by the
+        policy.  Parks on the condition until tickets are eligible; returns
+        None once every ticket is complete."""
+        while True:
+            # An empty queue starts out "done"; only treat done as terminal
+            # once a producer has actually enqueued work (clients may be
+            # spawned before the first add_work call).  In keep_alive mode
+            # clients park instead, awaiting the next round's add_work.
+            if self._terminal():
+                return None
+            # capture the wake epoch BEFORE probing, so an add_work /
+            # submit / release landing in between still wakes us
+            wake = self._wake_event()
+            stats = self.queue.stats.get(client_name)
+            n = self.sizer.lease_size(stats)
+            batch = self.queue.lease(client_name, n)
+            if batch is not None:
+                # ETA from the tickets actually GRANTED (the queue may hand
+                # out fewer than requested near the end of a round)
+                batch.expected_duration = self.sizer.expected_duration(
+                    stats, len(batch.tickets))
+                return batch
+            # park until notified, or until the earliest cool-down expiry
+            # (no event announces those; fall back to redistribute_min)
+            hint = self.queue.seconds_until_eligible()
+            pause = (self.queue.redistribute_min if hint is None
+                     else max(min(hint, self.queue.redistribute_min), 1e-4))
+            await self._wait_on(wake, pause)
+
+    async def submit_batch(self, batch: LeaseBatch, results: dict) -> int:
+        """Turn in a lease's results; wakes waiters (done or new
+        redistribution candidates)."""
+        accepted = self.queue.submit_batch(batch.lease_id, results,
+                                           batch.client)
+        self._notify_waiters()
+        return accepted
+
+    async def release_lease(self, batch: LeaseBatch, *,
+                            client_failed: bool = False,
+                            reset_vct: bool = True) -> int:
+        """Give a lease's unfinished tickets back (client death path);
+        ``reset_vct=False`` keeps the cool-down (error-retry path)."""
+        n = self.queue.release(batch.lease_id, client_failed=client_failed,
+                               reset_vct=reset_vct)
+        if n:
+            self._notify_waiters()
+        return n
+
+    async def _watchdog(self):
+        """Proactive redistribution: release leases overrunning their ETA."""
+        while not self._terminal():
+            now = self.queue.clock()
+            for batch in self.queue.outstanding_leases():
+                eta = batch.expected_duration
+                if eta is None:
+                    continue
+                if now - batch.issued_at > self.grace * max(eta, 1e-3):
+                    await self.release_lease(batch, client_failed=True)
+            await asyncio.sleep(self.watchdog_interval)
+
+    # -- client/session management ------------------------------------------
+
+    def spawn_clients(self, profiles) -> list["AsyncBrowserClient"]:
+        """Create one :class:`AsyncBrowserClient` task per profile (must be
+        called with an event loop running)."""
+        loop = asyncio.get_running_loop()
+        cs = [AsyncBrowserClient(self, p) for p in profiles]
+        self.clients.extend(cs)
+        self._client_tasks.extend(loop.create_task(c.run()) for c in cs)
+        if self._watchdog_task is None or self._watchdog_task.done():
+            # .done() matters: a non-keep_alive watchdog self-terminates
+            # when a round drains, and a later spawn must arm a fresh one
+            self._watchdog_task = loop.create_task(self._watchdog())
+        return cs
+
+    async def run_until_done(self, timeout: float = 60.0) -> bool:
+        """Drive the loop until every ticket completes, then shut down the
+        clients/watchdog; returns False on timeout (also shut down)."""
+        deadline = time.monotonic() + timeout
+        while not self.queue.all_done():
+            if time.monotonic() > deadline:
+                await self.shutdown()
+                return False
+            # event-driven: every submit/release notifies; the timeout is
+            # only a fallback heartbeat
+            wake = self._wake_event()
+            if self.queue.all_done():
+                break
+            await self._wait_on(wake, 0.05)
+        await self.shutdown()
+        return True
+
+    async def shutdown(self):
+        """Cancel client + watchdog tasks and wait for them to unwind."""
+        self._notify_waiters()
+        tasks = list(self._client_tasks)
+        if self._watchdog_task is not None:
+            tasks.append(self._watchdog_task)
+        for t in tasks:
+            t.cancel()
+        await asyncio.gather(*tasks, return_exceptions=True)
+        self._client_tasks.clear()
+        self._watchdog_task = None
+
+    def console(self) -> dict:
+        """The paper's control console view (v2 edition)."""
+        snap = self.queue.snapshot()
+        snap["project"] = self.project_name
+        snap["client_views"] = [
+            {"name": c.profile.name, "executed": c.executed,
+             "errors": c.errors, "alive": not c.done}
+            for c in self.clients
+        ]
+        return snap
+
+
+class AsyncBrowserClient(BrowserNodeBase):
+    """A simulated browser node as an asyncio task (Distributor v2).
+
+    Runs the paper's basic-program loop over the batched-lease API: lease →
+    download code/data (LRU-cached) → execute each ticket → submit the
+    batch.  ``profile.speed`` is the client's work-units-per-second; task
+    execution is simulated with ``asyncio.sleep(work / speed)`` so
+    heterogeneous clients genuinely take different wall-clock time."""
+
+    def __init__(self, distributor: AsyncDistributor, profile: ClientProfile):
+        self._init_browser(distributor, profile)
+        self.leases_taken = 0
+        self.done = False
+
+    async def run(self):
+        """Lease → download → execute → submit, until the queue drains
+        (or the profile says the tab closes)."""
+        try:
+            while True:
+                batch = await self.dist.lease(self.profile.name)
+                if batch is None:
+                    break
+                self.leases_taken += 1
+                if self.profile.latency:
+                    await asyncio.sleep(self.profile.latency)
+                if (self.profile.die_after is not None
+                        and self.leases_taken > self.profile.die_after):
+                    # tab closed mid-lease: tickets go straight back
+                    await self.dist.release_lease(batch, client_failed=True)
+                    break
+                results: dict[int, Any] = {}
+                failed = False
+                for ticket in batch.tickets:
+                    try:
+                        task = self._get_task(ticket.task_name)
+                        static = self._get_static(task)
+                        if (self.profile.fail_prob
+                                and self._rand() < self.profile.fail_prob):
+                            raise RuntimeError(
+                                "simulated browser crash in "
+                                f"{ticket.task_name}")
+                        if self.profile.speed > 0:
+                            await asyncio.sleep(
+                                ticket.work / self.profile.speed)
+                        results[ticket.ticket_id] = task.run(ticket.args,
+                                                             static)
+                        self.executed += 1
+                    except Exception:
+                        self.errors += 1
+                        self.dist.queue.report_error(
+                            ticket.ticket_id, traceback.format_exc(),
+                            self.profile.name)
+                        self._reload()
+                        failed = True
+                await self.dist.submit_batch(batch, results)
+                if failed:
+                    # drop the lease bookkeeping for the errored tickets
+                    # but keep their redistribute_min cool-down (paper
+                    # behaviour) — a deterministically failing task must
+                    # not hot-loop at event-loop speed
+                    await self.dist.release_lease(batch, reset_vct=False)
+        finally:
+            self.done = True
+
+
+# ---------------------------------------------------------------------------
+# Distributor v1: thread-per-client baseline (fixed-size tickets)
+# ---------------------------------------------------------------------------
+
+
+class Distributor(HttpServerBase):
+    """TicketDistributor + HTTPServer in one object (v1 baseline)."""
+
+    def __init__(self, *, timeout: float = 300.0,
+                 redistribute_min: float = 10.0,
+                 clock: Callable[[], float] = time.monotonic,
+                 project_name: str = "project"):
+        super().__init__()
+        self.queue = TicketQueue(timeout=timeout,
+                                 redistribute_min=redistribute_min,
+                                 clock=clock)
+        self.project_name = project_name
+        self.clients: list["BrowserClient"] = []
+
+    # client management (HTTPServer API inherited from HttpServerBase) -------
+
+    def spawn_clients(self, profiles) -> list["BrowserClient"]:
+        """Start one daemon thread per profile."""
+        cs = [BrowserClient(self, p) for p in profiles]
+        self.clients.extend(cs)
+        for c in cs:
+            c.start()
+        return cs
+
+    def shutdown(self):
+        """Stop and join all client threads."""
+        for c in self.clients:
+            c.stop()
+        for c in self.clients:
+            c.join(timeout=5)
+        self.clients.clear()
+
+    def console(self) -> dict:
+        """The paper's control console view."""
+        snap = self.queue.snapshot()
+        snap["project"] = self.project_name
+        snap["clients"] = [
+            {"name": c.profile.name, "executed": c.executed,
+             "errors": c.errors, "alive": c.is_alive()}
+            for c in self.clients
+        ]
+        return snap
+
+
+class BrowserClient(threading.Thread, BrowserNodeBase):
+    """A simulated browser node running the paper's basic-program loop."""
+
+    def __init__(self, distributor: Distributor, profile: ClientProfile):
+        super().__init__(daemon=True)
+        self._init_browser(distributor, profile)
+        # NB: named _stop_requested because threading.Thread owns a private
+        # _stop() method; shadowing it breaks Thread.join().
+        self._stop_requested = threading.Event()
+
+    def stop(self):
+        """Ask the client thread to exit after its current ticket."""
+        self._stop_requested.set()
+
     def run(self):
-        while not self._stop.is_set():
+        """The paper's steps 2-7: request → download → execute → submit."""
+        while not self._stop_requested.is_set():
             ticket = self.dist.queue.request()       # step 2: ticket request
             if ticket is None:
                 if self.dist.queue.all_done():

@@ -32,13 +32,18 @@ class TaskBase:
 
     @classmethod
     def task_name(cls) -> str:
+        """Queue-visible task identifier (defaults to the class name)."""
         return cls.__name__
 
     def run(self, input: Any, static: dict) -> Any:  # noqa: A002
+        """Execute one ticket's worth of work on a client (override)."""
         raise NotImplementedError
 
 
 class TaskHandle:
+    """A registered task plus the ticket ids of its in-flight inputs
+    (returned by :meth:`CalculationFramework`-driven ``create_task``)."""
+
     def __init__(self, framework: "CalculationFramework", task_cls):
         self.framework = framework
         self.task_cls = task_cls
@@ -70,20 +75,29 @@ class TaskHandle:
 
 
 class ProjectBase:
+    """Subclass and override :meth:`run`; orchestrates Tasks (paper
+    appendix: ``PrimeListMakerProject``)."""
+
     name = "Project"
 
     def __init__(self, framework: "CalculationFramework"):
         self.framework = framework
 
     def create_task(self, task_cls) -> TaskHandle:
+        """Register ``task_cls`` with the distributor and hand back its
+        handle for ``calculate`` / ``block``."""
         return TaskHandle(self.framework, task_cls)
 
     def run(self):
+        """Project entry point: create tasks, calculate, block (override)."""
         raise NotImplementedError
 
 
 @dataclass
 class CalculationFramework:
+    """The paper's top-level object: couples a project to a Distributor
+    and its HTTPServer-style static store."""
+
     distributor: Distributor
 
     def add_static(self, key: str, value: Any):
@@ -91,6 +105,7 @@ class CalculationFramework:
         self.distributor.static_store[key] = value
 
     def run_project(self, project_cls, *args, **kwargs):
+        """Instantiate (if needed) and run a project; returns its result."""
         project = project_cls(self, *args, **kwargs) if not isinstance(
             project_cls, ProjectBase) else project_cls
         self.distributor.project_name = getattr(project, "name",

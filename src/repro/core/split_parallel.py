@@ -38,18 +38,23 @@ HEAD_KEYS = ("head",)  # server-owned subtree(s) of the param pytree
 
 
 def split_params(params: dict):
+    """Partition a param pytree into (backbone, head) by top-level key."""
     backbone = {k: v for k, v in params.items() if k not in HEAD_KEYS}
     head = {k: v for k, v in params.items() if k in HEAD_KEYS}
     return backbone, head
 
 
 def merge_params(backbone: dict, head: dict) -> dict:
+    """Inverse of :func:`split_params`."""
     return {**backbone, **head}
 
 
 @jax.tree_util.register_dataclass
 @dataclass
 class TrainState:
+    """Pytree train state shared by every strategy; split_concurrent uses
+    the head/stale-head/prev-feature slots, the others leave them empty."""
+
     params: Any                 # backbone params (clients)
     head: Any                   # server head params
     head_stale: Any             # client-side stale head copy (split_concurrent)
@@ -268,6 +273,118 @@ def make_train_step(api: ModelApi, opt: Optimizer, *, strategy: str,
             {**metrics, "total": loss}
 
     return init_state, step_fn
+
+
+# ---------------------------------------------------------------------------
+# Distributor v2 wiring: §4.1 split training over the ticket scheduler
+# ---------------------------------------------------------------------------
+
+
+def adaptive_shard_sizes(rates: dict, global_batch: int, *,
+                         min_shard: int = 1) -> dict:
+    """Split ``global_batch`` rows across clients proportional to measured
+    throughput (EWMA work-units/s from ``TicketQueue.stats``).
+
+    Clients with ``None`` rate (never observed) share the mean of the known
+    rates so newcomers aren't starved.  Integer apportionment uses the
+    largest-remainder method; every client gets at least ``min_shard`` rows
+    (dropping to 0 would stop us ever re-measuring a slow client).
+
+    >>> adaptive_shard_sizes({"fast": 30.0, "slow": 10.0}, 8)
+    {'fast': 6, 'slow': 2}
+    """
+    if not rates:
+        return {}
+    known = [r for r in rates.values() if r]
+    fallback = (sum(known) / len(known)) if known else 1.0
+    eff = {c: (r if r else fallback) for c, r in rates.items()}
+    total = sum(eff.values())
+    raw = {c: global_batch * r / total for c, r in eff.items()}
+    # largest-remainder apportionment (sums to global_batch exactly)
+    sizes = {c: int(raw[c]) for c in raw}
+    by_remainder = sorted(raw, key=lambda c: raw[c] - int(raw[c]),
+                          reverse=True)
+    i = 0
+    while sum(sizes.values()) < global_batch:
+        sizes[by_remainder[i % len(by_remainder)]] += 1
+        i += 1
+    # enforce the floor only when it's satisfiable (global_batch may be
+    # smaller than len(rates) * min_shard), stealing from the largest
+    if min_shard * len(sizes) <= global_batch:
+        for c in sizes:
+            while sizes[c] < min_shard:
+                donor = max(sizes, key=lambda d: (sizes[d], eff[d]))
+                if sizes[donor] <= min_shard:
+                    break
+                sizes[donor] -= 1
+                sizes[c] += 1
+    return sizes
+
+
+class SplitConcurrentDispatcher:
+    """Bridge from §4.1 split training to the Distributor v2 scheduler.
+
+    Each training step, the backbone's data-parallel shards become a batch
+    of tickets on an :class:`repro.core.distributor.AsyncDistributor`; the
+    simulated browser clients lease them (adaptively sized batches), run
+    the shard work function, and the dispatcher aggregates the results —
+    a work-weighted mean, which is exactly the gradient combination rule
+    for unevenly sized data-parallel shards.
+
+    The server-side head update (which never crosses the data axis — see
+    ``split_concurrent`` above) proceeds concurrently on the caller's
+    thread, so the ticket round only covers backbone traffic.
+    """
+
+    def __init__(self, distributor, task_name: str = "backbone_shard"):
+        self.dist = distributor
+        # clients must survive drained queues between training steps;
+        # the caller ends them with distributor.shutdown()
+        self.dist.keep_alive = True
+        self.task_name = task_name
+        self.rounds = 0
+
+    async def run_round(self, shard_args, *, shard_work=None,
+                        timeout: float = 60.0) -> list:
+        """Execute one step's shards through the scheduler.
+
+        ``shard_args`` is a list of per-shard work-function arguments;
+        ``shard_work[i]`` (default 1.0 each) meters each shard's size so
+        the EWMA stays calibrated when shards are uneven.  Returns results
+        ordered like ``shard_args``."""
+        if shard_work is None:
+            shard_work = [1.0] * len(shard_args)
+        tids = self.dist.add_work(self.task_name, shard_args,
+                                  work=list(shard_work))
+        deadline = self.dist.queue.clock() + timeout
+        while True:
+            # capture the wake epoch before checking: a submit can only
+            # land at an await point, so this can't miss a notification
+            wake = self.dist._wake_event()
+            out = self.dist.queue.results_for(tids)
+            if out is not None:
+                break
+            if self.dist.queue.clock() > deadline:
+                raise TimeoutError(
+                    f"split round unfinished: {self.dist.console()}")
+            await self.dist._wait_on(wake, 0.05)
+        # forget the finished round so queue scans/memory stay O(one round)
+        # over a long training run, not O(all history)
+        self.dist.queue.prune(tids)
+        self.rounds += 1
+        return out
+
+    @staticmethod
+    def aggregate(shard_grads, shard_sizes) -> Any:
+        """Work-weighted mean of per-shard gradient pytrees."""
+        total = float(sum(shard_sizes))
+        scaled = [
+            jax.tree_util.tree_map(lambda g, w=w: g * (w / total), grads)
+            for grads, w in zip(shard_grads, shard_sizes)]
+        out = scaled[0]
+        for s in scaled[1:]:
+            out = jax.tree_util.tree_map(lambda a, b: a + b, out, s)
+        return out
 
 
 def init_prev_features(state: TrainState, api: ModelApi, batch,

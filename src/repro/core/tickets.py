@@ -1,4 +1,4 @@
-"""The Sashimi ticket queue — the paper's §2.1.2 algorithm, verbatim.
+"""The Sashimi ticket queue — the paper's §2.1.2 algorithm, extended.
 
 Tickets are served in ascending **virtual created time** (VCT):
 
@@ -12,38 +12,129 @@ Tickets are served in ascending **virtual created time** (VCT):
     prevents the last ticket from stampeding to every idle client.
 
 The first result submitted for a ticket wins; duplicates are dropped.
+
+Beyond the paper (Distributor v2 substrate), the queue also supports:
+
+  * **lease batches** (`lease` / `submit_batch` / `release`): a client
+    checks out up to N tickets in one round-trip.  Each batch gets a lease
+    id; releasing a lease (client died, watchdog fired) resets its
+    unfinished tickets so they sort as freshly created — *proactive*
+    redistribution instead of waiting out the full timeout.
+  * **client-speed metadata** (`ClientStats`): an EWMA of completed work
+    per second per client, updated on every batch submit.  The scheduler
+    uses it to size the next lease (slow clients get smaller shards).
+
 Thread-safe; the clock is injectable so tests can run timeouts in
-milliseconds.
+milliseconds (see ``docs/ARCHITECTURE.md`` §Injectable clock).
 """
 from __future__ import annotations
 
+import heapq
 import itertools
 import threading
 import time
+import collections
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
 
 @dataclass
 class Ticket:
+    """One unit of distributable work (paper §2.1.1: a slice of a Task's
+    arguments).  ``work`` is the nominal size of the slice in abstract work
+    units; the adaptive scheduler uses it to meter client throughput."""
+
     ticket_id: int
     task_name: str
     args: Any
     created_at: float
+    work: float = 1.0
     distribute_count: int = 0
     last_distributed_at: float = -float("inf")
     completed: bool = False
     result: Any = None
     completed_by: Optional[str] = None
     error_reports: list = field(default_factory=list)
+    lease_id: Optional[int] = None
 
     def virtual_created_time(self, timeout: float) -> float:
+        """The paper's ordering key: creation time while fresh, then
+        ``last_distributed_at + timeout`` once handed out."""
         if self.distribute_count == 0:
             return self.created_at
         return self.last_distributed_at + timeout
 
+    def _copy_for_client(self) -> "Ticket":
+        return Ticket(self.ticket_id, self.task_name, self.args,
+                      self.created_at, self.work, self.distribute_count,
+                      self.last_distributed_at, lease_id=self.lease_id)
+
+
+@dataclass
+class ClientStats:
+    """Per-client throughput metadata (Distributor v2).
+
+    ``rate`` is an exponentially-weighted moving average of completed work
+    units per second.  ``rate is None`` until the first observation — the
+    scheduler treats unknown clients conservatively (probe lease).
+    """
+
+    name: str
+    rate: Optional[float] = None      # EWMA work units / second
+    alpha: float = 0.3                # EWMA smoothing factor
+    completed_work: float = 0.0
+    completed_tickets: int = 0
+    leases: int = 0
+    failures: int = 0
+
+    def observe(self, work: float, duration: float, tickets: int = 1):
+        """Fold one completed lease (``tickets`` tickets totalling ``work``
+        units, finished in ``duration`` s) into the EWMA."""
+        duration = max(duration, 1e-9)
+        sample = work / duration
+        self.rate = (sample if self.rate is None
+                     else self.alpha * sample + (1 - self.alpha) * self.rate)
+        self.completed_work += work
+        self.completed_tickets += tickets
+
+    @property
+    def mean_ticket_work(self) -> float:
+        """Average work units per completed ticket (1.0 until measured);
+        converts the work-rate EWMA into ticket counts and back."""
+        if self.completed_tickets <= 0:
+            return 1.0
+        return self.completed_work / self.completed_tickets
+
+
+@dataclass
+class LeaseBatch:
+    """A batch of tickets checked out by one client in one round-trip."""
+
+    lease_id: int
+    client: str
+    tickets: list                     # list[Ticket] (client-side copies)
+    issued_at: float
+    expected_duration: Optional[float] = None   # scheduler's ETA (watchdog)
+
+    @property
+    def work(self) -> float:
+        """Total work units in the batch (EWMA denominator)."""
+        return sum(t.work for t in self.tickets)
+
+    @property
+    def ticket_ids(self) -> list:
+        """Ids of the batched tickets, in lease order."""
+        return [t.ticket_id for t in self.tickets]
+
 
 class TicketQueue:
+    """Thread-safe VCT-ordered ticket store shared by Distributor v1/v2.
+
+    Producer side: :meth:`add` / :meth:`add_many`.
+    Client side (v1): :meth:`request` / :meth:`submit`.
+    Client side (v2): :meth:`lease` / :meth:`submit_batch` / :meth:`release`.
+    """
+
     def __init__(self, *, timeout: float = 300.0,
                  redistribute_min: float = 10.0,
                  clock: Callable[[], float] = time.monotonic):
@@ -53,59 +144,253 @@ class TicketQueue:
         self._lock = threading.Lock()
         self._tickets: dict[int, Ticket] = {}
         self._ids = itertools.count()
+        self._lease_ids = itertools.count()
+        self._leases: dict[int, LeaseBatch] = {}
+        self._lease_outstanding: dict[int, set] = {}
+        self._ticket_leases: dict[int, set] = {}   # reverse index
+        # released leases kept (bounded) so a LATE submit from a
+        # slower-than-expected client still calibrates its EWMA
+        self._released_leases: "collections.OrderedDict[int, LeaseBatch]" = \
+            collections.OrderedDict()
+        self.stats: dict[str, ClientStats] = {}
+        self.releases = 0
+        self._incomplete = 0      # live not-yet-completed ticket count
         self._done = threading.Event()
         self._done.set()
 
     # -- producer side ------------------------------------------------------
 
-    def add(self, task_name: str, args: Any) -> int:
+    def add(self, task_name: str, args: Any, *, work: float = 1.0) -> int:
+        """Enqueue one ticket; returns its id."""
         with self._lock:
             tid = next(self._ids)
-            self._tickets[tid] = Ticket(tid, task_name, args, self.clock())
+            self._tickets[tid] = Ticket(tid, task_name, args, self.clock(),
+                                        work=work)
+            self._incomplete += 1
             self._done.clear()
             return tid
 
-    def add_many(self, task_name: str, args_list) -> list[int]:
-        return [self.add(task_name, a) for a in args_list]
+    def add_many(self, task_name: str, args_list, *,
+                 work=1.0) -> list[int]:
+        """Enqueue one ticket per element of ``args_list``; ``work`` is a
+        scalar applied to all, or a per-ticket sequence."""
+        args_list = list(args_list)
+        works = (list(work) if isinstance(work, (list, tuple))
+                 else [work] * len(args_list))
+        return [self.add(task_name, a, work=w)
+                for a, w in zip(args_list, works)]
 
-    # -- distributor side ----------------------------------------------------
+    # -- selection core ------------------------------------------------------
+
+    def _eligible_sorted(self, now: float, limit: int) -> list[Ticket]:
+        """Up to ``limit`` eligible tickets in ascending-VCT order.
+
+        Caller must hold the lock.  Eligibility follows the paper: not
+        completed, and either never distributed or last distributed at least
+        ``redistribute_min`` seconds ago."""
+        eligible = (
+            (t.virtual_created_time(self.timeout), t.ticket_id, t)
+            for t in self._tickets.values()
+            if not t.completed
+            and (t.distribute_count == 0
+                 or now - t.last_distributed_at >= self.redistribute_min))
+        if limit == 1:                       # v1 hot path: single min scan
+            best = min(eligible, default=None)
+            return [best[2]] if best is not None else []
+        return [t for _, _, t in heapq.nsmallest(limit, eligible)]
+
+    # -- distributor side, v1 single-ticket API ------------------------------
 
     def request(self) -> Optional[Ticket]:
-        """Hand out the next ticket by ascending VCT (the paper's SQL query)."""
+        """Hand out the next ticket by ascending VCT (the paper's SQL
+        query).  Returns a client-side copy, or None if nothing is
+        currently eligible."""
         now = self.clock()
         with self._lock:
-            best = None
-            best_key = None
-            for t in self._tickets.values():
-                if t.completed:
-                    continue
-                if (t.distribute_count > 0
-                        and now - t.last_distributed_at
-                        < self.redistribute_min):
-                    continue  # min 10 s between redistributions
-                key = (t.virtual_created_time(self.timeout), t.ticket_id)
-                if best_key is None or key < best_key:
-                    best, best_key = t, key
+            best = next(iter(self._eligible_sorted(now, 1)), None)
             if best is None:
                 return None
             best.distribute_count += 1
             best.last_distributed_at = now
-            return Ticket(best.ticket_id, best.task_name, best.args,
-                          best.created_at, best.distribute_count,
-                          best.last_distributed_at)
+            return best._copy_for_client()
 
     def submit(self, ticket_id: int, result: Any, client: str = "?") -> bool:
         """Record a result; returns False for duplicates/unknown tickets."""
         with self._lock:
-            t = self._tickets.get(ticket_id)
-            if t is None or t.completed:
-                return False
-            t.completed = True
-            t.result = result
-            t.completed_by = client
-            if all(x.completed for x in self._tickets.values()):
-                self._done.set()
-            return True
+            return self._submit_locked(ticket_id, result, client)
+
+    def _submit_locked(self, ticket_id: int, result: Any,
+                       client: str) -> bool:
+        t = self._tickets.get(ticket_id)
+        if t is None or t.completed:
+            return False
+        t.completed = True
+        t.result = result
+        t.completed_by = client
+        # Drop the ticket from every lease still tracking it (a ticket can
+        # sit in several leases after redistribution; the reverse index
+        # makes this O(leases holding THIS ticket), almost always 1); GC
+        # drained leases so the watchdog never "releases" a lease of
+        # completed tickets.
+        for lid in self._ticket_leases.pop(ticket_id, ()):
+            outstanding = self._lease_outstanding.get(lid)
+            if outstanding is None:
+                continue
+            outstanding.discard(ticket_id)
+            if not outstanding:
+                self._lease_outstanding.pop(lid, None)
+                self._leases.pop(lid, None)
+        self._incomplete -= 1      # O(1) done check (no full-queue scan)
+        if self._incomplete == 0:
+            self._done.set()
+        return True
+
+    # -- distributor side, v2 batched-lease API ------------------------------
+
+    def lease(self, client: str, max_tickets: int = 1,
+              *, expected_duration: Optional[float] = None
+              ) -> Optional[LeaseBatch]:
+        """Check out up to ``max_tickets`` tickets (ascending VCT) as one
+        lease.  Returns None when nothing is eligible right now."""
+        now = self.clock()
+        with self._lock:
+            picked = self._eligible_sorted(now, max_tickets)
+            if not picked:
+                return None
+            lease_id = next(self._lease_ids)
+            copies = []
+            for t in picked:
+                t.distribute_count += 1
+                t.last_distributed_at = now
+                t.lease_id = lease_id
+                self._ticket_leases.setdefault(t.ticket_id,
+                                               set()).add(lease_id)
+                copies.append(t._copy_for_client())
+            batch = LeaseBatch(lease_id, client, copies, now,
+                               expected_duration=expected_duration)
+            self._leases[lease_id] = batch
+            self._lease_outstanding[lease_id] = {t.ticket_id for t in picked}
+            self.stats.setdefault(client, ClientStats(client)).leases += 1
+            return batch
+
+    def submit_batch(self, lease_id: int, results: dict,
+                     client: str = "?") -> int:
+        """Record results for a lease ({ticket_id: result}); updates the
+        client's EWMA throughput.  Returns how many results were accepted
+        (duplicates from racing redistributed leases are dropped)."""
+        now = self.clock()
+        with self._lock:
+            # grab the batch first: _submit_locked GCs drained leases; a
+            # watchdog-released lease is still good for the EWMA sample
+            batch = (self._leases.get(lease_id)
+                     or self._released_leases.pop(lease_id, None))
+            accepted_work = 0.0
+            accepted = 0
+            for tid, result in results.items():
+                t = self._tickets.get(tid)
+                if t is not None and not t.completed:
+                    accepted_work += t.work
+                    accepted += self._submit_locked(tid, result, client)
+            stats = self.stats.setdefault(client, ClientStats(client))
+            if batch is not None and accepted:
+                stats.observe(accepted_work, now - batch.issued_at,
+                              tickets=accepted)
+            return accepted
+
+    def release(self, lease_id: int, *, client_failed: bool = False,
+                reset_vct: bool = True) -> int:
+        """Return a lease's unfinished tickets to the queue *now*.
+
+        Used when a client dies mid-lease or the watchdog deems the lease
+        overdue (proactive redistribution).  With ``reset_vct`` (default)
+        the tickets sort as freshly created rather than waiting out the
+        full timeout; pass ``reset_vct=False`` to drop only the lease
+        bookkeeping and keep the paper's redistribute_min cool-down (the
+        error-retry path, so a deterministically failing task can't hot-
+        loop).  Tickets meanwhile re-leased to ANOTHER client are left
+        untouched.  Returns the number of tickets returned to the queue."""
+        with self._lock:
+            outstanding = self._lease_outstanding.pop(lease_id, set())
+            batch = self._leases.pop(lease_id, None)
+            released = 0
+            for tid in outstanding:
+                held_by = self._ticket_leases.get(tid)
+                if held_by is not None:
+                    held_by.discard(lease_id)
+                    if not held_by:
+                        self._ticket_leases.pop(tid, None)
+                t = self._tickets.get(tid)
+                if t is None or t.completed:
+                    continue
+                if t.lease_id is not None and t.lease_id != lease_id:
+                    continue  # an active newer lease owns it now
+                if reset_vct:
+                    # VCT = last_distributed_at + timeout == created_at
+                    t.last_distributed_at = t.created_at - self.timeout
+                t.lease_id = None
+                released += 1
+            if released:
+                self.releases += 1
+            if batch is not None:
+                self._released_leases[lease_id] = batch
+                while len(self._released_leases) > 256:
+                    self._released_leases.popitem(last=False)
+                if client_failed:
+                    self.stats.setdefault(
+                        batch.client, ClientStats(batch.client)).failures += 1
+            return released
+
+    def seconds_until_eligible(self) -> Optional[float]:
+        """Time until the next in-cool-down ticket becomes leasable, or
+        None when no unfinished distributed ticket is cooling down.  Lets
+        an idle client park for exactly the remaining cool-down instead of
+        a full redistribute_min."""
+        now = self.clock()
+        with self._lock:
+            best = None
+            for t in self._tickets.values():
+                if t.completed or t.distribute_count == 0:
+                    continue
+                remaining = self.redistribute_min - (
+                    now - t.last_distributed_at)
+                if remaining <= 0:
+                    return 0.0
+                if best is None or remaining < best:
+                    best = remaining
+            return best
+
+    def outstanding_leases(self) -> list[LeaseBatch]:
+        """Leases with at least one unfinished ticket (watchdog input)."""
+        with self._lock:
+            return [b for lid, b in self._leases.items()
+                    if self._lease_outstanding.get(lid)]
+
+    def results_for(self, ticket_ids) -> Optional[list]:
+        """Results for exactly ``ticket_ids`` (in order), or None if any is
+        still unfinished.  O(len(ticket_ids)) — use instead of copying the
+        whole :meth:`results` dict when polling a round."""
+        with self._lock:
+            out = []
+            for tid in ticket_ids:
+                t = self._tickets.get(tid)
+                if t is None or not t.completed:
+                    return None
+                out.append(t.result)
+            return out
+
+    def prune(self, ticket_ids) -> int:
+        """Forget completed tickets (long-running producers: drop finished
+        rounds so lease scans and memory don't grow with history).
+        Unfinished tickets are left alone; returns how many were pruned."""
+        with self._lock:
+            pruned = 0
+            for tid in ticket_ids:
+                t = self._tickets.get(tid)
+                if t is not None and t.completed:
+                    del self._tickets[tid]
+                    self._ticket_leases.pop(tid, None)
+                    pruned += 1
+            return pruned
 
     def report_error(self, ticket_id: int, error: str, client: str = "?"):
         """Paper: error report incl. stack trace is sent, browser reloads."""
@@ -117,9 +402,11 @@ class TicketQueue:
     # -- introspection -------------------------------------------------------
 
     def wait_all(self, timeout: Optional[float] = None) -> bool:
+        """Block until every ticket has a result (or ``timeout`` elapses)."""
         return self._done.wait(timeout)
 
     def results(self) -> dict[int, Any]:
+        """{ticket_id: result} for every completed ticket."""
         with self._lock:
             return {tid: t.result for tid, t in self._tickets.items()
                     if t.completed}
@@ -138,7 +425,14 @@ class TicketQueue:
                 "errors": sum(len(t.error_reports) for t in ts),
                 "redistributions": sum(max(t.distribute_count - 1, 0)
                                        for t in ts),
+                "lease_releases": self.releases,
+                "clients": {
+                    name: {"rate": s.rate, "leases": s.leases,
+                           "completed": s.completed_tickets,
+                           "failures": s.failures}
+                    for name, s in self.stats.items()},
             }
 
     def all_done(self) -> bool:
+        """True when every ticket has a result."""
         return self._done.is_set()

@@ -30,25 +30,27 @@ def _mamba_kernel(dt_ref, x_ref, b_ref, c_ref, a_ref, h0_ref, y_ref, hT_ref,
 
     @pl.when(it == 0)
     def _init():
-        state_ref[...] = h0_ref[0].astype(jnp.float32)
+        state_ref[...] = h0_ref[...][0].astype(jnp.float32)
 
     a = a_ref[...].astype(jnp.float32)                    # (BC, ds)
+    one = pl.dslice(0, 1)  # python-int indices break 0.4.x interpret mode
 
     def step(t, _):
-        dt_t = pl.load(dt_ref, (0, pl.dslice(t, 1),
-                                slice(None)))[0].astype(jnp.float32)
-        x_t = pl.load(x_ref, (0, pl.dslice(t, 1),
-                              slice(None)))[0].astype(jnp.float32)
-        b_t = pl.load(b_ref, (0, pl.dslice(t, 1),
-                              slice(None)))[0].astype(jnp.float32)
-        c_t = pl.load(c_ref, (0, pl.dslice(t, 1),
-                              slice(None)))[0].astype(jnp.float32)
+        tt = pl.dslice(t, 1)
+        dt_t = pl.load(dt_ref, (one, tt,
+                                slice(None)))[0, 0].astype(jnp.float32)
+        x_t = pl.load(x_ref, (one, tt,
+                              slice(None)))[0, 0].astype(jnp.float32)
+        b_t = pl.load(b_ref, (one, tt,
+                              slice(None)))[0, 0].astype(jnp.float32)
+        c_t = pl.load(c_ref, (one, tt,
+                              slice(None)))[0, 0].astype(jnp.float32)
         h = state_ref[...]                                # (BC, ds)
         da = jnp.exp(dt_t[:, None] * a)
         h = da * h + (dt_t * x_t)[:, None] * b_t[None, :]
         y = jnp.einsum("cs,s->c", h, c_t)
-        pl.store(y_ref, (0, pl.dslice(t, 1), slice(None)),
-                 y[None].astype(y_ref.dtype))
+        pl.store(y_ref, (one, tt, slice(None)),
+                 y[None, None].astype(y_ref.dtype))
         state_ref[...] = h
         return 0
 
@@ -56,7 +58,7 @@ def _mamba_kernel(dt_ref, x_ref, b_ref, c_ref, a_ref, h0_ref, y_ref, hT_ref,
 
     @pl.when(it == nt - 1)
     def _writeout():
-        hT_ref[0] = state_ref[...].astype(hT_ref.dtype)
+        hT_ref[...] = state_ref[...][None].astype(hT_ref.dtype)
 
 
 def mamba_scan_kernel(dt, x, b_t, c_t, a, h0, *, block_t: int = DEFAULT_BT,

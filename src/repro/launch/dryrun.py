@@ -1,3 +1,6 @@
+"""Multi-pod dry-run driver: see the usage block below (module docstring
+kept minimal because the XLA device-count flag must be set before any
+other import)."""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 # The two lines above MUST run before any other import: jax locks the device
@@ -24,7 +27,8 @@ import jax
 
 from repro.configs.base import (ARCH_IDS, INPUT_SHAPES, RunConfig,
                                 get_arch_config)
-from repro.launch.hlo_analysis import (Roofline, parse_collectives,
+from repro.launch.hlo_analysis import (Roofline, cost_analysis_dict,
+                                       parse_collectives,
                                        roofline_from_compiled)
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import build_step
@@ -32,6 +36,7 @@ from repro.models import flags
 
 
 def model_flops_for(cfg, shape) -> float:
+    """Analytic useful FLOPs (6ND train / 2ND inference) for a shape."""
     from repro.models.model import count_params_analytic
 
     n = count_params_analytic(cfg, active_only=True)
@@ -70,7 +75,7 @@ def accounting_costs(cfg, run, shape, mesh) -> dict:
         bundle = build_step(_reduced_depth(cfg, d), run, shape, mesh)
         with flags.unrolled_for_accounting():
             compiled = bundle.lower().compile()
-        cost = compiled.cost_analysis()
+        cost = cost_analysis_dict(compiled)
         coll = parse_collectives(compiled.as_text())
         samples.append({
             "flops": float(cost.get("flops", 0.0)),
@@ -105,6 +110,8 @@ def accounting_costs(cfg, run, shape, mesh) -> dict:
 def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             strategy: str | None = None, verbose: bool = True,
             accounting: bool = True) -> dict:
+    """Lower+compile one (arch, shape) combo on the production mesh and
+    return its memory/roofline record."""
     shape = INPUT_SHAPES[shape_name]
     cfg = get_arch_config(arch)
     strategy = strategy or ("split_concurrent" if shape.kind == "train"
@@ -166,6 +173,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
 
 
 def main() -> None:
+    """CLI: ``--arch/--shape`` for one combo or ``--all`` for the sweep."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)

@@ -33,6 +33,7 @@ _OP_RE = re.compile(
 
 
 def shape_bytes(type_str: str) -> int:
+    """Sum the byte size of every typed shape in an HLO type string."""
     total = 0
     for dt, dims in _SHAPE_RE.findall(type_str):
         if dt not in _DTYPE_BYTES:
@@ -47,15 +48,20 @@ def shape_bytes(type_str: str) -> int:
 
 @dataclass
 class CollectiveStats:
+    """Collective-op traffic parsed out of HLO text, bucketed by kind."""
+
     bytes_by_kind: dict = field(default_factory=dict)
     count_by_kind: dict = field(default_factory=dict)
 
     @property
     def total_bytes(self) -> int:
+        """All collective result bytes across kinds."""
         return sum(self.bytes_by_kind.values())
 
 
 def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Scan (post-SPMD) HLO text and sum result bytes per collective kind
+    (cost_analysis does not report collective traffic)."""
     stats = CollectiveStats()
     for m in _OP_RE.finditer(hlo_text):
         type_str, kind = m.group(1), m.group(2)
@@ -68,6 +74,9 @@ def parse_collectives(hlo_text: str) -> CollectiveStats:
 
 @dataclass
 class Roofline:
+    """Roofline terms for one compiled program on a ``chips``-wide fleet;
+    ``t_*`` are per-step lower-bound times against v5e peak rates."""
+
     flops: float                 # whole-program HLO FLOPs (all chips)
     hbm_bytes: float             # whole-program bytes accessed (all chips)
     collective_bytes: float      # whole-program collective result bytes
@@ -76,27 +85,34 @@ class Roofline:
 
     @property
     def t_compute(self) -> float:
+        """Seconds if compute-bound (flops / fleet peak FLOP/s)."""
         return self.flops / (self.chips * PEAK_FLOPS)
 
     @property
     def t_memory(self) -> float:
+        """Seconds if HBM-bound (bytes / fleet HBM bandwidth)."""
         return self.hbm_bytes / (self.chips * HBM_BW)
 
     @property
     def t_collective(self) -> float:
+        """Seconds if interconnect-bound (collective bytes / ICI bw)."""
         return self.collective_bytes / (self.chips * ICI_BW)
 
     @property
     def dominant(self) -> str:
+        """Which roofline term bounds the step: compute/memory/collective."""
         terms = {"compute": self.t_compute, "memory": self.t_memory,
                  "collective": self.t_collective}
         return max(terms, key=terms.get)
 
     @property
     def useful_flops_ratio(self) -> float:
+        """Analytic model FLOPs over HLO FLOPs (padding/rematerialisation
+        overhead shows up as a ratio below 1)."""
         return self.model_flops / self.flops if self.flops else 0.0
 
     def as_dict(self) -> dict:
+        """Flatten to the JSONL record emitted by the dry-run."""
         return {
             "flops": self.flops, "hbm_bytes": self.hbm_bytes,
             "collective_bytes": self.collective_bytes, "chips": self.chips,
@@ -107,9 +123,19 @@ class Roofline:
         }
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` returns a dict on recent jax but a
+    one-element list of dicts on 0.4.x; normalise to a dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def roofline_from_compiled(compiled, chips: int, *,
                            model_flops: float = 0.0) -> Roofline:
-    cost = compiled.cost_analysis()
+    """Build a :class:`Roofline` from a jax ``Compiled`` object."""
+    cost = cost_analysis_dict(compiled)
     # XLA reports per-partition numbers for SPMD modules; scale to the fleet.
     flops = float(cost.get("flops", 0.0)) * chips
     byts = float(cost.get("bytes accessed", 0.0)) * chips

@@ -43,6 +43,7 @@ def generate(api, params, prompts, *, gen: int, extra_inputs=None):
 
 
 def main():
+    """CLI entry: serve a model (prefill+decode loop) from a config id."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="rwkv6-1.6b")
     ap.add_argument("--smoke", action="store_true")

@@ -108,6 +108,7 @@ def arch_for_run(cfg: ArchConfig, shape: InputShape,
 
 
 def batch_axes(batch_spec: dict) -> dict:
+    """Logical axes for a batch tree: leading dim "batch", rest unsharded."""
     out = {}
     for k, v in batch_spec.items():
         out[k] = ("batch",) + (None,) * (len(v.shape) - 1)
@@ -129,6 +130,7 @@ _CACHE_AXES_BY_KEY = {
 
 
 def cache_axes(cache_sds: dict) -> dict:
+    """Logical axes for every decode-cache entry present in the tree."""
     return {k: _CACHE_AXES_BY_KEY[k] for k in cache_sds}
 
 
@@ -138,6 +140,7 @@ def _mirror(axes, like):
 
 
 def opt_state_axes(opt_name: str, params_axes):
+    """Optimizer-state axes tree mirroring the params' axes."""
     if opt_name == "adagrad":
         return {"acc": params_axes}
     if opt_name == "adamw":
@@ -149,6 +152,7 @@ def opt_state_axes(opt_name: str, params_axes):
 
 def train_state_axes(api, opt_name: str, strategy: str,
                      batch_spec: dict) -> TrainState:
+    """Logical-axes TrainState matching what ``init_state`` will build."""
     p_axes = axes_tree(jax.eval_shape(
         lambda: api.init(jax.random.PRNGKey(0))))
     if strategy in ("dp_full", "fsdp_tp"):
@@ -214,6 +218,7 @@ def _shardings(tree_axes, rules, mesh, tree_sds=None):
 
 def build_train_step(cfg: ArchConfig, run: RunConfig, shape: InputShape,
                      mesh, *, global_batch: int | None = None) -> StepBundle:
+    """Assemble the jit-ready training step (fn, arg shapes, shardings)."""
     cfg = arch_for_run(cfg, shape, run.strategy)
     compute_dtype = jnp.dtype(run.compute_dtype)
     api = build_model(cfg, compute_dtype=compute_dtype, remat=run.remat,
@@ -247,6 +252,7 @@ def build_train_step(cfg: ArchConfig, run: RunConfig, shape: InputShape,
 
 def build_prefill_step(cfg: ArchConfig, run: RunConfig, shape: InputShape,
                        mesh, *, global_batch: int | None = None) -> StepBundle:
+    """Assemble the jit-ready prefill step (params, batch) -> cache."""
     cfg = arch_for_run(cfg, shape, run.strategy)
     compute_dtype = jnp.dtype(run.compute_dtype)
     api = build_model(cfg, compute_dtype=compute_dtype, remat=False)
@@ -269,6 +275,7 @@ def build_prefill_step(cfg: ArchConfig, run: RunConfig, shape: InputShape,
 
 def build_decode_step(cfg: ArchConfig, run: RunConfig, shape: InputShape,
                       mesh, *, global_batch: int | None = None) -> StepBundle:
+    """Assemble the jit-ready single-token decode step."""
     cfg = arch_for_run(cfg, shape, run.strategy)
     compute_dtype = jnp.dtype(run.compute_dtype)
     api = build_model(cfg, compute_dtype=compute_dtype, remat=False)
@@ -301,6 +308,7 @@ def build_decode_step(cfg: ArchConfig, run: RunConfig, shape: InputShape,
 
 def build_step(cfg: ArchConfig, run: RunConfig, shape: InputShape, mesh,
                **kw) -> StepBundle:
+    """Dispatch to the train/prefill/decode builder by ``shape.kind``."""
     if shape.kind == "train":
         return build_train_step(cfg, run, shape, mesh, **kw)
     if shape.kind == "prefill":

@@ -31,6 +31,8 @@ from repro.sharding.spec import ShardCtx, use_shard_ctx
 
 def train_loop(cfg, run: RunConfig, *, steps: int, batch: int, seq: int,
                mesh=None, log_every: int = 10, checkpoint_path=None):
+    """Train ``cfg`` for ``steps`` on synthetic LM batches with the
+    strategy named in ``run``; returns the per-step metric history."""
     compute_dtype = jnp.dtype(run.compute_dtype)
     shape = InputShape("custom", seq, batch, "train")
     cfg = arch_for_run(cfg, shape, run.strategy)
@@ -85,6 +87,7 @@ def train_loop(cfg, run: RunConfig, *, steps: int, batch: int, seq: int,
 
 
 def main():
+    """CLI entry: train an arch config with a chosen strategy/optimizer."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-0.5b")
     ap.add_argument("--smoke", action="store_true",

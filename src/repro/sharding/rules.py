@@ -93,6 +93,8 @@ AXIS_RULES = {
 
 
 def rules_for_strategy(strategy: str, mesh_axes) -> dict:
+    """Logical-axis -> mesh-axis rule table for a strategy, filtered to
+    the axes present on ``mesh_axes``."""
     if strategy not in AXIS_RULES:
         raise KeyError(f"unknown strategy {strategy!r}; known {sorted(AXIS_RULES)}")
     return _filter(AXIS_RULES[strategy], tuple(mesh_axes))

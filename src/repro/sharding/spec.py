@@ -139,6 +139,8 @@ def spec_tree(axes: Any, rules: Mapping[str, Any], mesh=None):
 
 @dataclass
 class ShardCtx:
+    """Ambient (mesh, rules) pair consulted by :func:`shard_act`."""
+
     mesh: Any
     rules: Mapping[str, Any]
 
@@ -147,11 +149,13 @@ _tls = threading.local()
 
 
 def current_ctx() -> ShardCtx | None:
+    """The thread-local sharding context, or None outside one."""
     return getattr(_tls, "ctx", None)
 
 
 @contextlib.contextmanager
 def use_shard_ctx(ctx: ShardCtx | None):
+    """Install ``ctx`` as the ambient sharding context for the block."""
     prev = getattr(_tls, "ctx", None)
     _tls.ctx = ctx
     try:

@@ -1,0 +1,161 @@
+"""Deterministic stand-in for the tiny slice of `hypothesis` this repo uses.
+
+The container image does not ship `hypothesis` and installing packages is
+off-limits, so ``conftest.py`` registers this module under the names
+``hypothesis`` / ``hypothesis.strategies`` / ``hypothesis.extra.numpy``
+when the real library is missing.  It is NOT a property-testing engine:
+there is no shrinking and no example database.  Each ``@given`` test is
+simply run ``max_examples`` times with values drawn from a per-test
+seeded PRNG, so failures are reproducible run-to-run.
+
+Supported API (exactly what the test-suite imports):
+
+  * ``given``, ``settings(max_examples=..., deadline=...)``
+  * ``strategies.integers / floats / lists / sampled_from``
+    with ``.filter`` and ``.map``
+  * ``extra.numpy.arrays(dtype=..., shape=...)`` and ``array_shapes``
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+import numpy as np
+
+
+class Strategy:
+    """A value generator: ``draw(rng) -> value``, composable like hypothesis
+    strategies via ``.filter`` and ``.map``."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+    def filter(self, predicate) -> "Strategy":
+        def draw(rng):
+            for _ in range(10_000):
+                value = self._draw(rng)
+                if predicate(value):
+                    return value
+            raise ValueError("hypothesis shim: filter predicate rejected "
+                             "10000 consecutive draws")
+        return Strategy(draw)
+
+    def map(self, fn) -> "Strategy":
+        return Strategy(lambda rng: fn(self._draw(rng)))
+
+
+def _as_strategy(value) -> Strategy:
+    return value if isinstance(value, Strategy) else Strategy(lambda rng: value)
+
+
+# --- strategies ------------------------------------------------------------
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float, *, allow_nan: bool = False,
+           allow_infinity: bool = False) -> Strategy:
+    del allow_nan, allow_infinity  # bounded draws are always finite
+    return Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def sampled_from(elements) -> Strategy:
+    pool = list(elements)
+    return Strategy(lambda rng: pool[rng.randrange(len(pool))])
+
+
+def lists(elements: Strategy, *, min_size: int = 0,
+          max_size: int = 10) -> Strategy:
+    elements = _as_strategy(elements)
+    return Strategy(lambda rng: [elements.draw(rng) for _ in
+                                 range(rng.randint(min_size, max_size))])
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+def just(value) -> Strategy:
+    return Strategy(lambda rng: value)
+
+
+# --- decorators ------------------------------------------------------------
+
+
+def settings(*, max_examples: int = 100, deadline=None, **_ignored):
+    """Attach ``max_examples`` to the (already ``@given``-wrapped) test."""
+    def decorate(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return decorate
+
+
+def given(*arg_strategies, **kw_strategies):
+    """Run the test ``max_examples`` times with deterministic draws.
+
+    The PRNG is seeded from the test's qualified name so a failing example
+    recurs on every run (no shrinking — read the assertion values)."""
+    arg_strategies = tuple(_as_strategy(s) for s in arg_strategies)
+    kw_strategies = {k: _as_strategy(s) for k, s in kw_strategies.items()}
+
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_shim_max_examples", 100)
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                drawn = [s.draw(rng) for s in arg_strategies]
+                drawn_kw = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                fn(*args, *drawn, **kwargs, **drawn_kw)
+        # Hide the inner signature from pytest, which would otherwise treat
+        # the strategy-drawn parameters as fixtures to resolve.
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        wrapper.hypothesis_shim = True
+        return wrapper
+    return decorate
+
+
+# --- hypothesis.extra.numpy -------------------------------------------------
+
+
+def array_shapes(*, min_dims: int = 1, max_dims: int = 3, min_side: int = 1,
+                 max_side: int = 8) -> Strategy:
+    def draw(rng):
+        ndims = rng.randint(min_dims, max_dims)
+        return tuple(rng.randint(min_side, max_side) for _ in range(ndims))
+    return Strategy(draw)
+
+
+def arrays(*, dtype, shape) -> Strategy:
+    dtype_s, shape_s = _as_strategy(dtype), _as_strategy(shape)
+
+    def draw(rng):
+        dt = np.dtype(dtype_s.draw(rng))
+        shp = shape_s.draw(rng)
+        size = int(np.prod(shp)) if shp else 1
+        if dt.kind == "f":
+            # Mix ordinary values with exact powers of two and zeros so the
+            # bit-exactness property sees varied mantissas/exponents.
+            vals = [rng.choice([0.0, 1.0, -1.0, 0.5, rng.uniform(-1e4, 1e4),
+                                rng.uniform(-1.0, 1.0)]) for _ in range(size)]
+            arr = np.asarray(vals, np.float64).astype(dt)
+        elif dt.kind == "u":
+            info = np.iinfo(dt)
+            arr = np.asarray([rng.randint(0, info.max) for _ in range(size)],
+                             dt)
+        elif dt.kind == "i":
+            info = np.iinfo(dt)
+            arr = np.asarray([rng.randint(info.min, info.max)
+                              for _ in range(size)], dt)
+        else:
+            raise NotImplementedError(f"shim arrays() dtype kind {dt.kind!r}")
+        return arr.reshape(shp)
+    return Strategy(draw)

@@ -1,0 +1,456 @@
+"""Distributor v2 tests: batched leases, adaptive sizing, client-speed
+EWMA, proactive release, and the asyncio end-to-end path."""
+import asyncio
+
+import pytest
+
+from repro.core.distributor import (AdaptiveSizer, AsyncDistributor,
+                                    ClientProfile, FixedSizer, LRUCache,
+                                    TaskDef)
+from repro.core.split_parallel import (SplitConcurrentDispatcher,
+                                       adaptive_shard_sizes)
+from repro.core.tickets import ClientStats, TicketQueue
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def make_queue(timeout=300.0, redist=10.0):
+    clock = FakeClock()
+    q = TicketQueue(timeout=timeout, redistribute_min=redist, clock=clock)
+    return q, clock
+
+
+# --- lease-batch API ----------------------------------------------------
+
+
+def test_lease_batch_serves_vct_order_up_to_max():
+    q, clock = make_queue()
+    ids = [q.add("t", i) for i in range(5)]
+    batch = q.lease("c1", 3)
+    assert batch.ticket_ids == ids[:3]
+    assert batch.client == "c1"
+    batch2 = q.lease("c1", 3)
+    assert batch2.ticket_ids == ids[3:]
+
+
+def test_lease_respects_redistribute_min_throttle():
+    """No ticket is re-leased within redistribute_min of its last
+    distribution, even across differently-sized lease requests."""
+    q, clock = make_queue(redist=10.0)
+    q.add_many("t", [0, 1])
+    assert q.lease("c1", 8).ticket_ids == [0, 1]
+    clock.advance(9.9)
+    assert q.lease("c2", 8) is None          # still inside the cool-down
+    clock.advance(0.2)
+    again = q.lease("c2", 8)                 # eligible again
+    assert again is not None and again.ticket_ids == [0, 1]
+
+
+def test_duplicate_batch_results_dropped_first_wins():
+    q, clock = make_queue(redist=0.0)
+    q.add_many("t", ["a", "b"])
+    b1 = q.lease("c1", 2)
+    b2 = q.lease("c2", 2)                    # redistribution (redist=0)
+    assert b1.ticket_ids == b2.ticket_ids
+    assert q.submit_batch(b1.lease_id, {0: "r1", 1: "r1"}, "c1") == 2
+    assert q.submit_batch(b2.lease_id, {0: "r2", 1: "r2"}, "c2") == 0
+    assert q.results() == {0: "r1", 1: "r1"}
+    assert all(t.completed_by == "c1" for t in q._tickets.values())
+
+
+def test_client_dies_mid_lease_release_makes_tickets_fresh():
+    """Releasing a lease must return its unfinished tickets with
+    freshly-created VCT so another client picks them up immediately —
+    not after the five-minute timeout."""
+    q, clock = make_queue(timeout=300.0, redist=10.0)
+    q.add_many("t", [0, 1, 2, 3])
+    batch = q.lease("dying", 4)
+    clock.advance(1.0)
+    # partial progress: ticket 0 landed before the tab closed
+    q.submit_batch(batch.lease_id, {0: "ok"}, "dying")
+    assert q.release(batch.lease_id, client_failed=True) == 3
+    # released tickets are immediately eligible despite redistribute_min
+    rescue = q.lease("healthy", 8)
+    assert rescue is not None
+    assert sorted(rescue.ticket_ids) == [1, 2, 3]
+    assert q.stats["dying"].failures == 1
+    assert q.snapshot()["lease_releases"] == 1
+
+
+def test_released_tickets_sort_as_freshly_created():
+    q, clock = make_queue(timeout=300.0, redist=10.0)
+    a = q.add("t", "a")
+    clock.advance(1.0)
+    b = q.add("t", "b")
+    batch = q.lease("c1", 1)                 # takes a
+    assert batch.ticket_ids == [a]
+    q.release(batch.lease_id)
+    # a's VCT resets to its creation time (0.0) < b's (1.0) -> a first
+    again = q.lease("c2", 2)
+    assert again.ticket_ids == [a, b]
+
+
+def test_ewma_rate_tracks_completed_work_per_second():
+    q, clock = make_queue(redist=0.0)
+    q.add_many("t", list(range(4)), work=1.0)
+    b = q.lease("c1", 2)
+    clock.advance(0.5)                       # 2 units in 0.5 s -> 4/s
+    q.submit_batch(b.lease_id, {t: "r" for t in b.ticket_ids}, "c1")
+    assert q.stats["c1"].rate == pytest.approx(4.0)
+    b2 = q.lease("c1", 2)
+    clock.advance(2.0)                       # 2 units in 2 s -> 1/s sample
+    q.submit_batch(b2.lease_id, {t: "r" for t in b2.ticket_ids}, "c1")
+    # EWMA(alpha=0.3): 0.3*1 + 0.7*4 = 3.1
+    assert q.stats["c1"].rate == pytest.approx(3.1)
+
+
+def test_client_stats_observe_ewma():
+    s = ClientStats("c", alpha=0.5)
+    s.observe(10.0, 1.0)
+    assert s.rate == pytest.approx(10.0)
+    s.observe(2.0, 1.0)
+    assert s.rate == pytest.approx(6.0)
+    assert s.completed_work == 12.0
+
+
+def test_completed_tickets_counts_tickets_not_leases():
+    q, clock = make_queue(redist=0.0)
+    q.add_many("t", list(range(4)))
+    b = q.lease("c1", 4)
+    clock.advance(1.0)
+    q.submit_batch(b.lease_id, {t: "r" for t in b.ticket_ids}, "c1")
+    assert q.stats["c1"].completed_tickets == 4
+    assert q.snapshot()["clients"]["c1"]["completed"] == 4
+
+
+def test_stale_lease_gcd_when_competing_lease_wins():
+    """A ticket completed via a redistributed lease must also be dropped
+    from the older lease's outstanding set, so the watchdog never
+    'releases' a lease whose tickets are all done."""
+    q, clock = make_queue(redist=0.0)
+    q.add("t", "x")
+    a = q.lease("A", 1)
+    b = q.lease("B", 1)                      # redistribution of the same ticket
+    q.submit_batch(b.lease_id, {0: "rB"}, "B")   # B wins
+    assert q.outstanding_leases() == []      # A's stale lease GC'd too
+    assert q.submit_batch(a.lease_id, {0: "rA"}, "A") == 0
+    assert q.stats.get("A") is None or q.stats["A"].failures == 0
+
+
+def test_release_without_reset_keeps_cooldown():
+    """The error-retry path must keep the paper's redistribute_min
+    cool-down so a deterministically failing task can't hot-loop."""
+    q, clock = make_queue(redist=10.0)
+    q.add("t", 0)
+    b = q.lease("c", 1)
+    clock.advance(1.0)
+    q.release(b.lease_id, reset_vct=False)
+    assert q.lease("c2", 1) is None          # cool-down still applies
+    clock.advance(9.5)
+    assert q.lease("c2", 1) is not None
+
+
+def test_release_skips_tickets_re_leased_to_another_client():
+    """A stale lease release must not clobber a ticket an active newer
+    lease owns (no triple-distribution stampede)."""
+    q, clock = make_queue(redist=0.0)
+    q.add("t", 0)
+    a = q.lease("A", 1)
+    clock.advance(1.0)
+    b = q.lease("B", 1)                      # redistributed to B
+    assert q.release(a.lease_id) == 0        # nothing actually returned
+    t = q._tickets[0]
+    assert t.lease_id == b.lease_id          # B still owns it
+    assert t.last_distributed_at == 1.0      # VCT untouched
+
+
+def test_late_submit_after_release_still_calibrates_ewma():
+    """A slower-than-expected client whose lease was watchdog-released
+    must still get an EWMA sample from its late submit — otherwise it
+    re-probes forever."""
+    q, clock = make_queue(redist=0.0)
+    q.add_many("t", [0, 1], work=8.0)
+    b = q.lease("slow", 2)
+    q.release(b.lease_id, client_failed=True)     # watchdog fired early
+    clock.advance(2.0)
+    assert q.submit_batch(b.lease_id, {0: "r", 1: "r"}, "slow") == 2
+    assert q.stats["slow"].rate == pytest.approx(16.0 / 2.0)
+    assert q.stats["slow"].mean_ticket_work == pytest.approx(8.0)
+
+
+def test_prune_forgets_completed_rounds():
+    q, clock = make_queue(redist=0.0)
+    tids = q.add_many("t", [0, 1, 2])
+    b = q.lease("c", 3)
+    q.submit_batch(b.lease_id, {t: "r" for t in tids}, "c")
+    assert q.prune(tids) == 3
+    assert q.results() == {}
+    assert q.snapshot()["tickets"] == 0
+    assert q.all_done()
+
+
+# --- sizing policies ------------------------------------------------------
+
+
+def test_adaptive_sizer_scales_with_rate_and_clamps():
+    sizer = AdaptiveSizer(target_lease_time=0.5, min_size=1, max_size=16,
+                          probe_size=2)
+    assert sizer.lease_size(None) == 2                       # probe
+    assert sizer.lease_size(ClientStats("c", rate=8.0)) == 4
+    assert sizer.lease_size(ClientStats("c", rate=0.1)) == 1   # clamp low
+    assert sizer.lease_size(ClientStats("c", rate=1000.0)) == 16  # clamp high
+
+
+def test_fixed_sizer_ignores_stats():
+    sizer = FixedSizer(3)
+    assert sizer.lease_size(None) == 3
+    assert sizer.lease_size(ClientStats("c", rate=99.0)) == 3
+
+
+def test_adaptive_sizer_converts_work_rate_to_ticket_count():
+    """rate is work-units/s; heavy tickets must yield smaller leases and
+    a correspondingly longer ETA."""
+    stats = ClientStats("c", rate=80.0)
+    stats.completed_work, stats.completed_tickets = 80.0, 10   # 8 work/ticket
+    sizer = AdaptiveSizer(target_lease_time=0.5, max_size=64)
+    assert sizer.lease_size(stats) == 5          # 80 * 0.5 / 8
+    assert sizer.expected_duration(stats, 5) == pytest.approx(0.5)
+
+
+# --- LRU cache counters ---------------------------------------------------
+
+
+def test_lru_eviction_and_hit_miss_counters():
+    c = LRUCache(capacity=2)
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.get("a") == 1          # hit; a most-recent
+    c.put("c", 3)                   # evicts b
+    assert c.get("b") is None       # miss
+    c.put("d", 4)                   # evicts a (c was more recent? no: order a,c -> evicts a)
+    assert c.get("a") is None       # miss
+    assert c.get("c") == 3
+    assert c.get("d") == 4
+    assert c.evictions == 2
+    assert c.hits == 3
+    assert c.misses == 2
+
+
+# --- asyncio end-to-end -----------------------------------------------------
+
+
+def _run(coro):
+    return asyncio.run(coro)
+
+
+def test_async_distributor_end_to_end_heterogeneous():
+    """Bimodal clients drain the queue; the fast client ends up with a
+    higher measured rate and (eventually) bigger leases."""
+
+    async def main():
+        d = AsyncDistributor(timeout=5.0, redistribute_min=0.02,
+                             sizer=AdaptiveSizer(target_lease_time=0.02,
+                                                 max_size=16),
+                             watchdog_interval=0.005)
+        d.register_task(TaskDef("square", lambda x, _: x * x))
+        d.add_work("square", list(range(40)), work=1.0)
+        d.spawn_clients([
+            ClientProfile(name="fast", speed=4000.0),
+            ClientProfile(name="slow", speed=500.0),
+        ])
+        assert await d.run_until_done(timeout=30.0)
+        res = d.queue.results()
+        assert sorted(res) == list(range(40))
+        assert all(res[i] == i * i for i in range(40))
+        fast = d.queue.stats["fast"]
+        slow = d.queue.stats["slow"]
+        assert fast.rate > slow.rate
+        return d
+
+    d = _run(main())
+    snap = d.console()
+    assert snap["executed"] == 40
+
+
+def test_async_client_death_mid_lease_work_recovered():
+    """A v2 client that dies holding a lease must not strand its tickets:
+    the release path (plus the watchdog) hands them to survivors."""
+
+    async def main():
+        d = AsyncDistributor(timeout=5.0, redistribute_min=0.02,
+                             sizer=AdaptiveSizer(target_lease_time=0.02,
+                                                 max_size=8),
+                             watchdog_interval=0.005)
+        d.register_task(TaskDef("inc", lambda x, _: x + 1))
+        d.add_work("inc", list(range(30)))
+        d.spawn_clients([
+            ClientProfile(name="dying", speed=2000.0, die_after=1),
+            ClientProfile(name="healthy", speed=2000.0),
+        ])
+        assert await d.run_until_done(timeout=30.0)
+        return d
+
+    d = _run(main())
+    res = d.queue.results()
+    assert len(res) == 30
+    assert all(res[i] == i + 1 for i in range(30))
+    # the dying client released at least one lease back
+    assert d.queue.snapshot()["lease_releases"] >= 1
+
+
+def test_async_flaky_client_errors_reported_and_cache_reloaded():
+    async def main():
+        d = AsyncDistributor(timeout=5.0, redistribute_min=0.02,
+                             watchdog_interval=0.005)
+        d.register_task(TaskDef("echo", lambda x, _: x))
+        d.add_work("echo", list(range(20)))
+        clients = d.spawn_clients([
+            ClientProfile(name="flaky", speed=2000.0, fail_prob=0.4),
+            ClientProfile(name="ok", speed=2000.0),
+        ])
+        assert await d.run_until_done(timeout=30.0)
+        return d, clients
+
+    d, clients = _run(main())
+    assert len(d.queue.results()) == 20
+    flaky = [c for c in clients if c.profile.name == "flaky"][0]
+    assert flaky.reloads == flaky.errors
+
+
+def test_async_static_files_cached_once_per_client():
+    async def main():
+        d = AsyncDistributor(timeout=5.0, redistribute_min=0.02)
+        d.add_static("dataset", [1, 2, 3])
+        d.register_task(TaskDef("use", lambda x, s: s["dataset"][x],
+                                static_files=("dataset",)))
+        d.add_work("use", [0, 1, 2, 0, 1, 2])
+        d.spawn_clients([ClientProfile(name="c0", speed=2000.0)])
+        assert await d.run_until_done(timeout=30.0)
+        return d
+
+    d = _run(main())
+    assert d.download_count["dataset"] == 1
+
+
+def test_watchdog_rearmed_after_round_drains():
+    """A non-keep_alive distributor's watchdog self-terminates when a round
+    drains; spawning clients for a second round must arm a fresh one."""
+
+    async def main():
+        d = AsyncDistributor(timeout=5.0, redistribute_min=0.02,
+                             watchdog_interval=0.005)
+        d.register_task(TaskDef("echo", lambda x, _: x))
+        d.add_work("echo", [1, 2])
+        d.spawn_clients([ClientProfile(name="c0", speed=2000.0)])
+        # drain WITHOUT run_until_done/shutdown: the watchdog task
+        # self-terminates but stays bound (done, not None)
+        while not d.queue.all_done():
+            await asyncio.sleep(0.005)
+        for _ in range(200):
+            if d._watchdog_task.done():
+                break
+            await asyncio.sleep(0.005)
+        assert d._watchdog_task.done()
+        d.add_work("echo", [3, 4])
+        d.spawn_clients([ClientProfile(name="c1", speed=2000.0)])
+        assert not d._watchdog_task.done()      # fresh watchdog armed
+        assert await d.run_until_done(timeout=30.0)
+        return d
+
+    d = _run(main())
+    assert len(d.queue.results()) == 4
+
+
+# --- split_parallel wiring ---------------------------------------------------
+
+
+def test_adaptive_shard_sizes_proportional_and_exact():
+    sizes = adaptive_shard_sizes({"fast": 30.0, "slow": 10.0}, 8)
+    assert sizes == {"fast": 6, "slow": 2}
+    assert sum(sizes.values()) == 8
+
+
+def test_adaptive_shard_sizes_unknown_clients_get_mean_share():
+    sizes = adaptive_shard_sizes({"a": 20.0, "b": None, "c": 20.0}, 12)
+    assert sum(sizes.values()) == 12
+    assert sizes["b"] >= 1           # newcomer not starved
+    assert sizes["a"] == sizes["c"]
+
+
+def test_adaptive_shard_sizes_min_shard_floor():
+    sizes = adaptive_shard_sizes({"fast": 1000.0, "slow": 1.0}, 10,
+                                 min_shard=1)
+    assert sizes["slow"] >= 1
+    assert sum(sizes.values()) == 10
+
+
+def test_adaptive_shard_sizes_batch_smaller_than_floor_terminates():
+    """global_batch < len(rates) * min_shard must not hang: the floor is
+    dropped and some clients get zero."""
+    sizes = adaptive_shard_sizes({"a": 1.0, "b": 1.0, "c": 1.0}, 2)
+    assert sum(sizes.values()) == 2
+    assert all(v >= 0 for v in sizes.values())
+
+
+def test_split_dispatcher_round_aggregates_in_order():
+    """One §4.1 training round through the v2 scheduler: backbone shard
+    'gradients' come back ordered like the inputs."""
+
+    async def main():
+        d = AsyncDistributor(timeout=5.0, redistribute_min=0.02,
+                             sizer=AdaptiveSizer(target_lease_time=0.02))
+        d.register_task(TaskDef(
+            "backbone_shard", lambda args, _: {"grad": args["lo"]}))
+        d.spawn_clients([ClientProfile(name="c0", speed=2000.0),
+                         ClientProfile(name="c1", speed=2000.0)])
+        disp = SplitConcurrentDispatcher(d)
+        shards = [{"lo": i, "hi": i + 4} for i in range(0, 16, 4)]
+        out = await disp.run_round(shards, shard_work=[4.0] * 4,
+                                   timeout=30.0)
+        await d.shutdown()
+        return out, disp
+
+    out, disp = _run(main())
+    assert [o["grad"] for o in out] == [0, 4, 8, 12]
+    assert disp.rounds == 1
+
+
+def test_split_dispatcher_multiple_rounds_reuse_clients():
+    """Clients must survive a drained queue between training steps
+    (keep_alive): round N+1 reuses the same client pool."""
+
+    async def main():
+        d = AsyncDistributor(timeout=5.0, redistribute_min=0.02,
+                             sizer=AdaptiveSizer(target_lease_time=0.02))
+        d.register_task(TaskDef("backbone_shard",
+                                lambda args, _: args["step"] * 100 + args["i"]))
+        d.spawn_clients([ClientProfile(name="c0", speed=2000.0),
+                         ClientProfile(name="c1", speed=2000.0)])
+        disp = SplitConcurrentDispatcher(d)
+        outs = []
+        for step in range(3):
+            shards = [{"step": step, "i": i} for i in range(4)]
+            outs.append(await disp.run_round(shards, timeout=30.0))
+        await d.shutdown()
+        return outs, disp
+
+    outs, disp = _run(main())
+    assert disp.rounds == 3
+    for step, out in enumerate(outs):
+        assert out == [step * 100 + i for i in range(4)]
+
+
+def test_split_dispatcher_weighted_aggregate():
+    grads = [{"w": 1.0}, {"w": 3.0}]
+    agg = SplitConcurrentDispatcher.aggregate(grads, [1.0, 3.0])
+    # (1*1 + 3*3) / 4 = 2.5
+    assert agg["w"] == pytest.approx(2.5)
