@@ -1,0 +1,262 @@
+"""Federation fabric benchmark: 1 vs N distributors over the sharded store.
+
+Discrete-event simulation (virtual clock — runs in milliseconds, fully
+deterministic) of browser clients pulling adaptive lease batches through a
+**federation of distributors**.  Each distributor member is modelled as a
+serialized service station: every lease checkout and every batch submit
+occupies its member for ``SERVICE`` virtual seconds — the single-
+distributor lock/CPU bottleneck the ROADMAP's federation item targets.
+Ticket accounting is the REAL :class:`repro.core.shards.ShardedTicketQueue`
+(members lease home shards first and steal across the fabric when dry), so
+the benchmark exercises the same peek/checkout min-VCT merge as production.
+
+Scenarios:
+
+  * ``uniform`` / ``bimodal`` client mixes (half the clients 8x faster, the
+    paper's desktop-Chrome vs Nexus-7 situation) across 1/2/4 members;
+  * ``bimodal+death`` — a 4-member federation whose member 0 dies mid-run,
+    taking its clients and their in-flight leases with it; survivors'
+    watchdogs release the stranded tickets and steal them.
+
+Each cell reports **makespan** (virtual s until every ticket completes) and
+**aggregate throughput** (tickets/s).  The headline assertion mirrors the
+acceptance bar: a 4-member federation sustains >= 1.5x the single
+distributor's throughput on the bimodal mix, and the death run completes
+every ticket.
+
+Usage:
+  PYTHONPATH=src python benchmarks/federation_throughput.py [--json out.json]
+                                                            [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import heapq
+import itertools
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core.distributor import AdaptiveSizer
+from repro.core.shards import ShardedTicketQueue
+
+RTT = 0.05          # client <-> distributor round-trip latency (s)
+SERVICE = 0.02      # distributor service time per lease/submit request (s)
+N_TICKETS = 600
+N_CLIENTS = 16
+N_TASKS = 8         # distinct task names -> tickets spread across shards
+BASE_RATE = 10.0    # work units / s for a "slow" client
+GRACE = 3.0
+
+
+class SimClock:
+    """Injectable virtual clock (docs/ARCHITECTURE.md §Injectable clock)."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def client_mix(kind: str):
+    """[(name, work-units/s)] for the requested mix."""
+    if kind == "uniform":
+        return [(f"c{i}", BASE_RATE) for i in range(N_CLIENTS)]
+    if kind == "bimodal":
+        return [(f"fast{i}", 8 * BASE_RATE) for i in range(N_CLIENTS // 2)] \
+            + [(f"slow{i}", BASE_RATE) for i in range(N_CLIENTS // 2)]
+    raise KeyError(kind)
+
+
+def simulate(mix: str, n_members: int, *, n_tickets: int = N_TICKETS,
+             death_at: float | None = None,
+             redistribute_min: float = 0.5, timeout: float = 300.0) -> dict:
+    """One benchmark cell.  The event heap holds (time, seq, kind, client,
+    payload); lease/submit requests pass through their member's serialized
+    service station (``busy[m]``) before touching the shared queue."""
+    clock = SimClock()
+    n_shards = max(2 * n_members, 2)
+    q = ShardedTicketQueue(n_shards, timeout=timeout,
+                           redistribute_min=redistribute_min, clock=clock)
+    for task in range(N_TASKS):
+        q.add_many(f"task{task}", list(range(n_tickets // N_TASKS)),
+                   work=1.0)
+    total = (n_tickets // N_TASKS) * N_TASKS
+
+    sizer = AdaptiveSizer(target_lease_time=0.5, max_size=8)
+    home = {m: [q.shards[j] for j in range(n_shards) if j % n_members == m]
+            for m in range(n_members)}
+
+    clients = client_mix(mix)
+    member_of = {name: i % n_members for i, (name, _) in enumerate(clients)}
+    speed = dict(clients)
+    member_alive = [True] * n_members
+    client_alive = {name: True for name, _ in clients}
+    busy = [0.0] * n_members
+    steals = 0
+    stranded_at_death = 0
+    completed_at_death = None
+
+    seq = itertools.count()
+    events: list = []
+    for name, _ in clients:
+        heapq.heappush(events, (0.0, next(seq), "wake", name, None))
+    if death_at is not None:
+        heapq.heappush(events, (death_at, next(seq), "death", "", None))
+
+    makespan = None
+
+    def service(member: int, t: float) -> float:
+        """FIFO station: request arriving at ``t`` completes at
+        max(t, busy) + SERVICE."""
+        start = max(t, busy[member])
+        busy[member] = start + SERVICE
+        return busy[member]
+
+    while events:
+        t, _, kind, name, payload = heapq.heappop(events)
+        clock.t = t
+        if q.all_done():
+            makespan = makespan if makespan is not None else t
+            break
+
+        if kind == "death":
+            # member 0 dies: clients gone, in-flight leases stranded until
+            # a survivor's watchdog (the scheduled "watchdog" events,
+            # member-agnostic: any member's watchdog patrols the shared
+            # store) releases them for stealing
+            member_alive[0] = False
+            for cname, m in member_of.items():
+                if m == 0:
+                    client_alive[cname] = False
+            stranded_at_death = len(q.outstanding_leases())
+            completed_at_death = q.snapshot()["executed"]
+            continue
+
+        if name and not client_alive.get(name, False):
+            continue
+
+        if kind == "wake":
+            m = member_of[name]
+            heapq.heappush(events, (service(m, t), next(seq), "leased",
+                                    name, None))
+        elif kind == "leased":
+            m = member_of[name]
+            stats = q.stats.get(name)
+            n = sizer.lease_size(stats)
+            batch = q.lease(name, n, shards=home[m])
+            if batch is None and len(home[m]) < n_shards:
+                batch = q.lease(name, n)          # steal across the fabric
+                if batch is not None:
+                    steals += 1
+            if batch is None:
+                heapq.heappush(events, (t + redistribute_min / 4, next(seq),
+                                        "wake", name, None))
+                continue
+            eta = sizer.expected_duration(stats, len(batch.ticket_ids))
+            batch.expected_duration = eta
+            if eta is not None:
+                heapq.heappush(events,
+                               (batch.issued_at + GRACE * max(eta, 1e-3),
+                                next(seq), "watchdog", "", batch.lease_id))
+            finish = t + RTT + batch.work / speed[name]
+            heapq.heappush(events, (finish, next(seq), "finish", name,
+                                    batch))
+        elif kind == "finish":
+            m = member_of[name]
+            heapq.heappush(events, (service(m, t), next(seq), "submitted",
+                                    name, payload))
+        elif kind == "submitted":
+            batch = payload
+            q.submit_batch(batch.lease_id,
+                           {tid: tid for tid in batch.ticket_ids}, name)
+            if q.all_done():
+                makespan = t
+                break
+            heapq.heappush(events, (t, next(seq), "wake", name, None))
+        elif kind == "watchdog":
+            q.release(payload, client_failed=True)
+
+    if makespan is None:
+        makespan = clock.t
+    snap = q.snapshot()
+    out = {
+        "members": n_members,
+        "makespan_s": round(makespan, 3),
+        "throughput_tps": round(snap["executed"] / max(makespan, 1e-9), 2),
+        "completed": snap["executed"],
+        "total": total,
+        "steals": steals,
+        "lease_releases": snap["lease_releases"],
+        "redistributions": snap["redistributions"],
+    }
+    if death_at is not None:
+        out["completed_at_death"] = completed_at_death
+        out["stranded_at_death"] = stranded_at_death
+    return out
+
+
+def run_sweep(*, n_tickets: int = N_TICKETS) -> dict:
+    """All cells: {mix: {config: metrics}} plus the headline speedups."""
+    out: dict = {}
+    for mix in ("uniform", "bimodal"):
+        out[mix] = {f"fed-{n}": simulate(mix, n, n_tickets=n_tickets)
+                    for n in (1, 2, 4)}
+    # member-death scenario: kill member 0 roughly mid-run
+    death_at = 0.5 * out["bimodal"]["fed-4"]["makespan_s"]
+    out["bimodal+death"] = {
+        "fed-4-kill-m0": simulate("bimodal", 4, n_tickets=n_tickets,
+                                  death_at=death_at)}
+    bi = out["bimodal"]
+    out["speedup_4v1_bimodal"] = round(
+        bi["fed-4"]["throughput_tps"] / bi["fed-1"]["throughput_tps"], 2)
+    out["client_mix"] = {"clients": N_CLIENTS,
+                         "fast_rate": 8 * BASE_RATE, "slow_rate": BASE_RATE,
+                         "service_s": SERVICE, "rtt_s": RTT}
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, help="write results here")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced size (CI smoke)")
+    args = ap.parse_args()
+    results = run_sweep(n_tickets=200 if args.smoke else N_TICKETS)
+
+    hdr = f"{'mix':<16}{'config':<16}{'makespan(s)':>12}{'tickets/s':>11}" \
+          f"{'steals':>8}{'released':>10}{'done':>7}"
+    print(hdr)
+    print("-" * len(hdr))
+    for mix in ("uniform", "bimodal", "bimodal+death"):
+        for config, m in results[mix].items():
+            print(f"{mix:<16}{config:<16}{m['makespan_s']:>12.2f}"
+                  f"{m['throughput_tps']:>11.1f}{m['steals']:>8}"
+                  f"{m['lease_releases']:>10}{m['completed']:>7}")
+
+    speedup = results["speedup_4v1_bimodal"]
+    print(f"\nbimodal: 4-member federation sustains {speedup:.2f}x the "
+          f"single distributor's aggregate ticket throughput")
+    assert speedup >= 1.5, \
+        f"4-member federation must reach >= 1.5x single-distributor " \
+        f"throughput on the bimodal mix (got {speedup:.2f}x)"
+    death = results["bimodal+death"]["fed-4-kill-m0"]
+    assert death["completed"] == death["total"], \
+        f"member death must not lose tickets: {death}"
+    assert death["completed_at_death"] < death["total"], \
+        "death must land mid-run to prove recovery"
+    print(f"member-death run: all {death['completed']} tickets completed "
+          f"({death['completed_at_death']} done at kill time, "
+          f"{death['stranded_at_death']} leases stranded, "
+          f"{death['steals']} steals)")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,14 +1,33 @@
-"""Benchmark harness: one entry per paper table/figure + the roofline table.
+"""Benchmark harness: one entry per paper table/figure + the roofline table
+and the two virtual-clock scheduler benchmarks.
 
 Prints ``name,us_per_call,derived`` CSV rows (plus the detailed records) so
 results are machine-comparable across runs.  Scaled-down sizes run inside a
 CPU budget; pass --full for paper-scale settings.
+
+The ``scheduler`` and ``federation`` entries additionally write
+machine-readable ``BENCH_scheduler.json`` / ``BENCH_federation.json``
+(throughput, speedup, client mix) so the perf trajectory is tracked across
+PRs — CI uploads them as artifacts.  ``--out-dir`` relocates them.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
+
+OUT_DIR = "."
+
+
+def _write_json(name: str, payload: dict) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"  wrote {path}")
+    return path
 
 
 def _csv(name: str, us: float, derived: str):
@@ -84,21 +103,70 @@ def bench_roofline(full: bool):
     return rows
 
 
+def bench_scheduler(full: bool):
+    """Distributor v2 policy sweep (virtual clock, deterministic); writes
+    BENCH_scheduler.json with the per-mix makespans and the adaptive-vs-v1
+    speedup on the bimodal mix."""
+    from benchmarks import scheduler_throughput
+
+    t0 = time.perf_counter()
+    results = scheduler_throughput.run_sweep()
+    us = (time.perf_counter() - t0) * 1e6
+    bi = results["bimodal"]
+    speedup = round(bi["v1-fixed-1"]["makespan_s"]
+                    / bi["adaptive"]["makespan_s"], 2)
+    payload = {
+        "results": results,
+        "speedup_adaptive_v_fixed1_bimodal": speedup,
+        "client_mix": {"clients": scheduler_throughput.N_CLIENTS,
+                       "tickets": scheduler_throughput.N_TICKETS,
+                       "base_rate": scheduler_throughput.BASE_RATE,
+                       "rtt_s": scheduler_throughput.RTT},
+    }
+    _write_json("scheduler", payload)
+    _csv("scheduler_policies", us, f"adaptive_speedup={speedup}x")
+    return results
+
+
+def bench_federation(full: bool):
+    """Federation fabric sweep (virtual clock, deterministic); writes
+    BENCH_federation.json with per-member-count throughput, the 4v1
+    speedup, and the member-death recovery cell."""
+    from benchmarks import federation_throughput
+
+    t0 = time.perf_counter()
+    results = federation_throughput.run_sweep(
+        n_tickets=600 if full else 200)
+    us = (time.perf_counter() - t0) * 1e6
+    _write_json("federation", results)
+    death = results["bimodal+death"]["fed-4-kill-m0"]
+    _csv("federation_throughput", us,
+         f"speedup_4v1={results['speedup_4v1_bimodal']}x|"
+         f"death_completed={death['completed']}/{death['total']}")
+    return results
+
+
 BENCHES = {
     "table2": bench_table2,
     "table4": bench_table4,
     "fig3": bench_fig3,
     "fig5": bench_fig5,
     "roofline": bench_roofline,
+    "scheduler": bench_scheduler,
+    "federation": bench_federation,
 }
 
 
 def main() -> None:
+    global OUT_DIR
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, choices=list(BENCHES))
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (slow on CPU)")
+    ap.add_argument("--out-dir", default=".",
+                    help="where BENCH_*.json files land")
     args = ap.parse_args()
+    OUT_DIR = args.out_dir
     print("name,us_per_call,derived")
     names = [args.only] if args.only else list(BENCHES)
     failures = 0

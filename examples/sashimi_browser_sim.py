@@ -8,7 +8,15 @@ paper; demos 2 and 3 run on Distributor v2 (asyncio, adaptively sized
 lease batches) with a bimodal fast/slow client mix.
 
   PYTHONPATH=src python examples/sashimi_browser_sim.py
+
+``--federation`` runs the federation-fabric demo instead: a 3-member
+federation over the sharded ticket store serves two task families at
+once through per-member edge caches, member 0 is killed mid-run, and
+the survivors steal its stranded work (``--all`` runs everything).
+
+  PYTHONPATH=src python examples/sashimi_browser_sim.py --federation
 """
+import argparse
 import asyncio
 import sys
 
@@ -18,6 +26,7 @@ import numpy as np
 
 from repro.core.distributor import (AdaptiveSizer, AsyncDistributor,
                                     ClientProfile, Distributor, TaskDef)
+from repro.core.federation import FederatedDistributor
 from repro.core.project import CalculationFramework, ProjectBase, TaskBase
 from repro.core.split_parallel import SplitConcurrentDispatcher
 from repro.data import clustered_images
@@ -150,10 +159,68 @@ async def demo_split_round_v2():
           f"(max err {err:.2e})")
 
 
+async def demo_federation():
+    """The federation fabric: 3 member distributors share one sharded
+    ticket store (per-task shards, global VCT merge), a bimodal client
+    mix is routed least-loaded, task code and datasets are served through
+    per-member edge caches, and member 0 is killed mid-run — survivors'
+    watchdogs release its stranded leases and steal the work."""
+    fed = FederatedDistributor(
+        3, n_shards=6, timeout=10.0, redistribute_min=0.5,
+        sizer=AdaptiveSizer(target_lease_time=0.05, max_size=16),
+        watchdog_interval=0.01, grace=2.0,
+        project_name="FederationDemo")
+
+    fed.add_static("is_prime", is_prime)
+    fed.register_task(TaskDef(
+        "prime", lambda n, s: s["is_prime"](n), static_files=("is_prime",)))
+    fed.register_task(TaskDef("square", lambda x, _: x * x))
+    prime_tids = fed.add_work("prime", list(range(2, 402)))
+    square_tids = fed.add_work("square", list(range(200)))
+
+    fed.spawn_clients(
+        [ClientProfile(name=f"fast{i}", speed=4000.0) for i in range(3)] +
+        [ClientProfile(name=f"slow{i}", speed=500.0) for i in range(3)])
+
+    await asyncio.sleep(0.02)            # let leases get in flight
+    downed = await fed.kill_member(0)
+    ok = await fed.run_until_done(timeout=60.0)
+    assert ok, fed.console()
+
+    res = fed.queue.results()
+    primes = [n for n, tid in zip(range(2, 402), prime_tids) if res[tid]]
+    assert len(primes) == 79             # π(401)
+    assert all(res[t] == i * i for i, t in enumerate(square_tids))
+
+    con = fed.console()
+    print(f"federation: {con['executed']} tickets across 2 task families, "
+          f"{fed.queue.n_shards} shards, 3 members "
+          f"(member0 killed mid-run, {downed} clients lost)")
+    for m in con["members"]:
+        e = m["edge"]
+        print(f"  {m['name']}: alive={m['alive']} steals={m['steals']} "
+              f"edge hit-rate={e['hit_rate']:.2f} "
+              f"({e['hits']}/{e['requests']} requests served locally)")
+    print(f"  origin egress: {dict(fed.download_count)} "
+          f"(misses only — edges absorb the rest)")
+    print(f"  lease releases (watchdog rescues): {con['lease_releases']}")
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--federation", action="store_true",
+                    help="run the federation-fabric demo only")
+    ap.add_argument("--all", action="store_true",
+                    help="run every demo including the federation")
+    args = ap.parse_args()
+    if args.federation:
+        asyncio.run(demo_federation())
+        return
     demo_primes_v1()
     asyncio.run(demo_knn_v2())
     asyncio.run(demo_split_round_v2())
+    if args.all:
+        asyncio.run(demo_federation())
 
 
 if __name__ == "__main__":

@@ -11,5 +11,10 @@ Modules map to the paper as follows (see README.md for the full table):
   * ``project``        — the Project / Task programming model from the
                          paper's appendix;
   * ``split_parallel`` — §4.1 split-training strategies and the dispatcher
-                         wiring them onto the ticket scheduler.
+                         wiring them onto the ticket scheduler;
+  * ``shards``         — sharded ticket store (per-task shards, per-shard
+                         locks, global min-VCT merge — beyond-paper);
+  * ``federation``     — multi-distributor federation: home-shard members
+                         with work-stealing plus the edge cache tier in
+                         front of the origin HTTP store (beyond-paper).
 """

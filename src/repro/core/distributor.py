@@ -262,11 +262,13 @@ class AsyncDistributor(HttpServerBase):
                  sizer=None, grace: float = 3.0,
                  watchdog_interval: float = 0.05,
                  keep_alive: bool = False,
-                 project_name: str = "project"):
+                 project_name: str = "project",
+                 queue=None):
         super().__init__()
-        self.queue = TicketQueue(timeout=timeout,
-                                 redistribute_min=redistribute_min,
-                                 clock=clock)
+        # queue may be shared: a federation passes one ShardedTicketQueue
+        # (duck-type compatible) to every member distributor
+        self.queue = queue if queue is not None else TicketQueue(
+            timeout=timeout, redistribute_min=redistribute_min, clock=clock)
         self.sizer = sizer if sizer is not None else AdaptiveSizer()
         self.grace = grace
         # keep_alive: clients/watchdog survive a drained queue and wait for
@@ -323,6 +325,11 @@ class AsyncDistributor(HttpServerBase):
         self._notify_waiters()
         return tids
 
+    def _queue_lease(self, client_name: str, n: int):
+        """Queue checkout hook: a federation member overrides this to
+        prefer its home shards and steal from the rest when home drains."""
+        return self.queue.lease(client_name, n)
+
     async def lease(self, client_name: str) -> Optional[LeaseBatch]:
         """Check out the next lease for ``client_name``, sized by the
         policy.  Parks on the condition until tickets are eligible; returns
@@ -339,7 +346,7 @@ class AsyncDistributor(HttpServerBase):
             wake = self._wake_event()
             stats = self.queue.stats.get(client_name)
             n = self.sizer.lease_size(stats)
-            batch = self.queue.lease(client_name, n)
+            batch = self._queue_lease(client_name, n)
             if batch is not None:
                 # ETA from the tickets actually GRANTED (the queue may hand
                 # out fewer than requested near the end of a round)

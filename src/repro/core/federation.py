@@ -1,0 +1,296 @@
+"""Multi-distributor federation over the sharded ticket store.
+
+The paper runs ONE TicketDistributor; follow-up work from the same group
+(Hidaka et al., arXiv:1702.01846; DistML.js, arXiv:2407.01023) scales the
+server side with multiple coordinating hosts and a dedicated asset-serving
+tier.  This module is that fabric for our reproduction:
+
+  * :class:`FederationMember` — an ``AsyncDistributor`` that shares one
+    :class:`~repro.core.shards.ShardedTicketQueue` with its peers.  Each
+    member owns a set of **home shards** it serves by preference (so the
+    common case touches only its own locks) and **steals** from the rest of
+    the fabric the moment its home shards run dry — idle capacity anywhere
+    drains backlog everywhere.  Every member's watchdog patrols the
+    *shared* store, so when a member dies mid-lease its stranded tickets
+    are released by a survivor's watchdog and stolen within seconds.
+  * :class:`EdgeCache` — a read-through cache node in front of the origin
+    ``HttpServerBase``.  Clients fetch task code and static assets from
+    their member's edge; only misses reach the origin, whose existing
+    ``download_count`` ledger therefore measures exactly the miss traffic
+    (hit rate = 1 - origin fetches / edge requests).
+  * :class:`FederatedDistributor` — the façade: origin HTTP store +
+    sharded queue + N members + per-member edges, with least-loaded client
+    routing, member kill/failover for fault-injection, and a merged
+    console.
+
+``benchmarks/federation_throughput.py`` measures the payoff under a
+bimodal client mix and member failure; ``docs/ARCHITECTURE.md``
+§Federation fabric has the shard → member → origin diagram.
+"""
+from __future__ import annotations
+
+import asyncio
+import collections
+import time
+from typing import Any, Callable, Optional
+
+from repro.core.distributor import (AdaptiveSizer, AsyncDistributor,
+                                    HttpServerBase, LRUCache, TaskDef)
+from repro.core.shards import ShardedTicketQueue
+
+
+class EdgeCache:
+    """Read-through cache tier for task code and static assets.
+
+    Sits between a member's browser clients and the origin
+    ``HttpServerBase``.  Serves from an LRU store; misses fall through to
+    the origin (bumping its ``download_count`` ledger, which thereby
+    counts *origin egress*, i.e. cache misses).  The edge keeps its own
+    ``download_count`` of client-facing requests so hit rates are directly
+    measurable from the two ledgers."""
+
+    def __init__(self, origin: HttpServerBase, name: str = "edge0",
+                 capacity: int = 64):
+        self.origin = origin
+        self.name = name
+        self.cache = LRUCache(capacity)
+        self.download_count: collections.Counter = collections.Counter()
+
+    def fetch_task(self, name: str) -> TaskDef:
+        """Serve task code, read-through to the origin on a miss."""
+        key = f"task:{name}"
+        self.download_count[key] += 1
+        cached = self.cache.get(key)
+        if cached is None:
+            cached = self.origin.fetch_task(name)
+            self.cache.put(key, cached)
+        return cached
+
+    def serve_static(self, key: str):
+        """Serve a static asset, read-through to the origin on a miss."""
+        self.download_count[key] += 1
+        # "static:" namespace so an asset literally named "task:<x>" can't
+        # collide with task <x>'s code (same split BrowserNodeBase uses)
+        cached = self.cache.get(f"static:{key}")
+        if cached is None:
+            cached = self.origin.serve_static(key)
+            self.cache.put(f"static:{key}", cached)
+        return cached
+
+    def clear(self):
+        """Drop the edge's store (node restart); next requests re-warm
+        from the origin."""
+        self.cache.clear()
+
+    def stats(self) -> dict:
+        """Requests/hits/misses/hit-rate counters for the console."""
+        requests = sum(self.download_count.values())
+        return {
+            "name": self.name,
+            "requests": requests,
+            "hits": self.cache.hits,
+            "misses": self.cache.misses,
+            "evictions": self.cache.evictions,
+            "hit_rate": (self.cache.hits / requests) if requests else 0.0,
+        }
+
+
+class FederationMember(AsyncDistributor):
+    """One distributor in the federation: home-shard affinity, work
+    stealing, and edge-cached asset serving.
+
+    The member leases from its ``home_shards`` first (touching only those
+    shards' locks — the common, contention-free case).  When home is dry
+    it re-merges across the WHOLE fabric, stealing whatever ticket is
+    globally next by VCT; ``steals`` counts those rescues."""
+
+    def __init__(self, federation: "FederatedDistributor", index: int,
+                 home_shards, edge: EdgeCache, **kw):
+        super().__init__(queue=federation.queue, **kw)
+        self.federation = federation
+        self.index = index
+        self.home_shards = list(home_shards)
+        self.edge = edge
+        self.alive = True
+        self.steals = 0
+
+    def _queue_lease(self, client_name: str, n: int):
+        """Home shards first; steal across the fabric when home is dry."""
+        batch = None
+        if self.home_shards:
+            batch = self.queue.lease(client_name, n,
+                                     shards=self.home_shards)
+        if batch is None and len(self.home_shards) < self.queue.n_shards:
+            batch = self.queue.lease(client_name, n)
+            if batch is not None:
+                self.steals += 1
+        return batch
+
+    # clients of this member fetch assets through its edge, not the origin
+    def fetch_task(self, name: str) -> TaskDef:
+        return self.edge.fetch_task(name)
+
+    def serve_static(self, key: str):
+        return self.edge.serve_static(key)
+
+    def _notify_waiters(self):
+        """A submit/release/add anywhere may unblock a peer's parked
+        clients (stealing) — broadcast through the federation."""
+        self.federation._notify_all()
+
+
+class FederatedDistributor(HttpServerBase):
+    """N federated distributors + sharded queue + edge tier, one façade.
+
+    Duck-type compatible with ``AsyncDistributor`` where it matters
+    (``add_work`` / ``spawn_clients`` / ``run_until_done`` / ``shutdown``
+    / ``console`` / ``queue``), so ``SplitConcurrentDispatcher`` and the
+    examples can swap it in.  Itself the *origin* HTTP store: tasks and
+    static assets registered here are served to clients through each
+    member's :class:`EdgeCache`.
+    """
+
+    def __init__(self, n_members: int = 2, *, n_shards: Optional[int] = None,
+                 timeout: float = 300.0, redistribute_min: float = 10.0,
+                 clock: Callable[[], float] = time.monotonic,
+                 sizer=None, grace: float = 3.0,
+                 watchdog_interval: float = 0.05,
+                 edge_capacity: int = 64,
+                 keep_alive: bool = False,
+                 project_name: str = "federation"):
+        super().__init__()
+        if n_members < 1:
+            raise ValueError(f"n_members must be >= 1, got {n_members}")
+        if n_shards is not None and n_shards < n_members:
+            # fewer shards than members would leave some members with no
+            # home shards — every one of their leases would count as a
+            # "steal" and home affinity would silently vanish
+            raise ValueError(
+                f"n_shards ({n_shards}) must be >= n_members ({n_members})")
+        self.project_name = project_name
+        self.queue = ShardedTicketQueue(
+            n_shards if n_shards is not None else max(n_members, 2),
+            timeout=timeout, redistribute_min=redistribute_min, clock=clock)
+        sizer = sizer if sizer is not None else AdaptiveSizer()
+        self.members: list[FederationMember] = []
+        for i in range(n_members):
+            home = [self.queue.shards[j]
+                    for j in range(self.queue.n_shards)
+                    if j % n_members == i]
+            edge = EdgeCache(self, name=f"edge{i}", capacity=edge_capacity)
+            self.members.append(FederationMember(
+                self, i, home, edge,
+                timeout=timeout, redistribute_min=redistribute_min,
+                clock=clock, sizer=sizer, grace=grace,
+                watchdog_interval=watchdog_interval,
+                keep_alive=keep_alive,
+                project_name=f"{project_name}/member{i}"))
+        self._wake: Optional[asyncio.Event] = None
+
+    # -- keep_alive fans out (SplitConcurrentDispatcher sets it) -------------
+
+    @property
+    def keep_alive(self) -> bool:
+        return all(m.keep_alive for m in self.members)
+
+    @keep_alive.setter
+    def keep_alive(self, value: bool):
+        for m in self.members:
+            m.keep_alive = value
+
+    # -- wake-event fabric ----------------------------------------------------
+
+    _wait_on = staticmethod(AsyncDistributor._wait_on)
+
+    def _wake_event(self) -> asyncio.Event:
+        if self._wake is None:
+            self._wake = asyncio.Event()
+        return self._wake
+
+    def _notify_all(self):
+        """Wake every member's parked clients and the federation's own
+        waiters (run_until_done / dispatcher rounds)."""
+        for m in self.members:
+            AsyncDistributor._notify_waiters(m)   # base impl, no re-entry
+        ev = self._wake
+        self._wake = asyncio.Event()
+        if ev is not None:
+            ev.set()
+
+    # -- producer / client management -----------------------------------------
+
+    def add_work(self, task_name: str, args_list, *,
+                 work: float = 1.0) -> list[int]:
+        """Enqueue tickets on the owning shard; wakes the whole fabric."""
+        tids = self.queue.add_many(task_name, args_list, work=work)
+        for m in self.members:
+            m._work_added = True
+        self._notify_all()
+        return tids
+
+    def alive_members(self) -> list[FederationMember]:
+        """Members still serving clients."""
+        return [m for m in self.members if m.alive]
+
+    def spawn_clients(self, profiles, *, member: Optional[int] = None):
+        """Attach clients to members.  Default policy is least-loaded:
+        each profile goes to the alive member currently serving the fewest
+        clients.  ``member=`` pins the whole batch to one member."""
+        spawned = []
+        for p in profiles:
+            if member is not None:
+                target = self.members[member]
+                if not target.alive:
+                    raise RuntimeError(f"member{member} is dead")
+            else:
+                target = min(
+                    self.alive_members(),
+                    key=lambda m: (sum(1 for c in m.clients if not c.done),
+                                   m.index))
+            spawned.extend(target.spawn_clients([p]))
+        return spawned
+
+    async def kill_member(self, index: int) -> int:
+        """Fault injection: member ``index`` dies — its clients and
+        watchdog are cancelled mid-flight, WITHOUT releasing its leases.
+        Survivors' watchdogs patrol the shared store, so the dead member's
+        stranded tickets come back at ``grace × ETA`` and get stolen.
+        Returns how many clients went down with it."""
+        m = self.members[index]
+        m.alive = False
+        n = len(m._client_tasks)
+        await m.shutdown()
+        self._notify_all()
+        return n
+
+    # drive-until-drained loop reused verbatim: the façade exposes the same
+    # _wake_event/_wait_on/queue/shutdown surface the loop needs, and one
+    # copy means a fix to its lost-wakeup handling reaches both classes
+    run_until_done = AsyncDistributor.run_until_done
+
+    async def shutdown(self):
+        """Shut down every member (dead ones are a no-op)."""
+        for m in self.members:
+            await m.shutdown()
+
+    # -- introspection ---------------------------------------------------------
+
+    def client_rates(self) -> dict:
+        """{client: EWMA work-units/s} across the whole fabric — feed for
+        ``split_parallel.adaptive_shard_sizes``."""
+        return {name: s.rate for name, s in self.queue.stats.items()}
+
+    def console(self) -> dict:
+        """Merged control console: global queue counters plus per-member
+        client/steal/edge views."""
+        snap = self.queue.snapshot()
+        snap["project"] = self.project_name
+        snap["members"] = [
+            {"name": f"member{m.index}", "alive": m.alive,
+             "steals": m.steals, "home_shards": len(m.home_shards),
+             "clients": [{"name": c.profile.name, "executed": c.executed,
+                          "errors": c.errors, "alive": not c.done}
+                         for c in m.clients],
+             "edge": m.edge.stats()}
+            for m in self.members]
+        return snap

@@ -173,12 +173,26 @@ class TicketQueue:
     def add_many(self, task_name: str, args_list, *,
                  work=1.0) -> list[int]:
         """Enqueue one ticket per element of ``args_list``; ``work`` is a
-        scalar applied to all, or a per-ticket sequence."""
+        scalar applied to all, or a per-ticket sequence.
+
+        One locked bulk insert — the whole batch lands atomically, so a
+        consumer can never lease the front of a batch while a producer is
+        still appending its tail."""
         args_list = list(args_list)
         works = (list(work) if isinstance(work, (list, tuple))
                  else [work] * len(args_list))
-        return [self.add(task_name, a, work=w)
-                for a, w in zip(args_list, works)]
+        if not args_list:
+            return []
+        with self._lock:
+            now = self.clock()
+            tids = []
+            for a, w in zip(args_list, works):
+                tid = next(self._ids)
+                self._tickets[tid] = Ticket(tid, task_name, a, now, work=w)
+                tids.append(tid)
+            self._incomplete += len(tids)
+            self._done.clear()
+            return tids
 
     # -- selection core ------------------------------------------------------
 
@@ -198,6 +212,21 @@ class TicketQueue:
             best = min(eligible, default=None)
             return [best[2]] if best is not None else []
         return [t for _, _, t in heapq.nsmallest(limit, eligible)]
+
+    def peek_eligible(self, limit: int,
+                      now: Optional[float] = None) -> list[tuple]:
+        """Up to ``limit`` eligible tickets as ``(vct, ticket_id)`` pairs in
+        ascending-VCT order, *without* checking anything out.
+
+        The queue-of-queues merge (``ShardedTicketQueue``) peeks every
+        shard's head, merges globally, and then checks out the winners with
+        :meth:`lease_tickets` — the two-step protocol that preserves the
+        paper's global ascending-VCT rule across shards."""
+        if now is None:
+            now = self.clock()
+        with self._lock:
+            return [(t.virtual_created_time(self.timeout), t.ticket_id)
+                    for t in self._eligible_sorted(now, limit)]
 
     # -- distributor side, v1 single-ticket API ------------------------------
 
@@ -257,27 +286,71 @@ class TicketQueue:
             picked = self._eligible_sorted(now, max_tickets)
             if not picked:
                 return None
-            lease_id = next(self._lease_ids)
-            copies = []
-            for t in picked:
-                t.distribute_count += 1
-                t.last_distributed_at = now
-                t.lease_id = lease_id
-                self._ticket_leases.setdefault(t.ticket_id,
-                                               set()).add(lease_id)
-                copies.append(t._copy_for_client())
-            batch = LeaseBatch(lease_id, client, copies, now,
-                               expected_duration=expected_duration)
-            self._leases[lease_id] = batch
-            self._lease_outstanding[lease_id] = {t.ticket_id for t in picked}
+            return self._checkout_locked(picked, client,
+                                         next(self._lease_ids), now,
+                                         expected_duration, observe=True)
+
+    def _checkout_locked(self, picked: list[Ticket], client: str,
+                         lease_id: int, now: float,
+                         expected_duration: Optional[float],
+                         observe: bool) -> LeaseBatch:
+        """Hand out ``picked`` tickets as one lease (caller holds the lock).
+        ``observe=False`` skips the per-client lease counter — the sharded
+        queue books stats once globally, not once per member shard."""
+        copies = []
+        for t in picked:
+            t.distribute_count += 1
+            t.last_distributed_at = now
+            t.lease_id = lease_id
+            self._ticket_leases.setdefault(t.ticket_id, set()).add(lease_id)
+            copies.append(t._copy_for_client())
+        batch = LeaseBatch(lease_id, client, copies, now,
+                           expected_duration=expected_duration)
+        self._leases[lease_id] = batch
+        self._lease_outstanding[lease_id] = {t.ticket_id for t in picked}
+        if observe:
             self.stats.setdefault(client, ClientStats(client)).leases += 1
-            return batch
+        return batch
+
+    def lease_tickets(self, client: str, ticket_ids, *, lease_id: int,
+                      now: Optional[float] = None,
+                      expected_duration: Optional[float] = None,
+                      observe: bool = True) -> Optional[LeaseBatch]:
+        """Check out *specific* tickets (by id) under an externally supplied
+        ``lease_id`` — the sharded queue's half of the peek/checkout
+        protocol.  Tickets that have meanwhile completed or slipped back
+        into their cool-down are silently skipped (another client raced us
+        between peek and checkout); returns None when nothing survives."""
+        if now is None:
+            now = self.clock()
+        with self._lock:
+            picked = []
+            for tid in ticket_ids:
+                t = self._tickets.get(tid)
+                if (t is not None and not t.completed
+                        and (t.distribute_count == 0
+                             or now - t.last_distributed_at
+                             >= self.redistribute_min)):
+                    picked.append(t)
+            if not picked:
+                return None
+            return self._checkout_locked(picked, client, lease_id, now,
+                                         expected_duration, observe)
 
     def submit_batch(self, lease_id: int, results: dict,
                      client: str = "?") -> int:
         """Record results for a lease ({ticket_id: result}); updates the
         client's EWMA throughput.  Returns how many results were accepted
         (duplicates from racing redistributed leases are dropped)."""
+        return self.submit_batch_ex(lease_id, results, client)[0]
+
+    def submit_batch_ex(self, lease_id: int, results: dict,
+                        client: str = "?", *,
+                        observe: bool = True) -> tuple[int, float]:
+        """:meth:`submit_batch` returning ``(accepted, accepted_work)``.
+        ``observe=False`` skips the EWMA update — the sharded queue submits
+        a lease's results shard by shard but must fold exactly ONE
+        (full-work, full-duration) sample into the client's rate."""
         now = self.clock()
         with self._lock:
             # grab the batch first: _submit_locked GCs drained leases; a
@@ -291,11 +364,12 @@ class TicketQueue:
                 if t is not None and not t.completed:
                     accepted_work += t.work
                     accepted += self._submit_locked(tid, result, client)
-            stats = self.stats.setdefault(client, ClientStats(client))
-            if batch is not None and accepted:
-                stats.observe(accepted_work, now - batch.issued_at,
-                              tickets=accepted)
-            return accepted
+            if observe:
+                stats = self.stats.setdefault(client, ClientStats(client))
+                if batch is not None and accepted:
+                    stats.observe(accepted_work, now - batch.issued_at,
+                                  tickets=accepted)
+            return accepted, accepted_work
 
     def release(self, lease_id: int, *, client_failed: bool = False,
                 reset_vct: bool = True) -> int:
@@ -364,6 +438,13 @@ class TicketQueue:
         with self._lock:
             return [b for lid, b in self._leases.items()
                     if self._lease_outstanding.get(lid)]
+
+    def lease_is_outstanding(self, lease_id: int) -> bool:
+        """True while the lease still has unfinished, unreleased tickets
+        in THIS queue (the sharded queue polls its member shards to decide
+        when a cross-shard lease has fully drained)."""
+        with self._lock:
+            return bool(self._lease_outstanding.get(lease_id))
 
     def results_for(self, ticket_ids) -> Optional[list]:
         """Results for exactly ``ticket_ids`` (in order), or None if any is

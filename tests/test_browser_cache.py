@@ -1,0 +1,144 @@
+"""Browser-node cache-path tests (the paper's §2.1.2 in-browser LRU GC):
+eviction order, read-through hit/miss accounting against the
+``download_count`` ledger, and the reload-on-error re-download path."""
+from repro.core.distributor import (BrowserNodeBase, ClientProfile,
+                                    Distributor, LRUCache, TaskDef)
+
+
+class Node(BrowserNodeBase):
+    """Bare browser-node state, no thread/loop — drives the cache helpers
+    deterministically."""
+
+    def __init__(self, distributor, profile):
+        self._init_browser(distributor, profile)
+
+
+def make_node(cache_capacity=16):
+    d = Distributor(timeout=2.0, redistribute_min=0.01)
+    n = Node(d, ClientProfile(name="node", cache_capacity=cache_capacity))
+    return d, n
+
+
+# --- LRUCache eviction order -------------------------------------------------
+
+
+def test_lru_eviction_follows_exact_recency_order():
+    c = LRUCache(capacity=3)
+    for k in ("a", "b", "c"):
+        c.put(k, k.upper())
+    c.get("a")                     # recency now: b, c, a
+    c.put("d", "D")                # evicts b (least recent)
+    assert c.get("b") is None
+    c.get("c")                     # recency now: a, d, c
+    c.put("e", "E")                # evicts a
+    assert c.get("a") is None
+    assert c.get("c") == "C" and c.get("d") == "D" and c.get("e") == "E"
+    assert c.evictions == 2
+
+
+def test_lru_put_refreshes_recency_not_just_get():
+    c = LRUCache(capacity=2)
+    c.put("a", 1)
+    c.put("b", 2)
+    c.put("a", 10)                 # refresh a -> b is now least recent
+    c.put("c", 3)                  # evicts b
+    assert c.get("b") is None
+    assert c.get("a") == 10
+
+
+def test_lru_zero_capacity_caches_nothing():
+    c = LRUCache(capacity=0)
+    c.put("a", 1)
+    assert c.get("a") is None
+    assert c.evictions == 1
+
+
+# --- read-through _get_task / _get_static vs the download ledger -------------
+
+
+def test_get_task_read_through_downloads_once():
+    d, n = make_node()
+    d.register_task(TaskDef("t", lambda x, _: x))
+    for _ in range(5):
+        assert n._get_task("t").name == "t"
+    assert d.download_count["task:t"] == 1          # one miss, four hits
+    assert n.cache.hits == 4 and n.cache.misses == 1
+
+
+def test_get_static_hit_miss_counts_match_download_ledger():
+    d, n = make_node()
+    d.add_static("ds1", [1])
+    d.add_static("ds2", [2])
+    task = TaskDef("t", lambda x, _: x, static_files=("ds1", "ds2"))
+    d.register_task(task)
+    for _ in range(3):
+        data = n._get_static(task)
+        assert data == {"ds1": [1], "ds2": [2]}
+    # each asset crossed the wire exactly once; the other 2 rounds hit
+    assert d.download_count["ds1"] == 1
+    assert d.download_count["ds2"] == 1
+    assert n.cache.misses == 2 and n.cache.hits == 4
+
+
+def test_get_static_eviction_pressure_redownloads():
+    """A cache smaller than the task's working set thrashes: every round
+    re-downloads, and the ledger shows it."""
+    d, n = make_node(cache_capacity=1)
+    d.add_static("big1", "x")
+    d.add_static("big2", "y")
+    task = TaskDef("t", lambda x, _: x, static_files=("big1", "big2"))
+    d.register_task(task)
+    for _ in range(3):
+        n._get_static(task)
+    # capacity 1 can't hold both: big1 evicted by big2 every round
+    assert d.download_count["big1"] == 3
+    assert d.download_count["big2"] == 3
+    assert n.cache.evictions >= 5
+
+
+# --- reload-on-error: cache cleared, assets re-downloaded --------------------
+
+
+def test_reload_clears_cache_and_redownloads():
+    """Paper: on error the browser reloads itself — the cache empties and
+    the next ticket re-fetches code and data from the server."""
+    d, n = make_node()
+    d.add_static("ds", [1, 2, 3])
+    task = TaskDef("t", lambda x, _: x, static_files=("ds",))
+    d.register_task(task)
+    n._get_task("t")
+    n._get_static(task)
+    assert d.download_count["task:t"] == 1
+    assert d.download_count["ds"] == 1
+    n._reload()                    # the error path
+    assert n.reloads == 1
+    n._get_task("t")
+    n._get_static(task)
+    assert d.download_count["task:t"] == 2          # re-downloaded
+    assert d.download_count["ds"] == 2
+
+
+def test_reload_on_error_end_to_end_redownload():
+    """Integration: a task that fails once forces a reload; the ledger
+    shows the static asset downloaded twice by the erroring client."""
+    d = Distributor(timeout=2.0, redistribute_min=0.01)
+    d.add_static("ds", 7)
+    calls = {"n": 0}
+
+    def flaky_once(x, static):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("boom")
+        return static["ds"] + x
+
+    d.register_task(TaskDef("flaky", flaky_once, static_files=("ds",)))
+    d.queue.add_many("flaky", [1, 2])
+    clients = d.spawn_clients([ClientProfile(name="solo")])
+    assert d.queue.wait_all(timeout=10)
+    d.shutdown()
+    res = d.queue.results()
+    assert sorted(res.values()) == [8, 9]
+    c = clients[0]
+    assert c.errors == 1 and c.reloads == 1
+    # downloaded once before the error, once after the reload
+    assert d.download_count["ds"] == 2

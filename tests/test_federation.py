@@ -1,0 +1,273 @@
+"""Federation fabric tests: multi-distributor members over the shared
+sharded store, work-stealing, member death/failover, the edge cache tier,
+and SplitConcurrentDispatcher riding on a federation."""
+import asyncio
+
+import pytest
+
+from repro.core.distributor import (AdaptiveSizer, ClientProfile,
+                                    HttpServerBase, TaskDef)
+from repro.core.federation import (EdgeCache, FederatedDistributor,
+                                   FederationMember)
+from repro.core.shards import shard_index
+from repro.core.split_parallel import SplitConcurrentDispatcher
+
+
+def _run(coro):
+    return asyncio.run(coro)
+
+
+def make_fed(n_members=2, **kw):
+    kw.setdefault("timeout", 5.0)
+    kw.setdefault("redistribute_min", 0.02)
+    kw.setdefault("sizer", AdaptiveSizer(target_lease_time=0.02, max_size=8))
+    kw.setdefault("watchdog_interval", 0.005)
+    return FederatedDistributor(n_members, **kw)
+
+
+# --- EdgeCache unit ---------------------------------------------------------
+
+
+def test_edge_cache_read_through_and_hit_rate():
+    origin = HttpServerBase()
+    origin.add_static("ds", [1, 2, 3])
+    origin.register_task(TaskDef("t", lambda x, _: x))
+    edge = EdgeCache(origin, name="edge0", capacity=4)
+    for _ in range(4):
+        assert edge.serve_static("ds") == [1, 2, 3]
+        assert edge.fetch_task("t").name == "t"
+    # origin saw exactly ONE download per asset (the misses); the edge's
+    # own ledger counts every client-facing request
+    assert origin.download_count["ds"] == 1
+    assert origin.download_count["task:t"] == 1
+    assert edge.download_count["ds"] == 4
+    s = edge.stats()
+    assert s["requests"] == 8 and s["hits"] == 6 and s["misses"] == 2
+    assert s["hit_rate"] == pytest.approx(6 / 8)
+
+
+def test_edge_cache_task_and_static_namespaces_do_not_collide():
+    """A static asset literally named 'task:<x>' must not poison task
+    <x>'s cached code (and vice versa)."""
+    origin = HttpServerBase()
+    origin.add_static("task:t", "dataset-blob")
+    origin.register_task(TaskDef("t", lambda x, _: x))
+    edge = EdgeCache(origin, capacity=8)
+    assert edge.serve_static("task:t") == "dataset-blob"
+    assert edge.fetch_task("t").name == "t"
+    assert edge.serve_static("task:t") == "dataset-blob"   # still the asset
+
+
+def test_fewer_shards_than_members_rejected():
+    with pytest.raises(ValueError):
+        FederatedDistributor(4, n_shards=2)
+
+
+def test_edge_cache_clear_rewarns_from_origin():
+    origin = HttpServerBase()
+    origin.add_static("ds", "blob")
+    edge = EdgeCache(origin, capacity=4)
+    edge.serve_static("ds")
+    edge.clear()                       # edge node restart
+    edge.serve_static("ds")
+    assert origin.download_count["ds"] == 2
+
+
+def test_edge_cache_lru_eviction_bounds_store():
+    origin = HttpServerBase()
+    for i in range(3):
+        origin.add_static(f"k{i}", i)
+    edge = EdgeCache(origin, capacity=2)
+    for i in range(3):
+        edge.serve_static(f"k{i}")     # k0 evicted when k2 lands
+    edge.serve_static("k0")            # miss -> origin again
+    assert origin.download_count["k0"] == 2
+    assert edge.cache.evictions >= 1
+
+
+# --- federation end-to-end --------------------------------------------------
+
+
+def test_federated_end_to_end_multi_task_results_correct():
+    async def main():
+        fed = make_fed(2, n_shards=4)
+        fed.register_task(TaskDef("square", lambda x, _: x * x))
+        fed.register_task(TaskDef("neg", lambda x, _: -x))
+        t_sq = fed.add_work("square", list(range(20)))
+        t_ng = fed.add_work("neg", list(range(20)))
+        fed.spawn_clients([ClientProfile(name=f"c{i}", speed=2000.0)
+                           for i in range(4)])
+        assert await fed.run_until_done(timeout=30.0)
+        return fed, t_sq, t_ng
+
+    fed, t_sq, t_ng = _run(main())
+    res = fed.queue.results()
+    assert [res[t] for t in t_sq] == [i * i for i in range(20)]
+    assert [res[t] for t in t_ng] == [-i for i in range(20)]
+    con = fed.console()
+    assert con["executed"] == 40
+    assert len(con["members"]) == 2
+
+
+def test_least_loaded_spawn_balances_members():
+    async def main():
+        fed = make_fed(3)
+        fed.register_task(TaskDef("echo", lambda x, _: x))
+        fed.add_work("echo", list(range(6)))
+        fed.spawn_clients([ClientProfile(name=f"c{i}", speed=2000.0)
+                           for i in range(5)])
+        counts = sorted(len(m.clients) for m in fed.members)
+        assert counts == [1, 2, 2]
+        assert await fed.run_until_done(timeout=30.0)
+
+    _run(main())
+
+
+def test_static_assets_served_through_member_edges():
+    """Each member's edge fetches an asset from the origin at most once;
+    every further client request is an edge hit."""
+    async def main():
+        fed = make_fed(2, n_shards=4)
+        fed.add_static("dataset", [1, 2, 3])
+        fed.register_task(TaskDef("use", lambda x, s: s["dataset"][x],
+                                  static_files=("dataset",)))
+        fed.add_work("use", [0, 1, 2] * 6)
+        # two clients per member -> each edge serves two browsers
+        fed.spawn_clients([ClientProfile(name=f"c{i}", speed=2000.0,
+                                         cache_capacity=0)
+                           for i in range(4)])
+        assert await fed.run_until_done(timeout=30.0)
+        return fed
+
+    fed = _run(main())
+    # origin egress = edge misses: at most one per member edge
+    assert 1 <= fed.download_count["dataset"] <= 2
+    edge_requests = sum(m.edge.download_count["dataset"]
+                       for m in fed.members)
+    assert edge_requests > fed.download_count["dataset"]
+    for m in fed.members:
+        if m.edge.download_count["dataset"]:
+            assert m.edge.stats()["hit_rate"] > 0
+
+
+def test_work_stealing_when_home_shards_dry():
+    """All work lands on ONE member's home shard; the other member's
+    clients must steal it through the global merge."""
+    async def main():
+        fed = make_fed(2, n_shards=2)
+        # find a task living on member 0's home shard
+        task = next(f"task{i}" for i in range(64)
+                    if shard_index(f"task{i}", 2) % 2 == 0)
+        fed.register_task(TaskDef(task, lambda x, _: x + 1))
+        fed.add_work(task, list(range(30)))
+        # clients ONLY on member 1, whose home shard owns nothing
+        fed.spawn_clients([ClientProfile(name="thief0", speed=2000.0),
+                           ClientProfile(name="thief1", speed=2000.0)],
+                          member=1)
+        assert await fed.run_until_done(timeout=30.0)
+        return fed
+
+    fed = _run(main())
+    assert len(fed.queue.results()) == 30
+    assert fed.members[1].steals >= 1
+    assert fed.members[0].steals == 0
+
+
+def test_member_death_leases_recovered_by_survivors():
+    """Killing a member strands its clients' leases; a survivor's
+    watchdog patrols the SHARED store, releases them, and the survivor's
+    clients steal the tickets — every ticket still completes."""
+    async def main():
+        # redistribute_min is LONG here so the paper's passive cool-down
+        # path can't rescue the tickets first — recovery must come from a
+        # survivor's watchdog releasing the stranded lease
+        fed = make_fed(2, n_shards=4, grace=2.0, redistribute_min=1.0)
+        fed.register_task(TaskDef("inc", lambda x, _: x + 1))
+        fed.add_work("inc", list(range(40)))
+        # member 0's client is slow enough to be mid-lease when killed
+        fed.spawn_clients([ClientProfile(name="victim", speed=50.0)],
+                          member=0)
+        fed.spawn_clients([ClientProfile(name="survivor", speed=2000.0)],
+                          member=1)
+        await asyncio.sleep(0.01)          # let the victim take a lease
+        n_down = await fed.kill_member(0)
+        assert n_down >= 1
+        assert await fed.run_until_done(timeout=30.0)
+        return fed
+
+    fed = _run(main())
+    res = fed.queue.results()
+    assert len(res) == 40
+    assert all(res[i] == i + 1 for i in range(40))
+    con = fed.console()
+    assert con["members"][0]["alive"] is False
+    # the victim's stranded lease was proactively released
+    assert con["lease_releases"] >= 1
+    # spawning on a dead member is refused
+    with pytest.raises(RuntimeError):
+        fed.spawn_clients([ClientProfile(name="late")], member=0)
+
+
+def test_keep_alive_fans_out_to_members():
+    fed = make_fed(2)
+    assert fed.keep_alive is False
+    fed.keep_alive = True
+    assert all(m.keep_alive for m in fed.members)
+    assert fed.keep_alive is True
+
+
+def test_client_rates_feed_adaptive_shard_sizes():
+    from repro.core.split_parallel import adaptive_shard_sizes
+
+    async def main():
+        fed = make_fed(2)
+        fed.register_task(TaskDef("work", lambda x, _: x))
+        fed.add_work("work", list(range(30)), work=1.0)
+        fed.spawn_clients([ClientProfile(name="fast", speed=4000.0),
+                           ClientProfile(name="slow", speed=400.0)])
+        assert await fed.run_until_done(timeout=30.0)
+        return fed
+
+    fed = _run(main())
+    rates = fed.client_rates()
+    assert rates["fast"] > rates["slow"]
+    sizes = adaptive_shard_sizes(rates, 16)
+    assert sum(sizes.values()) == 16
+    assert sizes["fast"] > sizes["slow"]
+
+
+def test_split_dispatcher_rides_federation():
+    """§4.1 training rounds run unchanged over a federation: the
+    dispatcher only needs the AsyncDistributor duck-type surface."""
+    async def main():
+        fed = make_fed(2, n_shards=4)
+        fed.register_task(TaskDef(
+            "backbone_shard", lambda args, _: {"grad": args["lo"]}))
+        fed.spawn_clients([ClientProfile(name=f"c{i}", speed=2000.0)
+                           for i in range(4)])
+        disp = SplitConcurrentDispatcher(fed)
+        outs = []
+        for step in range(3):
+            shards = [{"lo": step * 100 + i, "hi": 0} for i in range(6)]
+            outs.append(await disp.run_round(shards, timeout=30.0))
+        await fed.shutdown()
+        return outs, disp
+
+    outs, disp = _run(main())
+    assert disp.rounds == 3
+    for step, out in enumerate(outs):
+        assert [o["grad"] for o in out] == [step * 100 + i
+                                            for i in range(6)]
+
+
+def test_federation_member_is_async_distributor():
+    """Members ARE AsyncDistributors — one scheduler codebase, federated
+    by composition, not a parallel implementation."""
+    from repro.core.distributor import AsyncDistributor
+
+    fed = make_fed(2)
+    assert all(isinstance(m, AsyncDistributor) for m in fed.members)
+    assert all(m.queue is fed.queue for m in fed.members)
+    homes = [id(s) for m in fed.members for s in m.home_shards]
+    assert len(homes) == len(set(homes))           # home shards disjoint
+    assert len(homes) == fed.queue.n_shards        # and exhaustive

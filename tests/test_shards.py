@@ -1,0 +1,327 @@
+"""Sharded ticket store tests: per-task partitioning, the global min-VCT
+merge (property-tested against a single TicketQueue), cross-shard leases,
+and the once-globally client-stats bookkeeping."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.shards import ShardedTicketQueue, shard_index
+from repro.core.tickets import TicketQueue
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def make_pair(n_shards=3, timeout=300.0, redist=10.0):
+    """A single queue and a sharded queue on separate but identically
+    advanced clocks, for lock-step order-parity checks."""
+    c1, c2 = FakeClock(), FakeClock()
+    single = TicketQueue(timeout=timeout, redistribute_min=redist, clock=c1)
+    sharded = ShardedTicketQueue(n_shards, timeout=timeout,
+                                 redistribute_min=redist, clock=c2)
+
+    class Both:
+        def advance(self, dt):
+            c1.advance(dt)
+            c2.advance(dt)
+
+    return single, sharded, Both()
+
+
+def make_sharded(n_shards=3, timeout=300.0, redist=10.0):
+    clock = FakeClock()
+    q = ShardedTicketQueue(n_shards, timeout=timeout,
+                           redistribute_min=redist, clock=clock)
+    return q, clock
+
+
+def distinct_shard_tasks(n_tasks, n_shards):
+    """``n_tasks`` task names guaranteed to land on pairwise-distinct
+    shards (crc32 placement is name-dependent, so probe for them)."""
+    names, used = [], set()
+    i = 0
+    while len(names) < n_tasks:
+        idx = shard_index(f"task{i}", n_shards)
+        if idx not in used:
+            used.add(idx)
+            names.append(f"task{i}")
+        i += 1
+    return names
+
+
+# --- partitioning / ids ----------------------------------------------------
+
+
+def test_shard_index_stable_and_in_range():
+    for n in (1, 2, 5):
+        for name in ("alpha", "beta", "backbone_shard", ""):
+            i = shard_index(name, n)
+            assert 0 <= i < n
+            assert i == shard_index(name, n)     # deterministic
+
+
+def test_tickets_partition_by_task_single_shard_per_task():
+    q, clock = make_sharded(n_shards=4)
+    tids = q.add_many("taskA", [0, 1, 2])
+    sh = q.shard_for("taskA")
+    assert all(tid in sh._tickets for tid in tids)
+    others = [s for s in q.shards if s is not sh]
+    assert all(not s._tickets for s in others)
+
+
+def test_ticket_ids_globally_unique_and_arrival_ordered():
+    q, clock = make_sharded(n_shards=3)
+    tids = []
+    for i in range(9):
+        tids.append(q.add(f"task{i % 3}", i))
+    assert tids == list(range(9))        # one shared id stream
+
+
+def test_add_many_batch_shares_one_creation_time():
+    """The bulk insert reads the clock once under one lock acquisition —
+    the whole batch lands atomically with identical created_at."""
+    q = TicketQueue(clock=FakeClock())
+    tids = q.add_many("t", list(range(5)), work=[1, 2, 3, 4, 5])
+    created = {q._tickets[t].created_at for t in tids}
+    assert len(created) == 1
+    assert [q._tickets[t].work for t in tids] == [1, 2, 3, 4, 5]
+
+
+# --- global min-VCT merge --------------------------------------------------
+
+
+def test_lease_merges_across_shards_in_global_vct_order():
+    q, clock = make_sharded(n_shards=3)
+    order = []
+    for i in range(6):
+        task = f"task{i % 3}"
+        order.append(q.add(task, (task, i)))
+        clock.advance(0.1)               # strictly increasing created_at
+    batch = q.lease("c", 6)
+    assert batch.ticket_ids == order     # interleaved across shards
+
+
+def test_lease_respects_cooldown_across_shards():
+    q, clock = make_sharded(n_shards=2, redist=10.0)
+    ta, tb = distinct_shard_tasks(2, 2)
+    q.add(ta, 0)
+    q.add(tb, 1)
+    first = q.lease("c1", 8)
+    assert len(first.ticket_ids) == 2
+    clock.advance(9.9)
+    assert q.lease("c2", 8) is None      # both shards still cooling down
+    clock.advance(0.2)
+    assert len(q.lease("c2", 8).ticket_ids) == 2
+
+
+def test_lease_shards_hint_restricts_merge():
+    """A member's home-shard lease must never see foreign shards' work."""
+    q, clock = make_sharded(n_shards=2)
+    ta, tb = distinct_shard_tasks(2, 2)
+    q.add(ta, "a")
+    q.add(tb, "b")
+    batch = q.lease("c", 8, shards=[q.shard_for(ta)])
+    assert [t.args for t in batch.tickets] == ["a"]
+    other = q.lease("c", 8, shards=[q.shard_for(tb)])
+    assert [t.args for t in other.tickets] == ["b"]
+
+
+def test_cross_shard_lease_single_id_and_routing_submit():
+    q, clock = make_sharded(n_shards=2)
+    ta, tb = distinct_shard_tasks(2, 2)
+    q.add(ta, "a", work=3.0)
+    q.add(tb, "b", work=5.0)
+    batch = q.lease("c", 2)
+    assert len(batch.tickets) == 2
+    # both shards track the SAME lease id
+    assert sum(sh.lease_is_outstanding(batch.lease_id)
+               for sh in q.shards) == 2
+    clock.advance(2.0)
+    assert q.submit_batch(batch.lease_id,
+                          {t: "r" for t in batch.ticket_ids}, "c") == 2
+    assert q.all_done()
+    # EWMA observed ONCE globally: (3+5) work over 2 s -> 4/s
+    assert q.stats["c"].rate == pytest.approx(4.0)
+    assert q.stats["c"].leases == 1
+    assert q.stats["c"].completed_tickets == 2
+    # drained lease GC'd from the global table
+    assert q.outstanding_leases() == []
+
+
+def test_cross_shard_release_returns_all_unfinished():
+    q, clock = make_sharded(n_shards=2, redist=10.0)
+    ta, tb = distinct_shard_tasks(2, 2)
+    q.add(ta, "a")
+    q.add(tb, "b")
+    batch = q.lease("dying", 2)
+    assert q.release(batch.lease_id, client_failed=True) == 2
+    # released tickets immediately eligible again despite the cool-down
+    rescue = q.lease("healthy", 8)
+    assert len(rescue.ticket_ids) == 2
+    # failure + release booked once globally, not once per shard
+    assert q.stats["dying"].failures == 1
+    assert q.snapshot()["lease_releases"] == 1
+
+
+def test_late_submit_after_cross_shard_release_calibrates_ewma():
+    q, clock = make_sharded(n_shards=2, redist=0.0)
+    ta, tb = distinct_shard_tasks(2, 2)
+    q.add(ta, "a", work=4.0)
+    q.add(tb, "b", work=4.0)
+    b = q.lease("slow", 2)
+    q.release(b.lease_id, client_failed=True)
+    clock.advance(2.0)
+    assert q.submit_batch(b.lease_id,
+                          {t: "r" for t in b.ticket_ids}, "slow") == 2
+    assert q.stats["slow"].rate == pytest.approx(8.0 / 2.0)
+
+
+def test_duplicate_cross_shard_results_dropped_first_wins():
+    q, clock = make_sharded(n_shards=2, redist=0.0)
+    ta, tb = distinct_shard_tasks(2, 2)
+    q.add(ta, "a")
+    q.add(tb, "b")
+    b1 = q.lease("c1", 2)
+    b2 = q.lease("c2", 2)
+    assert sorted(b1.ticket_ids) == sorted(b2.ticket_ids)
+    assert q.submit_batch(b1.lease_id,
+                          {t: "r1" for t in b1.ticket_ids}, "c1") == 2
+    assert q.submit_batch(b2.lease_id,
+                          {t: "r2" for t in b2.ticket_ids}, "c2") == 0
+    assert set(q.results().values()) == {"r1"}
+
+
+def test_v1_request_serves_global_min_and_submit_routes():
+    q, clock = make_sharded(n_shards=3)
+    order = []
+    for i in range(4):
+        order.append(q.add(f"task{i % 3}", i))
+        clock.advance(0.1)
+    served = [q.request().ticket_id for _ in range(4)]
+    assert served == order
+    for tid in order:
+        assert q.submit(tid, tid * 2, "c")
+    assert q.all_done()
+    assert q.results() == {tid: tid * 2 for tid in order}
+
+
+def test_results_for_prune_and_snapshot():
+    q, clock = make_sharded(n_shards=2, redist=0.0)
+    ta, tb = distinct_shard_tasks(2, 2)
+    tids = q.add_many(ta, [0, 1]) + q.add_many(tb, [2])
+    assert q.results_for(tids) is None
+    b = q.lease("c", 3)
+    q.submit_batch(b.lease_id, {t: t * 10 for t in b.ticket_ids}, "c")
+    assert q.results_for(tids) == [0, 10, 20]
+    snap = q.snapshot()
+    assert snap["executed"] == 3 and snap["tickets"] == 3
+    assert len(snap["shards"]) == 2
+    assert q.prune(tids) == 3
+    assert q.snapshot()["tickets"] == 0
+    assert q.results_for(tids) is None   # pruned ids are unknown now
+
+
+def test_seconds_until_eligible_min_over_shards():
+    q, clock = make_sharded(n_shards=2, redist=10.0)
+    ta, tb = distinct_shard_tasks(2, 2)
+    q.add(ta, 0)
+    q.add(tb, 1)
+    assert q.lease("c", 8) is not None
+    clock.advance(4.0)
+    assert q.seconds_until_eligible() == pytest.approx(6.0)
+    clock.advance(7.0)
+    assert q.seconds_until_eligible() == 0.0
+
+
+def test_report_error_routes_to_owning_shard():
+    q, clock = make_sharded(n_shards=2)
+    tid = q.add("taskA", 0)
+    q.request()
+    q.report_error(tid, "Traceback ...", "c")
+    assert q.snapshot()["errors"] == 1
+
+
+# --- order-parity property test (acceptance criterion) ----------------------
+
+
+def _drain_parity(single, sharded, both, handed_single, handed_sharded,
+                  lease_sizes):
+    """Drive both queues to empty, recording hand-out order from each."""
+    guard = 0
+    sizes = list(lease_sizes) or [1]
+    while not single.all_done() or not sharded.all_done():
+        guard += 1
+        assert guard < 10000
+        k = sizes[guard % len(sizes)]
+        b1 = single.lease("c", k)
+        b2 = sharded.lease("c", k)
+        assert (b1 is None) == (b2 is None)
+        if b1 is None:
+            both.advance(max(single.redistribute_min, 1.0))
+            continue
+        handed_single.extend(b1.ticket_ids)
+        handed_sharded.extend(b2.ticket_ids)
+        single.submit_batch(b1.lease_id,
+                            {t: "r" for t in b1.ticket_ids}, "c")
+        sharded.submit_batch(b2.lease_id,
+                             {t: "r" for t in b2.ticket_ids}, "c")
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, 99), min_size=1, max_size=60),
+       st.integers(2, 5))
+def test_sharded_handout_order_matches_single_queue_vct_order(
+        ops, n_shards):
+    """THE federation invariant: on any interleaved multi-task workload,
+    the sharded store hands tickets out in exactly the order a single
+    §2.1.2 TicketQueue would — the queue-of-queues merge preserves the
+    paper's global ascending-VCT rule (including redistribution, releases,
+    and cool-downs)."""
+    single, sharded, both = make_pair(n_shards=n_shards, timeout=30.0,
+                                      redist=5.0)
+    handed_single: list = []
+    handed_sharded: list = []
+    open_leases: list = []               # [(single_lease_id, sharded_lease_id)]
+    serial = 0
+    for op in ops:
+        kind = op % 5
+        if kind in (0, 1):               # add a ticket to one of 3 tasks
+            task = f"task{op % 3}"
+            t1 = single.add(task, serial)
+            t2 = sharded.add(task, serial)
+            assert t1 == t2              # shared-arrival-order id streams
+            serial += 1
+            both.advance(0.01)
+        elif kind == 2:                  # lease k; submit or hold
+            k = 1 + op % 4
+            b1 = single.lease("c", k)
+            b2 = sharded.lease("c", k)
+            assert (b1 is None) == (b2 is None)
+            if b1 is None:
+                continue
+            handed_single.extend(b1.ticket_ids)
+            handed_sharded.extend(b2.ticket_ids)
+            if op % 2:                   # submit results
+                single.submit_batch(
+                    b1.lease_id, {t: "r" for t in b1.ticket_ids}, "c")
+                sharded.submit_batch(
+                    b2.lease_id, {t: "r" for t in b2.ticket_ids}, "c")
+            else:                        # client vanishes with the lease
+                open_leases.append((b1.lease_id, b2.lease_id))
+        elif kind == 3 and open_leases:  # watchdog releases a held lease
+            l1, l2 = open_leases.pop(op % len(open_leases))
+            single.release(l1, client_failed=True)
+            sharded.release(l2, client_failed=True)
+        else:                            # time passes (cool-down / timeout)
+            both.advance([0.5, 3.0, 6.0, 31.0][op % 4])
+    _drain_parity(single, sharded, both, handed_single, handed_sharded,
+                  lease_sizes=[1 + op % 4 for op in ops[:5]])
+    assert handed_single == handed_sharded
+    assert sorted(set(handed_single)) == list(range(serial))
