@@ -1,0 +1,234 @@
+"""Cache-coherence benchmark: versioned invalidation vs clear()-everything.
+
+Virtual-clock simulation of a **re-register storm**: a §4.1-style training
+loop re-publishes its weight static every round (and the task code every
+few rounds) while browsers keep pulling version-pinned tickets through
+per-member edge caches.  All the moving parts are the real production
+objects — :class:`~repro.core.distributor.HttpServerBase` (versioned
+registry), :class:`~repro.core.federation.EdgeCache` (coherent edges),
+:class:`~repro.core.distributor.BrowserNodeBase` (pin-aware browser
+caches) and :class:`~repro.core.shards.ShardedTicketQueue` (version-
+stamped tickets through the lease/merge path).
+
+Three strategies over the identical workload:
+
+  * ``versioned``       — this PR: tickets pin the registry coherence
+                          version, edges take push invalidations,
+                          browsers revalidate conditionally.
+  * ``clear-all``       — the only pre-PR remedy: no versioning; every
+                          re-register nukes every edge and browser cache,
+                          so nothing is ever stale but everything
+                          (including the immutable dataset) re-downloads.
+  * ``no-invalidation`` — the pre-PR bug left alone: no versioning, no
+                          clears; caches serve re-registered keys stale
+                          forever.
+
+Metrics per cell: **stale_serves** (tickets executed against older code
+or weights than their creation-time snapshot) and **origin egress**
+(payload units out of the origin; a conditional not-modified reply costs
+``HEADER_COST``).  The headline assertions mirror the acceptance bar:
+``versioned`` has ZERO stale serves (``no-invalidation`` has many) and
+saves a large fraction of ``clear-all``'s egress.
+
+Usage:
+  PYTHONPATH=src python benchmarks/cache_coherence.py [--json out.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core.distributor import (BrowserNodeBase, ClientProfile,
+                                    HttpServerBase, TaskDef)
+from repro.core.federation import EdgeCache
+from repro.core.shards import ShardedTicketQueue
+
+ROUNDS = 30            # training rounds (one weight re-register each)
+CODE_EVERY = 5         # task code re-registered every N rounds
+TICKETS_PER_ROUND = 16
+N_EDGES = 2
+N_BROWSERS = 8         # split evenly across edges
+LEASE_SIZE = 4
+EXEC_TIME = 0.01       # virtual s per executed ticket
+
+# payload sizes in abstract units (origin egress = downloads x size)
+SIZES = {"task:work": 5.0, "weights": 40.0, "dataset": 200.0}
+HEADER_COST = 0.05     # a not-modified reply is a counter bump, not a copy
+
+
+class SimClock:
+    """Injectable virtual clock (docs/ARCHITECTURE.md §Injectable clock)."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+class SimBrowser(BrowserNodeBase):
+    """A bare browser node (real cache logic, no thread/event loop)."""
+
+    def __init__(self, dist, name: str, capacity: int = 16):
+        self._init_browser(dist, ClientProfile(name=name,
+                                               cache_capacity=capacity))
+
+
+def make_task(code_gen: int) -> TaskDef:
+    """Task code generation ``code_gen``: running it reveals exactly which
+    code and which weights the client actually used."""
+    def run(args, static):
+        return {"code": code_gen, "weights": static["weights"]}
+    return TaskDef("work", run, static_files=("weights", "dataset"))
+
+
+def simulate(strategy: str) -> dict:
+    """One cell: the re-register storm under ``strategy``."""
+    assert strategy in ("versioned", "clear-all", "no-invalidation")
+    versioned = strategy == "versioned"
+    clock = SimClock()
+    origin = HttpServerBase()
+    edges = [EdgeCache(origin, name=f"edge{i}", capacity=64,
+                       subscribe=versioned)
+             for i in range(N_EDGES)]
+    browsers = [SimBrowser(edges[i % N_EDGES], f"b{i}")
+                for i in range(N_BROWSERS)]
+    q = ShardedTicketQueue(4, clock=clock)
+
+    origin.add_static("dataset", "immutable-training-data")  # never changes
+    origin.add_static("weights", {"gen": 0})
+    origin.register_task(make_task(0))
+
+    def clear_everything():
+        for e in edges:
+            e.clear()
+        for b in browsers:
+            b.cache.clear()
+
+    stale_serves = 0
+    executed = 0
+    # creation-time snapshot each ticket must not run BEHIND
+    expected: dict[int, tuple[int, int]] = {}   # tid -> (code_gen, w_gen)
+
+    code_gen = 0
+    for rnd in range(ROUNDS):
+        # --- the storm: weights every round, code every CODE_EVERY ------
+        if rnd > 0:
+            origin.add_static("weights", {"gen": rnd})
+            if rnd % CODE_EVERY == 0:
+                code_gen = rnd
+                origin.register_task(make_task(code_gen))
+            if strategy == "clear-all":
+                clear_everything()
+
+        pin = origin.task_version("work") if versioned else 0
+        tids = q.add_many("work", list(range(TICKETS_PER_ROUND)),
+                          task_version=pin)
+        for tid in tids:
+            expected[tid] = (code_gen, rnd)
+
+        # --- browsers drain the round through their edges ----------------
+        while q.results_for(tids) is None:
+            progress = False
+            for b in browsers:
+                batch = q.lease(b.profile.name, LEASE_SIZE)
+                if batch is None:
+                    continue
+                progress = True
+                results = {}
+                for t in batch.tickets:
+                    task = b._get_task(t.task_name, t.task_version)
+                    static = b._get_static(task, t.task_version)
+                    out = task.run(t.args, static)
+                    clock.t += EXEC_TIME
+                    executed += 1
+                    want_code, want_w = expected[t.ticket_id]
+                    if (out["code"] < want_code
+                            or out["weights"]["gen"] < want_w):
+                        stale_serves += 1
+                    results[t.ticket_id] = out
+                q.submit_batch(batch.lease_id, results, b.profile.name)
+            assert progress, "simulation wedged"
+        q.prune(tids)
+
+    egress = sum(origin.download_count[k] * SIZES[k]
+                 for k in origin.download_count)
+    egress += sum(origin.revalidation_count.values()) * HEADER_COST
+    return {
+        "strategy": strategy,
+        "stale_serves": stale_serves,
+        "executed": executed,
+        "origin_egress_units": round(egress, 2),
+        "origin_downloads": dict(origin.download_count),
+        "origin_revalidations": dict(origin.revalidation_count),
+        "edge_invalidations": sum(e.invalidations for e in edges),
+        "edge_revalidations": sum(sum(e.revalidation_count.values())
+                                  for e in edges),
+        "browser_revalidations": sum(b.revalidations for b in browsers),
+        "edge_hit_rate": round(
+            sum(e.cache.hits for e in edges)
+            / max(sum(sum(e.download_count.values()) for e in edges), 1),
+            3),
+        "virtual_makespan_s": round(clock.t, 3),
+    }
+
+
+def run_sweep() -> dict:
+    out = {s: simulate(s)
+           for s in ("versioned", "clear-all", "no-invalidation")}
+    v, c = out["versioned"], out["clear-all"]
+    out["egress_saved_vs_clear_pct"] = round(
+        100.0 * (1 - v["origin_egress_units"] / c["origin_egress_units"]), 1)
+    out["config"] = {"rounds": ROUNDS, "code_every": CODE_EVERY,
+                     "tickets_per_round": TICKETS_PER_ROUND,
+                     "edges": N_EDGES, "browsers": N_BROWSERS,
+                     "sizes": SIZES, "header_cost": HEADER_COST}
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, help="write results here")
+    args = ap.parse_args()
+    results = run_sweep()
+
+    hdr = f"{'strategy':<18}{'stale':>7}{'egress(u)':>12}{'reval':>7}" \
+          f"{'edge-hit':>10}"
+    print(hdr)
+    print("-" * len(hdr))
+    for s in ("versioned", "clear-all", "no-invalidation"):
+        m = results[s]
+        reval = (sum(m["origin_revalidations"].values())
+                 + m["edge_revalidations"])
+        print(f"{s:<18}{m['stale_serves']:>7}"
+              f"{m['origin_egress_units']:>12.1f}"
+              f"{reval:>7}"
+              f"{m['edge_hit_rate']:>10.3f}")
+
+    v = results["versioned"]
+    n = results["no-invalidation"]
+    saved = results["egress_saved_vs_clear_pct"]
+    print(f"\nversioned invalidation: {v['stale_serves']} stale serves "
+          f"across {v['executed']} executions ({n['stale_serves']} without "
+          f"invalidation), {saved:.1f}% origin egress saved vs "
+          f"clear()-everything")
+    assert v["stale_serves"] == 0, \
+        f"versioned strategy must never serve stale: {v}"
+    assert n["stale_serves"] > 0, \
+        "the no-invalidation baseline must exhibit the staleness bug " \
+        f"(else the benchmark proves nothing): {n}"
+    assert results["clear-all"]["stale_serves"] == 0   # the old remedy works
+    assert saved > 30.0, \
+        f"versioned must save substantial egress vs clear() (got {saved}%)"
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -39,6 +39,7 @@ import sys
 sys.path.insert(0, "src")
 
 from repro.core.distributor import AdaptiveSizer
+from repro.core.federation import grant_has_foreign_tickets
 from repro.core.shards import ShardedTicketQueue
 
 RTT = 0.05          # client <-> distributor round-trip latency (s)
@@ -149,7 +150,8 @@ def simulate(mix: str, n_members: int, *, n_tickets: int = N_TICKETS,
             batch = q.lease(name, n, shards=home[m])
             if batch is None and len(home[m]) < n_shards:
                 batch = q.lease(name, n)          # steal across the fabric
-                if batch is not None:
+                if batch is not None and grant_has_foreign_tickets(
+                        batch, home[m]):
                     steals += 1
             if batch is None:
                 heapq.heappush(events, (t + redistribute_min / 4, next(seq),

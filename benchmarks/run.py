@@ -5,10 +5,11 @@ Prints ``name,us_per_call,derived`` CSV rows (plus the detailed records) so
 results are machine-comparable across runs.  Scaled-down sizes run inside a
 CPU budget; pass --full for paper-scale settings.
 
-The ``scheduler`` and ``federation`` entries additionally write
-machine-readable ``BENCH_scheduler.json`` / ``BENCH_federation.json``
-(throughput, speedup, client mix) so the perf trajectory is tracked across
-PRs — CI uploads them as artifacts.  ``--out-dir`` relocates them.
+The ``scheduler``, ``federation`` and ``cache`` entries additionally write
+machine-readable ``BENCH_scheduler.json`` / ``BENCH_federation.json`` /
+``BENCH_cache.json`` (throughput, speedup, stale-serve and egress numbers)
+so the perf trajectory is tracked across PRs — CI uploads them as
+artifacts.  ``--out-dir`` relocates them.
 """
 from __future__ import annotations
 
@@ -146,6 +147,24 @@ def bench_federation(full: bool):
     return results
 
 
+def bench_cache(full: bool):
+    """Cache-coherence storm (virtual clock, deterministic); writes
+    BENCH_cache.json with per-strategy stale-serve counts and the egress
+    saved by versioned invalidation vs clear()-everything."""
+    from benchmarks import cache_coherence
+
+    t0 = time.perf_counter()
+    results = cache_coherence.run_sweep()
+    us = (time.perf_counter() - t0) * 1e6
+    _write_json("cache", results)
+    v = results["versioned"]
+    _csv("cache_coherence", us,
+         f"stale_serves={v['stale_serves']}|"
+         f"egress_saved_vs_clear={results['egress_saved_vs_clear_pct']}%")
+    assert v["stale_serves"] == 0, v
+    return results
+
+
 BENCHES = {
     "table2": bench_table2,
     "table4": bench_table4,
@@ -154,6 +173,7 @@ BENCHES = {
     "roofline": bench_roofline,
     "scheduler": bench_scheduler,
     "federation": bench_federation,
+    "cache": bench_cache,
 }
 
 

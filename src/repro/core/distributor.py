@@ -73,6 +73,11 @@ class LRUCache:
             self._d.popitem(last=False)
             self.evictions += 1
 
+    def pop(self, key: str):
+        """Remove and return ``key``'s value (None if absent) without
+        touching the hit/miss counters — the targeted-invalidation path."""
+        return self._d.pop(key, None)
+
     def clear(self):
         """Drop everything (the paper's browser reload)."""
         self._d.clear()
@@ -85,6 +90,33 @@ class TaskDef:
     name: str
     run: Callable[[Any, dict], Any]          # (args, static_data) -> result
     static_files: tuple = ()                 # dataset keys served over "HTTP"
+    # monotonic code version, stamped by HttpServerBase.register_task from
+    # the registry clock; 0 = never registered.  Re-registering the same
+    # name always gets a LARGER version, so caches can tell stale from
+    # fresh without comparing payloads.
+    version: int = 0
+
+
+#: Sentinel returned by a conditional fetch whose ``if_version`` matched:
+#: the client's copy is current, no payload moved (the HTTP 304 analogue).
+NOT_MODIFIED = object()
+
+
+@dataclass
+class Fetched:
+    """Result of a versioned registry fetch: the payload (or None when
+    ``not_modified``), the server-side version it corresponds to, and
+    whether the conditional check short-circuited the transfer.
+
+    ``current`` is the transport's currency claim: the origin always
+    serves current data; an edge clears it when its reply raced an
+    invalidation (sub-floor fill), telling the browser not to trust the
+    payload beyond its own version."""
+
+    value: Any
+    version: int
+    not_modified: bool = False
+    current: bool = True
 
 
 @dataclass
@@ -164,40 +196,150 @@ class AdaptiveSizer:
 
 
 class HttpServerBase:
-    """The paper's HTTPServer half, shared by Distributor v1 and v2: task
-    code + static assets published to clients, with download counters."""
+    """The paper's HTTPServer half, shared by Distributor v1 and v2: a
+    **versioned registry** of task code + static assets published to
+    clients, with a split download ledger.
+
+    Every ``register_task`` / ``add_static`` stamps the key with a fresh
+    value of one registry-wide monotonic clock, so versions are totally
+    ordered across keys.  Fetches can be **conditional** (ETag analogue):
+    pass ``if_version`` and a current copy costs a counter bump
+    (``revalidation_count``) instead of a payload copy
+    (``download_count``).  Re-registering a key notifies invalidation
+    subscribers (edge caches) with the new version, so exactly that key is
+    busted fabric-wide — no full ``clear()``.
+
+      * ``download_count[key]``      — full payload transfers (cold misses
+                                       and version-mismatch refetches);
+      * ``revalidation_count[key]``  — conditional fetches answered
+                                       "not modified" (a counter bump)."""
 
     def __init__(self):
         self.tasks: dict[str, TaskDef] = {}
         self.static_store: dict[str, Any] = {}
         self.download_count: collections.Counter = collections.Counter()
+        self.revalidation_count: collections.Counter = collections.Counter()
         self._count_lock = threading.Lock()
+        self._registry_clock = 0                 # shared monotonic versions
+        self._static_versions: dict[str, int] = {}
+        self._invalidation_listeners: list[Callable[[str, int], None]] = []
+
+    # -- publishing (producer side) ------------------------------------------
+
+    def subscribe_invalidation(self, listener: Callable[[str, int], None]):
+        """Register ``listener(cache_key, new_version)`` to be called when
+        a task ("task:<name>") or static ("static:<key>") is re-published.
+        Edge caches subscribe so a re-register invalidates exactly that
+        key everywhere instead of nuking whole stores."""
+        with self._count_lock:
+            self._invalidation_listeners.append(listener)
+
+    def _notify_invalidation(self, cache_key: str, version: int):
+        # called OUTSIDE _count_lock: a listener (edge) may take its own
+        # lock and a concurrent edge miss holds that lock while fetching
+        # from us — holding ours here would deadlock
+        for fn in list(self._invalidation_listeners):
+            fn(cache_key, version)
 
     def register_task(self, task: TaskDef):
-        """Publish a task's code on the HTTPServer."""
-        self.tasks[task.name] = task
+        """Publish (or re-publish) a task's code.  Stamps ``task.version``
+        from the registry clock and fans out an invalidation for the key."""
+        with self._count_lock:
+            self._registry_clock += 1
+            task.version = self._registry_clock
+            self.tasks[task.name] = task
+        self._notify_invalidation(f"task:{task.name}", task.version)
 
     def add_static(self, key: str, value: Any):
-        """Publish a dataset/helper on the HTTPServer."""
-        self.static_store[key] = value
+        """Publish (or re-publish) a dataset/helper; bumps its version and
+        fans out an invalidation for the key."""
+        with self._count_lock:
+            self._registry_clock += 1
+            version = self._registry_clock
+            self._static_versions[key] = version
+            self.static_store[key] = value
+        self._notify_invalidation(f"static:{key}", version)
+
+    # -- versions -------------------------------------------------------------
+
+    def static_version(self, key: str) -> int:
+        """Current version of a static asset (0 = unversioned, e.g. the
+        store was written to directly)."""
+        return self._static_versions.get(key, 0)
+
+    def task_version(self, name: str) -> int:
+        """The task's **coherence version**: max over its code version and
+        its declared statics' versions.  This is what tickets pin — a
+        client validated at this version is guaranteed fresh code AND
+        fresh data for the task, while unchanged assets still revalidate
+        as counter bumps."""
+        task = self.tasks.get(name)
+        if task is None:
+            return 0
+        return max([task.version]
+                   + [self._static_versions.get(k, 0)
+                      for k in task.static_files])
+
+    # -- serving (client side) ------------------------------------------------
+
+    def fetch_task_versioned(self, name: str,
+                             if_version: Optional[int] = None) -> Fetched:
+        """Download task code, conditionally: when ``if_version`` matches
+        the current code version the reply is a not-modified stub
+        (revalidation ledger), else the full payload (download ledger)."""
+        with self._count_lock:
+            task = self.tasks[name]
+            if if_version is not None and task.version == if_version:
+                self.revalidation_count[f"task:{name}"] += 1
+                return Fetched(None, task.version, not_modified=True)
+            self.download_count[f"task:{name}"] += 1
+            return Fetched(task, task.version)
+
+    def serve_static_versioned(self, key: str,
+                               if_version: Optional[int] = None) -> Fetched:
+        """Download a static asset, conditionally (see
+        :meth:`fetch_task_versioned`)."""
+        with self._count_lock:
+            value = self.static_store[key]
+            version = self._static_versions.get(key, 0)
+            if if_version is not None and version == if_version:
+                self.revalidation_count[key] += 1
+                return Fetched(None, version, not_modified=True)
+            self.download_count[key] += 1
+            return Fetched(value, version)
 
     def serve_static(self, key: str):
-        """A client downloads a static file (counted for cache tests)."""
-        with self._count_lock:
-            self.download_count[key] += 1
-        return self.static_store[key]
+        """Unconditional static download (v1 compat surface)."""
+        return self.serve_static_versioned(key).value
 
     def fetch_task(self, name: str) -> TaskDef:
-        """A client downloads task code (counted for cache tests)."""
-        with self._count_lock:
-            self.download_count[f"task:{name}"] += 1
-        return self.tasks[name]
+        """Unconditional task-code download (v1 compat surface)."""
+        return self.fetch_task_versioned(name).value
+
+
+@dataclass
+class _CacheEntry:
+    """A browser-cache slot: payload + the server version it carries +
+    the highest ticket pin it has been validated against (``validated >=
+    pin`` means no round-trip is needed for that pin)."""
+
+    value: Any
+    version: int
+    validated: int
 
 
 class BrowserNodeBase:
     """Per-client state and helpers shared by the v1 thread client and the
     v2 asyncio client: LRU cache, counters, deterministic failure RNG, and
-    the paper's download-through-cache / reload-on-error behaviours."""
+    the paper's download-through-cache / reload-on-error behaviours.
+
+    The cache is **version-aware**: each entry remembers the registry
+    version it was downloaded at.  A ticket pinned at ``task_version`` >
+    the entry's validated mark forces a *conditional* refetch — unchanged
+    assets come back "not modified" (a counter bump on the server), stale
+    ones are re-downloaded.  A ticket pinned at or below the validated
+    mark runs straight from cache, which is exactly the pinned-version
+    guarantee for leases taken before a re-register."""
 
     def _init_browser(self, distributor, profile: ClientProfile):
         self.dist = distributor
@@ -206,6 +348,7 @@ class BrowserNodeBase:
         self.executed = 0
         self.errors = 0
         self.reloads = 0
+        self.revalidations = 0       # conditional fetches answered 304
         self._rng_state = hash(profile.name) & 0xFFFFFFFF
 
     def _rand(self) -> float:
@@ -213,23 +356,55 @@ class BrowserNodeBase:
         self._rng_state = (1103515245 * self._rng_state + 12345) & 0x7FFFFFFF
         return self._rng_state / 0x7FFFFFFF
 
-    def _get_task(self, name: str) -> TaskDef:
-        cached = self.cache.get(f"task:{name}")
-        if cached is not None:
-            return cached
-        task = self.dist.fetch_task(name)           # step 3: download code
-        self.cache.put(f"task:{name}", task)
-        return task
+    def _get_versioned(self, cache_key: str, fetch, min_version: int):
+        """The shared download-through-cache rule for task code AND
+        statics.  ``fetch(if_version)`` is the transport (origin or
+        edge); ``min_version`` is the ticket's pin.
 
-    def _get_static(self, task: TaskDef) -> dict:
-        data = {}
-        for key in task.static_files:               # step 4: download data
-            cached = self.cache.get(f"static:{key}")
-            if cached is None:
-                cached = self.dist.serve_static(key)
-                self.cache.put(f"static:{key}", cached)
-            data[key] = cached
-        return data
+          * entry validated at >= the pin: serve from cache, no trip;
+          * otherwise fetch conditionally: "not modified" bumps the
+            validated mark, a payload replaces the entry;
+          * a payload the transport does NOT claim current (an edge
+            whose fill raced an invalidation) is retried once, and is
+            validated only at its own version if the retry is still
+            unsure — so the next pinned ticket revalidates instead of
+            freezing the staleness in."""
+        entry = self.cache.get(cache_key)
+        if entry is not None and entry.validated >= min_version:
+            return entry.value
+        got = fetch(entry.version if entry is not None else None)
+        if got.not_modified:
+            # authoritative "your copy is current": validate at the pin
+            self.revalidations += 1
+            value, version = entry.value, entry.version
+            validated = max(min_version, version)
+        else:
+            if not got.current:
+                got = fetch(None)      # heal through a raced edge fill
+            value, version = got.value, got.version
+            validated = (max(min_version, version) if got.current
+                         else version)
+        self.cache.put(cache_key, _CacheEntry(value, version, validated))
+        return value
+
+    def _get_task(self, name: str, min_version: int = 0) -> TaskDef:
+        """Step 3: task code through the cache, revalidating when the
+        ticket's pin (``min_version``) outruns the cached entry."""
+        return self._get_versioned(
+            f"task:{name}",
+            lambda v: self.dist.fetch_task_versioned(name, if_version=v),
+            min_version)
+
+    def _get_static(self, task: TaskDef, min_version: int = 0) -> dict:
+        """Step 4: the task's datasets through the cache, same
+        revalidation rule as :meth:`_get_task`."""
+        return {
+            key: self._get_versioned(
+                f"static:{key}",
+                lambda v, k=key: self.dist.serve_static_versioned(
+                    k, if_version=v),
+                min_version)
+            for key in task.static_files}
 
     def _reload(self):
         """Paper: on error the browser reloads itself."""
@@ -319,8 +494,11 @@ class AsyncDistributor(HttpServerBase):
 
     def add_work(self, task_name: str, args_list, *,
                  work: float = 1.0) -> list[int]:
-        """Enqueue tickets (non-async producer API); wakes idle clients."""
-        tids = self.queue.add_many(task_name, args_list, work=work)
+        """Enqueue tickets (non-async producer API); wakes idle clients.
+        Tickets pin the task's current registry coherence version, so a
+        later re-register can't make them execute stale assets."""
+        tids = self.queue.add_many(task_name, args_list, work=work,
+                                   task_version=self.task_version(task_name))
         self._work_added = True
         self._notify_waiters()
         return tids
@@ -406,12 +584,24 @@ class AsyncDistributor(HttpServerBase):
             self._watchdog_task = loop.create_task(self._watchdog())
         return cs
 
-    async def run_until_done(self, timeout: float = 60.0) -> bool:
+    async def run_until_done(self, timeout: float = 60.0, *,
+                             wall_cap: Optional[float] = None) -> bool:
         """Drive the loop until every ticket completes, then shut down the
-        clients/watchdog; returns False on timeout (also shut down)."""
-        deadline = time.monotonic() + timeout
+        clients/watchdog; returns False on timeout (also shut down).
+
+        ``timeout`` is measured on the queue's injectable clock — a
+        virtual-clock sim times out in *virtual* seconds instead of racing
+        wall time.  ``wall_cap`` (wall seconds, default
+        ``max(timeout, 60)``) is the safety net for a virtual clock that
+        never advances; virtual-clock tests exercising wedge scenarios
+        should pass a small cap so a regression fails in seconds."""
+        deadline = self.queue.clock() + timeout
+        if wall_cap is None:
+            wall_cap = max(timeout, 60.0)
+        wall_deadline = time.monotonic() + wall_cap
         while not self.queue.all_done():
-            if time.monotonic() > deadline:
+            if (self.queue.clock() > deadline
+                    or time.monotonic() > wall_deadline):
                 await self.shutdown()
                 return False
             # event-driven: every submit/release notifies; the timeout is
@@ -481,8 +671,13 @@ class AsyncBrowserClient(BrowserNodeBase):
                 failed = False
                 for ticket in batch.tickets:
                     try:
-                        task = self._get_task(ticket.task_name)
-                        static = self._get_static(task)
+                        # the ticket's pinned version drives revalidation:
+                        # a pin newer than the cached entry forces a
+                        # conditional refetch, so post-re-register tickets
+                        # can never execute stale code or data
+                        task = self._get_task(ticket.task_name,
+                                              ticket.task_version)
+                        static = self._get_static(task, ticket.task_version)
                         if (self.profile.fail_prob
                                 and self._rand() < self.profile.fail_prob):
                             raise RuntimeError(
@@ -532,6 +727,13 @@ class Distributor(HttpServerBase):
         self.clients: list["BrowserClient"] = []
 
     # client management (HTTPServer API inherited from HttpServerBase) -------
+
+    def add_work(self, task_name: str, args_list, *,
+                 work: float = 1.0) -> list[int]:
+        """Enqueue version-pinned tickets (v1 mirror of the v2 producer
+        API); the thread clients poll, so no wake-up is needed."""
+        return self.queue.add_many(task_name, args_list, work=work,
+                                   task_version=self.task_version(task_name))
 
     def spawn_clients(self, profiles) -> list["BrowserClient"]:
         """Start one daemon thread per profile."""
@@ -588,14 +790,20 @@ class BrowserClient(threading.Thread, BrowserNodeBase):
             if self.profile.latency:
                 time.sleep(self.profile.latency)
             try:
-                task = self._get_task(ticket.task_name)
-                static = self._get_static(task)
+                task = self._get_task(ticket.task_name, ticket.task_version)
+                static = self._get_static(task, ticket.task_version)
                 if self.profile.fail_prob and self._rand() < self.profile.fail_prob:
                     raise RuntimeError(
                         f"simulated browser crash in {ticket.task_name}")
+                t0 = time.perf_counter()
                 result = task.run(ticket.args, static)
-                if self.profile.speed != 1.0:
-                    time.sleep(0)  # speed modelled inside task work functions
+                if 0 < self.profile.speed < 1.0:
+                    # profile.speed is a duration multiplier in v1: a 0.2x
+                    # client takes 5x the real execution time.  Sleep the
+                    # difference so slow clients genuinely hold tickets
+                    # longer (speeds >= 1 can't shrink real compute).
+                    elapsed = time.perf_counter() - t0
+                    time.sleep(elapsed * (1.0 / self.profile.speed - 1.0))
                 self.dist.queue.submit(ticket.ticket_id, result,
                                        self.profile.name)
                 self.executed += 1

@@ -31,11 +31,13 @@ from __future__ import annotations
 
 import asyncio
 import collections
+import threading
 import time
 from typing import Any, Callable, Optional
 
 from repro.core.distributor import (AdaptiveSizer, AsyncDistributor,
-                                    HttpServerBase, LRUCache, TaskDef)
+                                    Fetched, HttpServerBase, LRUCache,
+                                    TaskDef)
 from repro.core.shards import ShardedTicketQueue
 
 
@@ -46,53 +48,138 @@ class EdgeCache:
     ``HttpServerBase``.  Serves from an LRU store; misses fall through to
     the origin (bumping its ``download_count`` ledger, which thereby
     counts *origin egress*, i.e. cache misses).  The edge keeps its own
-    ``download_count`` of client-facing requests so hit rates are directly
-    measurable from the two ledgers."""
+    ``download_count`` of client-facing requests plus a
+    ``revalidation_count`` of conditional requests it answered
+    "not modified", so hit rates and revalidation traffic are directly
+    measurable from the ledgers.
+
+    The edge is **coherent**: it subscribes to the origin's invalidation
+    feed, so re-registering a task or static drops exactly that key from
+    the edge store (next request re-warms read-through) — no full
+    ``clear()``.  Entries are stored with their origin version, and
+    client-side conditional fetches (``if_version``) are answered locally
+    when current.
+
+    All cache + counter mutations are guarded by one lock: v1 thread
+    clients routed through an edge would otherwise corrupt the LRU's
+    OrderedDict.  The lock is NOT held across origin round-trips, so an
+    invalidation can race an in-flight miss fill; a per-key **version
+    floor** (the invalidation's tombstone) makes that safe — a fill
+    below the floor is never cached and never answered "not modified",
+    so a raced fill costs one extra origin round-trip instead of
+    freezing stale data in."""
 
     def __init__(self, origin: HttpServerBase, name: str = "edge0",
-                 capacity: int = 64):
+                 capacity: int = 64, subscribe: bool = True):
         self.origin = origin
         self.name = name
-        self.cache = LRUCache(capacity)
+        self.cache = LRUCache(capacity)   # key -> (value, version)
         self.download_count: collections.Counter = collections.Counter()
+        self.revalidation_count: collections.Counter = collections.Counter()
+        self.invalidations = 0
+        self._floor: dict[str, int] = {}  # key -> minimum current version
+        self._lock = threading.Lock()
+        # subscribe=False opts out of coherence (benchmark baseline for
+        # the pre-invalidation behaviour); production edges stay coherent
+        if subscribe and hasattr(origin, "subscribe_invalidation"):
+            origin.subscribe_invalidation(self.invalidate)
 
-    def fetch_task(self, name: str) -> TaskDef:
+    def invalidate(self, cache_key: str, version: int):
+        """Origin push: a key was re-published at ``version`` — drop our
+        copy (if any) and raise the key's floor, so a concurrent miss
+        fill carrying the OLD version can't be cached or served as
+        current after this returns."""
+        with self._lock:
+            self._floor[cache_key] = max(self._floor.get(cache_key, 0),
+                                         version)
+            if self.cache.pop(cache_key) is not None:
+                self.invalidations += 1
+
+    def _read_through(self, cache_key: str, ledger_key: str,
+                      fetch, if_version: Optional[int]) -> Fetched:
+        """Shared fetch path: LRU probe under the lock, origin fetch
+        outside it, conditional short-circuit when the client's version
+        matches our entry AND the entry is at or above the invalidation
+        floor (i.e. provably current)."""
+        with self._lock:
+            self.download_count[ledger_key] += 1
+            entry = self.cache.get(cache_key)
+            if (entry is not None
+                    and entry[1] < self._floor.get(cache_key, 0)):
+                self.cache.pop(cache_key)   # a raced fill slipped in
+                entry = None
+        if entry is None:
+            got = fetch()                      # origin round-trip, unlocked
+            entry = (got.value, got.version)
+            with self._lock:
+                if got.version >= self._floor.get(cache_key, 0):
+                    self.cache.put(cache_key, entry)
+        value, version = entry
+        with self._lock:
+            current = version >= self._floor.get(cache_key, 0)
+            if if_version is not None and if_version == version and current:
+                self.revalidation_count[ledger_key] += 1
+                return Fetched(None, version, not_modified=True)
+        # current=False tells the client this payload raced an
+        # invalidation — serve it, but don't let it validate a pin
+        return Fetched(value, version, current=current)
+
+    def fetch_task_versioned(self, name: str,
+                             if_version: Optional[int] = None) -> Fetched:
         """Serve task code, read-through to the origin on a miss."""
         key = f"task:{name}"
-        self.download_count[key] += 1
-        cached = self.cache.get(key)
-        if cached is None:
-            cached = self.origin.fetch_task(name)
-            self.cache.put(key, cached)
-        return cached
+        return self._read_through(
+            key, key, lambda: self.origin.fetch_task_versioned(name),
+            if_version)
 
-    def serve_static(self, key: str):
+    def serve_static_versioned(self, key: str,
+                               if_version: Optional[int] = None) -> Fetched:
         """Serve a static asset, read-through to the origin on a miss."""
-        self.download_count[key] += 1
         # "static:" namespace so an asset literally named "task:<x>" can't
         # collide with task <x>'s code (same split BrowserNodeBase uses)
-        cached = self.cache.get(f"static:{key}")
-        if cached is None:
-            cached = self.origin.serve_static(key)
-            self.cache.put(f"static:{key}", cached)
-        return cached
+        return self._read_through(
+            f"static:{key}", key,
+            lambda: self.origin.serve_static_versioned(key), if_version)
+
+    def fetch_task(self, name: str) -> TaskDef:
+        """Unconditional task fetch (v1 compat surface)."""
+        return self.fetch_task_versioned(name).value
+
+    def serve_static(self, key: str):
+        """Unconditional static fetch (v1 compat surface)."""
+        return self.serve_static_versioned(key).value
 
     def clear(self):
         """Drop the edge's store (node restart); next requests re-warm
         from the origin."""
-        self.cache.clear()
+        with self._lock:
+            self.cache.clear()
 
     def stats(self) -> dict:
         """Requests/hits/misses/hit-rate counters for the console."""
-        requests = sum(self.download_count.values())
-        return {
-            "name": self.name,
-            "requests": requests,
-            "hits": self.cache.hits,
-            "misses": self.cache.misses,
-            "evictions": self.cache.evictions,
-            "hit_rate": (self.cache.hits / requests) if requests else 0.0,
-        }
+        with self._lock:
+            requests = sum(self.download_count.values())
+            return {
+                "name": self.name,
+                "requests": requests,
+                "hits": self.cache.hits,
+                "misses": self.cache.misses,
+                "evictions": self.cache.evictions,
+                "invalidations": self.invalidations,
+                "revalidations": sum(self.revalidation_count.values()),
+                "hit_rate": (self.cache.hits / requests) if requests else 0.0,
+            }
+
+
+def grant_has_foreign_tickets(batch, home_shards) -> bool:
+    """True when a lease grant contains tickets from shards outside
+    ``home_shards`` — the definition of a steal.  A fabric-wide retry
+    whose grant turns out to be purely home tickets (a home cool-down
+    expired between the two lease calls) is NOT a steal, just home work
+    arriving late.  Shared by :class:`FederationMember` and the
+    federation benchmark so the two counters can't diverge."""
+    home = {id(sh) for sh in home_shards}
+    return any(id(sh) not in home for sh in (batch.shards or ()))
 
 
 class FederationMember(AsyncDistributor):
@@ -122,11 +209,23 @@ class FederationMember(AsyncDistributor):
                                      shards=self.home_shards)
         if batch is None and len(self.home_shards) < self.queue.n_shards:
             batch = self.queue.lease(client_name, n)
-            if batch is not None:
+            if batch is not None and grant_has_foreign_tickets(
+                    batch, self.home_shards):
                 self.steals += 1
         return batch
 
+    def task_version(self, name: str) -> int:
+        """Coherence versions live in the ORIGIN registry (the façade) —
+        a member enqueueing work directly still pins correctly."""
+        return self.federation.task_version(name)
+
     # clients of this member fetch assets through its edge, not the origin
+    def fetch_task_versioned(self, name: str, if_version=None):
+        return self.edge.fetch_task_versioned(name, if_version)
+
+    def serve_static_versioned(self, key: str, if_version=None):
+        return self.edge.serve_static_versioned(key, if_version)
+
     def fetch_task(self, name: str) -> TaskDef:
         return self.edge.fetch_task(name)
 
@@ -221,8 +320,10 @@ class FederatedDistributor(HttpServerBase):
 
     def add_work(self, task_name: str, args_list, *,
                  work: float = 1.0) -> list[int]:
-        """Enqueue tickets on the owning shard; wakes the whole fabric."""
-        tids = self.queue.add_many(task_name, args_list, work=work)
+        """Enqueue version-pinned tickets on the owning shard; wakes the
+        whole fabric."""
+        tids = self.queue.add_many(task_name, args_list, work=work,
+                                   task_version=self.task_version(task_name))
         for m in self.members:
             m._work_added = True
         self._notify_all()

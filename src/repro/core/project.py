@@ -56,8 +56,11 @@ class TaskHandle:
         ))
 
     def calculate(self, inputs: Sequence[Any]):
-        """Divide the arguments into tickets and enqueue them (paper §2.1.1)."""
-        self._ticket_ids = self.framework.distributor.queue.add_many(
+        """Divide the arguments into tickets and enqueue them (paper
+        §2.1.1).  Goes through the distributor so tickets pin the task's
+        registry coherence version (re-registering a task mid-run then
+        invalidates browser caches via the pins)."""
+        self._ticket_ids = self.framework.distributor.add_work(
             self.task_cls.task_name(), inputs)
 
     def block(self, callback: Optional[Callable] = None,
@@ -101,8 +104,9 @@ class CalculationFramework:
     distributor: Distributor
 
     def add_static(self, key: str, value: Any):
-        """Publish a dataset/helper on the HTTPServer."""
-        self.distributor.static_store[key] = value
+        """Publish a dataset/helper on the HTTPServer (versioned: a
+        re-publish bumps the key and invalidates caches)."""
+        self.distributor.add_static(key, value)
 
     def run_project(self, project_cls, *args, **kwargs):
         """Instantiate (if needed) and run a project; returns its result."""

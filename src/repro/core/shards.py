@@ -120,19 +120,22 @@ class ShardedTicketQueue:
 
     # -- producer side --------------------------------------------------------
 
-    def add(self, task_name: str, args: Any, *, work: float = 1.0) -> int:
+    def add(self, task_name: str, args: Any, *, work: float = 1.0,
+            task_version: int = 0) -> int:
         """Enqueue one ticket on its task's shard; returns its id."""
         sh = self.shard_for(task_name)
-        tid = sh.add(task_name, args, work=work)
+        tid = sh.add(task_name, args, work=work, task_version=task_version)
         with self._meta_lock:
             self._ticket_shard[tid] = sh
         return tid
 
-    def add_many(self, task_name: str, args_list, *, work=1.0) -> list[int]:
+    def add_many(self, task_name: str, args_list, *, work=1.0,
+                 task_version: int = 0) -> list[int]:
         """Bulk-enqueue on the owning shard (one shard lock acquisition;
         producers for different tasks don't contend at all)."""
         sh = self.shard_for(task_name)
-        tids = sh.add_many(task_name, args_list, work=work)
+        tids = sh.add_many(task_name, args_list, work=work,
+                           task_version=task_version)
         with self._meta_lock:
             for tid in tids:
                 self._ticket_shard[tid] = sh
@@ -179,7 +182,8 @@ class ShardedTicketQueue:
         # assemble client-side copies in the merged global order
         copies = [granted[tid] for _, tid, _ in picked if tid in granted]
         batch = LeaseBatch(lease_id, client, copies, now,
-                           expected_duration=expected_duration)
+                           expected_duration=expected_duration,
+                           shards=touched)
         with self._meta_lock:
             self._leases[lease_id] = (batch, touched)
         with self._stats_lock:
@@ -309,17 +313,26 @@ class ShardedTicketQueue:
         return out
 
     def prune(self, ticket_ids) -> int:
-        """Forget completed tickets and their shard-routing entries."""
-        pruned = 0
+        """Forget completed tickets and their shard-routing entries.
+
+        Three lock acquisitions total (route, per-shard prune, routing
+        cleanup) — NOT one ``_meta_lock`` round per ticket, which made
+        pruning a long round O(n) lock traffic."""
         with self._meta_lock:
-            shards = [(tid, self._ticket_shard.get(tid))
+            routed = [(tid, self._ticket_shard.get(tid))
                       for tid in ticket_ids]
-        for tid, sh in shards:
-            if sh is not None and sh.prune([tid]):
-                pruned += 1
-                with self._meta_lock:
+        by_shard: dict[int, tuple[TicketQueue, list]] = {}
+        for tid, sh in routed:
+            if sh is not None:
+                by_shard.setdefault(id(sh), (sh, []))[1].append(tid)
+        pruned: list = []
+        for sh, tids in by_shard.values():
+            pruned.extend(sh.prune_ex(tids))
+        if pruned:
+            with self._meta_lock:
+                for tid in pruned:
                     self._ticket_shard.pop(tid, None)
-        return pruned
+        return len(pruned)
 
     def report_error(self, ticket_id: int, error: str, client: str = "?"):
         """Route an error report to the owning shard."""

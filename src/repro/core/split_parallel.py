@@ -345,13 +345,24 @@ class SplitConcurrentDispatcher:
         self.rounds = 0
 
     async def run_round(self, shard_args, *, shard_work=None,
-                        timeout: float = 60.0) -> list:
+                        statics=None, timeout: float = 60.0) -> list:
         """Execute one step's shards through the scheduler.
 
         ``shard_args`` is a list of per-shard work-function arguments;
         ``shard_work[i]`` (default 1.0 each) meters each shard's size so
         the EWMA stays calibrated when shards are uneven.  Returns results
-        ordered like ``shard_args``."""
+        ordered like ``shard_args``.
+
+        ``statics`` ({key: value}, e.g. this step's stale-head weights) is
+        re-registered on the origin registry BEFORE the round's tickets
+        are enqueued.  Re-registering bumps each asset's version, the
+        tickets pin the new coherence version, and every client
+        revalidates before executing — so per-round weight refresh is
+        correct by construction: a client can never run round t's shard
+        against round t-1's weights, no matter how its cache is warmed."""
+        if statics:
+            for key, value in statics.items():
+                self.dist.add_static(key, value)
         if shard_work is None:
             shard_work = [1.0] * len(shard_args)
         tids = self.dist.add_work(self.task_name, shard_args,

@@ -56,6 +56,12 @@ class Ticket:
     completed_by: Optional[str] = None
     error_reports: list = field(default_factory=list)
     lease_id: Optional[int] = None
+    # registry coherence version pinned at creation (see
+    # HttpServerBase.task_version): a client executing this ticket must
+    # hold task code + statics validated at >= this version, or
+    # revalidate its cache first.  0 = unversioned (queue used directly,
+    # without a registry — the seed behaviour).
+    task_version: int = 0
 
     def virtual_created_time(self, timeout: float) -> float:
         """The paper's ordering key: creation time while fresh, then
@@ -67,7 +73,8 @@ class Ticket:
     def _copy_for_client(self) -> "Ticket":
         return Ticket(self.ticket_id, self.task_name, self.args,
                       self.created_at, self.work, self.distribute_count,
-                      self.last_distributed_at, lease_id=self.lease_id)
+                      self.last_distributed_at, lease_id=self.lease_id,
+                      task_version=self.task_version)
 
 
 @dataclass
@@ -115,6 +122,10 @@ class LeaseBatch:
     tickets: list                     # list[Ticket] (client-side copies)
     issued_at: float
     expected_duration: Optional[float] = None   # scheduler's ETA (watchdog)
+    # shards the grant actually touched (set by ShardedTicketQueue.lease;
+    # None for a plain TicketQueue).  A federation member uses it to count
+    # a steal only when the batch really contains foreign-shard tickets.
+    shards: Optional[list] = None
 
     @property
     def work(self) -> float:
@@ -160,18 +171,21 @@ class TicketQueue:
 
     # -- producer side ------------------------------------------------------
 
-    def add(self, task_name: str, args: Any, *, work: float = 1.0) -> int:
-        """Enqueue one ticket; returns its id."""
+    def add(self, task_name: str, args: Any, *, work: float = 1.0,
+            task_version: int = 0) -> int:
+        """Enqueue one ticket; returns its id.  ``task_version`` pins the
+        registry coherence version the ticket was created against (0 when
+        the queue is used without a registry)."""
         with self._lock:
             tid = next(self._ids)
             self._tickets[tid] = Ticket(tid, task_name, args, self.clock(),
-                                        work=work)
+                                        work=work, task_version=task_version)
             self._incomplete += 1
             self._done.clear()
             return tid
 
     def add_many(self, task_name: str, args_list, *,
-                 work=1.0) -> list[int]:
+                 work=1.0, task_version: int = 0) -> list[int]:
         """Enqueue one ticket per element of ``args_list``; ``work`` is a
         scalar applied to all, or a per-ticket sequence.
 
@@ -188,7 +202,8 @@ class TicketQueue:
             tids = []
             for a, w in zip(args_list, works):
                 tid = next(self._ids)
-                self._tickets[tid] = Ticket(tid, task_name, a, now, work=w)
+                self._tickets[tid] = Ticket(tid, task_name, a, now, work=w,
+                                            task_version=task_version)
                 tids.append(tid)
             self._incomplete += len(tids)
             self._done.clear()
@@ -463,14 +478,20 @@ class TicketQueue:
         """Forget completed tickets (long-running producers: drop finished
         rounds so lease scans and memory don't grow with history).
         Unfinished tickets are left alone; returns how many were pruned."""
+        return len(self.prune_ex(ticket_ids))
+
+    def prune_ex(self, ticket_ids) -> list:
+        """:meth:`prune` returning the ids actually pruned — the sharded
+        store needs them to batch its routing-table cleanup into one
+        ``_meta_lock`` acquisition instead of one per ticket."""
         with self._lock:
-            pruned = 0
+            pruned = []
             for tid in ticket_ids:
                 t = self._tickets.get(tid)
                 if t is not None and t.completed:
                     del self._tickets[tid]
                     self._ticket_leases.pop(tid, None)
-                    pruned += 1
+                    pruned.append(tid)
             return pruned
 
     def report_error(self, ticket_id: int, error: str, client: str = "?"):

@@ -1,0 +1,423 @@
+"""Cache-coherent federation tests: the versioned registry (monotonic
+versions, ETag-style conditional fetches, the cold-miss/revalidation
+ledger split), pin-driven browser revalidation, targeted edge
+invalidation (no full clear()), re-register-mid-flight semantics (zero
+stale executions after the invalidation barrier; pinned-version execution
+for in-flight leases), and per-round weight re-registration through the
+split dispatcher."""
+import asyncio
+import threading
+
+import pytest
+
+from repro.core.distributor import (AsyncDistributor, BrowserNodeBase,
+                                    ClientProfile, Distributor,
+                                    HttpServerBase, TaskDef)
+from repro.core.federation import EdgeCache, FederatedDistributor
+from repro.core.split_parallel import SplitConcurrentDispatcher
+
+
+def _run(coro):
+    return asyncio.run(coro)
+
+
+class Node(BrowserNodeBase):
+    """Bare browser-node state (no thread/loop): drives the versioned
+    cache helpers deterministically."""
+
+    def __init__(self, distributor, name="node", capacity=16):
+        self._init_browser(distributor,
+                           ClientProfile(name=name, cache_capacity=capacity))
+
+
+# --- registry versioning unit ------------------------------------------------
+
+
+def test_register_task_stamps_monotonic_versions():
+    s = HttpServerBase()
+    s.register_task(TaskDef("a", lambda x, _: x))
+    v1 = s.tasks["a"].version
+    s.add_static("ds", [1])
+    s.register_task(TaskDef("a", lambda x, _: -x))
+    v2 = s.tasks["a"].version
+    assert v1 >= 1 and v2 > v1            # one shared monotonic clock
+    assert s.static_version("ds") > v1
+
+
+def test_task_version_is_coherence_max_over_code_and_statics():
+    s = HttpServerBase()
+    s.add_static("w", 0)
+    s.register_task(TaskDef("t", lambda x, st: st["w"],
+                            static_files=("w",)))
+    code_v = s.tasks["t"].version
+    assert s.task_version("t") == code_v
+    s.add_static("w", 1)                  # data-only re-publish
+    assert s.task_version("t") == s.static_version("w") > code_v
+    assert s.tasks["t"].version == code_v  # code version untouched
+    assert s.task_version("missing") == 0
+
+
+def test_conditional_fetch_splits_ledger_cold_miss_vs_revalidation():
+    s = HttpServerBase()
+    s.add_static("ds", "blob")
+    s.register_task(TaskDef("t", lambda x, _: x))
+    # cold miss: payload crosses, download ledger
+    got = s.fetch_task_versioned("t")
+    assert not got.not_modified and got.value.name == "t"
+    assert s.download_count["task:t"] == 1
+    # current copy: not-modified stub, revalidation ledger, NO download
+    again = s.fetch_task_versioned("t", if_version=got.version)
+    assert again.not_modified and again.value is None
+    assert again.version == got.version
+    assert s.download_count["task:t"] == 1
+    assert s.revalidation_count["task:t"] == 1
+    # stale copy: payload again
+    s.register_task(TaskDef("t", lambda x, _: -x))
+    refetch = s.fetch_task_versioned("t", if_version=got.version)
+    assert not refetch.not_modified and refetch.version > got.version
+    assert s.download_count["task:t"] == 2
+    # statics follow the same protocol
+    g1 = s.serve_static_versioned("ds")
+    g2 = s.serve_static_versioned("ds", if_version=g1.version)
+    assert g2.not_modified
+    assert s.download_count["ds"] == 1 and s.revalidation_count["ds"] == 1
+
+
+def test_directly_written_static_store_stays_unversioned():
+    """The seed idiom ``d.static_store[k] = v`` still serves (version 0,
+    never invalidated) — versioning is opt-in through add_static."""
+    s = HttpServerBase()
+    s.static_store["raw"] = 42
+    assert s.serve_static("raw") == 42
+    assert s.static_version("raw") == 0
+    got = s.serve_static_versioned("raw", if_version=0)
+    assert got.not_modified                 # version 0 == version 0
+
+
+# --- browser cache: pin-driven revalidation ----------------------------------
+
+
+def test_browser_pin_forces_conditional_refetch_of_stale_code():
+    d = Distributor()
+    d.register_task(TaskDef("t", lambda x, _: "old"))
+    n = Node(d)
+    pin1 = d.task_version("t")
+    assert n._get_task("t", pin1).run(0, {}) == "old"
+    assert d.download_count["task:t"] == 1
+    d.register_task(TaskDef("t", lambda x, _: "new"))
+    pin2 = d.task_version("t")
+    # stale pin still serves from cache (pinned-version execution)...
+    assert n._get_task("t", pin1).run(0, {}) == "old"
+    assert d.download_count["task:t"] == 1
+    # ...the new pin refetches exactly once, then caches the fresh copy
+    assert n._get_task("t", pin2).run(0, {}) == "new"
+    assert d.download_count["task:t"] == 2
+    assert n._get_task("t", pin2).run(0, {}) == "new"
+    assert d.download_count["task:t"] == 2
+
+
+def test_browser_revalidation_of_unchanged_asset_is_counter_bump():
+    """A pin bumped by a DATA change revalidates the unchanged code as a
+    not-modified stub — no code payload moves."""
+    d = Distributor()
+    d.add_static("w", 0)
+    d.register_task(TaskDef("t", lambda x, st: st["w"],
+                            static_files=("w",)))
+    n = Node(d)
+    pin = d.task_version("t")
+    task = n._get_task("t", pin)
+    assert n._get_static(task, pin) == {"w": 0}
+    assert d.download_count["task:t"] == 1 and d.download_count["w"] == 1
+    d.add_static("w", 1)                   # weights-only re-publish
+    pin2 = d.task_version("t")
+    task = n._get_task("t", pin2)
+    assert n._get_static(task, pin2) == {"w": 1}
+    # code revalidated (bump), weights re-downloaded (payload)
+    assert d.download_count["task:t"] == 1
+    assert d.revalidation_count["task:t"] == 1
+    assert d.download_count["w"] == 2
+    assert n.revalidations == 1
+
+
+def test_in_flight_lease_pins_creation_version():
+    """A lease taken BEFORE a re-register runs the pinned version from
+    cache; tickets added AFTER the barrier carry the new pin."""
+    d = Distributor()
+    d.register_task(TaskDef("t", lambda x, _: "v1"))
+    d.add_work("t", [0])
+    n = Node(d)
+    batch = d.queue.lease("node", 1)
+    (old_ticket,) = batch.tickets
+    n._get_task("t", old_ticket.task_version)      # cache warmed at v1
+    d.register_task(TaskDef("t", lambda x, _: "v2"))   # barrier
+    new_tid = d.add_work("t", [1])[0]
+    # the in-flight ticket still executes v1 straight from cache
+    task = n._get_task("t", old_ticket.task_version)
+    assert task.run(0, {}) == "v1"
+    assert d.download_count["task:t"] == 1         # no refetch
+    d.queue.submit_batch(batch.lease_id, {old_ticket.ticket_id: "done"},
+                         "node")
+    # the post-barrier ticket carries the new pin and gets v2
+    batch2 = d.queue.lease("node", 1)
+    (new_ticket,) = batch2.tickets
+    assert new_ticket.ticket_id == new_tid
+    assert new_ticket.task_version > old_ticket.task_version
+    assert n._get_task("t", new_ticket.task_version).run(0, {}) == "v2"
+
+
+# --- edge cache: targeted invalidation ---------------------------------------
+
+
+def test_edge_invalidation_busts_exactly_the_republished_key():
+    origin = HttpServerBase()
+    origin.add_static("keep", "stays-cached")
+    origin.add_static("w", 0)
+    origin.register_task(TaskDef("t", lambda x, _: x))
+    edge = EdgeCache(origin, capacity=8)
+    edge.serve_static("keep")
+    edge.serve_static("w")
+    edge.fetch_task("t")
+    assert origin.download_count["keep"] == 1
+    origin.add_static("w", 1)              # invalidates ONLY static:w
+    assert edge.invalidations == 1
+    assert edge.serve_static("w") == 1     # re-warms from origin
+    assert origin.download_count["w"] == 2
+    edge.serve_static("keep")
+    edge.fetch_task("t")
+    # the untouched keys never went back to the origin (no clear())
+    assert origin.download_count["keep"] == 1
+    assert origin.download_count["task:t"] == 1
+
+
+def test_edge_answers_conditional_fetch_locally_when_current():
+    origin = HttpServerBase()
+    origin.add_static("ds", "blob")
+    edge = EdgeCache(origin, capacity=8)
+    got = edge.serve_static_versioned("ds")
+    again = edge.serve_static_versioned("ds", if_version=got.version)
+    assert again.not_modified
+    assert edge.revalidation_count["ds"] == 1
+    # the revalidation never reached the origin
+    assert origin.download_count["ds"] == 1
+    assert origin.revalidation_count["ds"] == 0
+
+
+def test_edge_cache_thread_safety_under_concurrent_clients():
+    """v1 thread clients routed through one edge: concurrent fetches,
+    invalidations and stats must not corrupt the LRU OrderedDict."""
+    origin = HttpServerBase()
+    for i in range(8):
+        origin.add_static(f"k{i}", i)
+    origin.register_task(TaskDef("t", lambda x, _: x))
+    edge = EdgeCache(origin, capacity=3)   # small: constant eviction churn
+    errors = []
+
+    def hammer(seed):
+        try:
+            for i in range(300):
+                k = (seed + i) % 8
+                assert edge.serve_static(f"k{k}") == k
+                edge.fetch_task("t")
+                if i % 50 == 0:
+                    edge.stats()
+        except Exception as e:              # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=hammer, args=(s,)) for s in range(6)]
+    for t in threads:
+        t.start()
+    for i in range(40):
+        origin.add_static(f"k{i % 8}", i % 8)   # concurrent invalidations
+    for t in threads:
+        t.join()
+    assert not errors
+    s = edge.stats()
+    assert s["requests"] == 6 * 300 * 2
+
+
+# --- re-register mid-flight, end to end --------------------------------------
+
+
+def test_no_stale_execution_after_reregister_async_distributor():
+    """Stale-serve regression: after the re-register barrier, no ticket
+    created behind the barrier may execute the old code — even though
+    every client cached it."""
+
+    async def main():
+        d = AsyncDistributor(timeout=5.0, redistribute_min=0.02,
+                             watchdog_interval=0.005)
+        d.register_task(TaskDef("gen", lambda x, _: ("old", x)))
+        d.add_work("gen", list(range(20)))
+        d.spawn_clients([ClientProfile(name=f"c{i}", speed=2000.0)
+                         for i in range(3)])
+        assert await d.run_until_done(timeout=30.0)
+        first = dict(d.queue.results())
+        # barrier: re-register, then a second wave of tickets
+        d.register_task(TaskDef("gen", lambda x, _: ("new", x)))
+        tids2 = d.add_work("gen", list(range(20, 40)))
+        d.spawn_clients([ClientProfile(name=f"c{i}", speed=2000.0)
+                         for i in range(3)])
+        assert await d.run_until_done(timeout=30.0)
+        return d, first, tids2
+
+    d, first, tids2 = _run(main())
+    res = d.queue.results()
+    assert all(first[t][0] == "old" for t in first)
+    assert all(res[t][0] == "new" for t in tids2)      # zero stale serves
+    # invalidation was targeted: the one payload refetch per client that
+    # actually revalidated, not a thundering re-download of everything
+    assert d.download_count["task:gen"] <= 6
+
+
+def test_federation_reregister_propagates_to_every_edge_and_browser():
+    """Re-registering on the façade invalidates the key on EVERY member's
+    edge; all second-round tickets execute fresh code through warmed
+    caches, with no edge clear()."""
+
+    async def main():
+        fed = FederatedDistributor(2, n_shards=4, timeout=5.0,
+                                   redistribute_min=0.02,
+                                   watchdog_interval=0.005)
+        fed.add_static("keep", "x")
+        fed.register_task(TaskDef("job", lambda x, s: ("old", x),
+                                  static_files=("keep",)))
+        fed.add_work("job", list(range(16)))
+        fed.spawn_clients([ClientProfile(name=f"c{i}", speed=2000.0)
+                           for i in range(4)])
+        assert await fed.run_until_done(timeout=30.0)
+        fed.register_task(TaskDef("job", lambda x, s: ("new", x),
+                                  static_files=("keep",)))
+        tids2 = fed.add_work("job", list(range(16, 32)))
+        fed.spawn_clients([ClientProfile(name=f"c{i}", speed=2000.0)
+                           for i in range(4)])
+        assert await fed.run_until_done(timeout=30.0)
+        return fed, tids2
+
+    fed, tids2 = _run(main())
+    res = fed.queue.results()
+    assert all(res[t][0] == "new" for t in tids2)
+    # both edges took the targeted invalidation for task:job
+    assert sum(m.edge.invalidations for m in fed.members) >= 1
+    # the untouched static was fetched from the origin at most once per
+    # edge across BOTH rounds — proof the edges were never cleared
+    assert fed.download_count["keep"] <= 2
+
+
+def test_split_dispatcher_round_statics_are_fresh_by_construction():
+    """Per-round weight re-registration through run_round(statics=...):
+    round t's shards always see round t's weights, warmed caches
+    notwithstanding."""
+
+    async def main():
+        d = AsyncDistributor(timeout=5.0, redistribute_min=0.02,
+                             watchdog_interval=0.005)
+        d.register_task(TaskDef(
+            "backbone_shard", lambda args, s: (s["weights"], args),
+            static_files=("weights",)))
+        d.spawn_clients([ClientProfile(name=f"c{i}", speed=2000.0)
+                         for i in range(2)])
+        disp = SplitConcurrentDispatcher(d)
+        outs = []
+        for rnd in range(4):
+            outs.append(await disp.run_round(
+                list(range(6)), statics={"weights": rnd}, timeout=30.0))
+        await d.shutdown()
+        return d, outs
+
+    d, outs = _run(main())
+    for rnd, out in enumerate(outs):
+        assert [w for w, _ in out] == [rnd] * 6        # never stale
+    # unchanged task code revalidated across rounds instead of moving
+    assert d.download_count["task:backbone_shard"] <= 2
+    assert d.download_count["weights"] >= 4            # fresh every round
+
+
+def test_run_project_tickets_are_version_pinned():
+    """The paper's appendix API rides the versioned registry: calculate()
+    pins tickets, so a mid-project re-register would invalidate."""
+    from repro.core.project import CalculationFramework, ProjectBase, TaskBase
+
+    class Echo(TaskBase):
+        def run(self, input, static):  # noqa: A002
+            return input
+
+    class P(ProjectBase):
+        def run(self):
+            t = self.create_task(Echo)
+            t.calculate([1, 2, 3])
+            return t
+
+    d = Distributor(timeout=2.0, redistribute_min=0.01)
+    handle = CalculationFramework(d).run_project(P)
+    pin = d.task_version("Echo")
+    assert pin >= 1
+    leased = d.queue.lease("probe", 3)
+    assert all(t.task_version == pin for t in leased.tickets)
+    assert handle is not None
+
+
+def test_edge_floor_rejects_fill_raced_by_invalidation():
+    """An invalidation landing while a miss fill is in flight must not be
+    lost: the raced (stale) fill is never cached as current, and a
+    conditional fetch with the stale version is never answered
+    not-modified."""
+    origin = HttpServerBase()
+    origin.add_static("w", "v1")
+    edge = EdgeCache(origin, capacity=4)
+    real = origin.serve_static_versioned
+    fired = {"done": False}
+
+    def racing(key, if_version=None):
+        got = real(key, if_version)
+        if not fired["done"]:
+            fired["done"] = True
+            origin.add_static("w", "v2")   # re-publish lands mid-flight
+        return got
+
+    origin.serve_static_versioned = racing
+    got = edge.serve_static_versioned("w")  # fill carries v1 payload
+    origin.serve_static_versioned = real
+    assert got.value == "v1"                # the raced reply itself
+    # ...but it was NOT frozen in: the stale version can't revalidate,
+    # and the next request re-warms to the current copy
+    again = edge.serve_static_versioned("w", if_version=got.version)
+    assert not again.not_modified
+    assert again.value == "v2"
+    final = edge.serve_static_versioned("w", if_version=again.version)
+    assert final.not_modified               # now provably current
+
+
+def test_browser_pin_heals_through_raced_edge_fill():
+    """A browser whose pinned fetch comes back OLDER than the pin (the
+    edge's fill raced an invalidation) retries unconditionally and ends
+    up with the fresh copy — the stale payload is never validated at the
+    pin."""
+    origin = HttpServerBase()
+    origin.add_static("w", "v1")                       # registry clock 1
+    origin.register_task(TaskDef("t", lambda x, s: s["w"],
+                                 static_files=("w",)))  # clock 2
+    edge = EdgeCache(origin, capacity=4)
+    real = origin.serve_static_versioned
+    fired = {"done": False}
+
+    def racing(key, if_version=None):
+        got = real(key, if_version)
+        if not fired["done"]:
+            fired["done"] = True
+            origin.add_static("w", "v2")               # clock 3, mid-fill
+        return got
+
+    origin.serve_static_versioned = racing
+    n = Node(edge)
+    task = n._get_task("t", 2)
+    # the ticket pins the post-re-publish coherence version (3): the
+    # edge's raced fill hands back v1, the browser heals with one
+    # unconditional retry
+    data = n._get_static(task, 3)
+    origin.serve_static_versioned = real
+    assert data == {"w": "v2"}
+    assert origin.task_version("t") == 3
+    # and the healed entry is cached: same pin, no further edge traffic
+    before = edge.download_count["w"]
+    assert n._get_static(task, 3) == {"w": "v2"}
+    assert edge.download_count["w"] == before

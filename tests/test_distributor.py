@@ -124,3 +124,21 @@ def test_prime_list_maker_project_end_to_end():
     assert primes[:8] == [2, 3, 5, 7, 11, 13, 17, 19]
     assert all(_is_prime(p) for p in primes)
     assert len(primes) == 46  # primes <= 200
+
+
+def test_v1_client_speed_scales_task_duration():
+    """profile.speed is a duration multiplier for v1 thread clients: a
+    0.25x client takes ~4x the real execution time per ticket (the old
+    code slept 0 and ignored speed entirely, so a 'slow' client drained
+    the queue as fast as a fast one)."""
+    d = make_distributor(timeout=5.0)
+    d.register_task(TaskDef("spin", lambda x, _: time.sleep(0.005) or x))
+    d.add_work("spin", list(range(4)))
+    t0 = time.monotonic()
+    d.spawn_clients([ClientProfile(name="slow", speed=0.25)])
+    assert d.queue.wait_all(timeout=15)
+    elapsed = time.monotonic() - t0
+    d.shutdown()
+    # 4 tickets x 5 ms real work at 0.25x speed >= 80 ms of simulated
+    # time; the ignored-speed path finished in ~20 ms
+    assert elapsed >= 0.06, elapsed

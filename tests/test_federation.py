@@ -271,3 +271,47 @@ def test_federation_member_is_async_distributor():
     homes = [id(s) for m in fed.members for s in m.home_shards]
     assert len(homes) == len(set(homes))           # home shards disjoint
     assert len(homes) == fed.queue.n_shards        # and exhaustive
+
+
+class TickingClock:
+    """Advances by ``step`` on every read — lets a single _queue_lease
+    call see time pass between its home attempt and its fabric retry."""
+
+    def __init__(self, step):
+        self.t = 0.0
+        self.step = step
+
+    def __call__(self):
+        self.t += self.step
+        return self.t
+
+
+def test_steals_not_counted_for_home_shard_grant_in_retry():
+    """The dry-home fallback re-merges across the WHOLE fabric; when the
+    retry's grant turns out to be the member's own home tickets (a home
+    cool-down expired between the two calls), it must NOT count as a
+    steal — only grants containing foreign-shard tickets do."""
+    fed = FederatedDistributor(2, n_shards=2, redistribute_min=5.0,
+                               clock=TickingClock(3.0))
+    task = next(f"task{i}" for i in range(64)
+                if shard_index(f"task{i}", 2) == 0)   # member0's home
+    fed.register_task(TaskDef(task, lambda x, _: x))
+    fed.add_work(task, [0])
+    m0, m1 = fed.members
+
+    # member0 leases its home ticket; the ticket enters its cool-down
+    batch = m0._queue_lease("c0", 1)
+    assert batch is not None and m0.steals == 0
+
+    # member0 again: home attempt lands inside the cool-down (None), the
+    # fabric-wide retry lands after it — granting member0's OWN ticket.
+    # The seed code counted this as a steal.
+    batch = m0._queue_lease("c0", 1)
+    assert batch is not None
+    assert batch.shards == [fed.queue.shards[0]]
+    assert m0.steals == 0
+
+    # member1's retry granting the same shard-0 ticket IS a steal
+    batch = m1._queue_lease("c1", 1)
+    assert batch is not None
+    assert m1.steals == 1

@@ -454,3 +454,42 @@ def test_split_dispatcher_weighted_aggregate():
     agg = SplitConcurrentDispatcher.aggregate(grads, [1.0, 3.0])
     # (1*1 + 3*3) / 4 = 2.5
     assert agg["w"] == pytest.approx(2.5)
+
+
+def test_run_until_done_deadline_follows_injected_clock():
+    """The drain loop's deadline is measured on the queue's injectable
+    clock: with a frozen virtual clock and a microscopic timeout, the run
+    must still complete (the old code raced WALL time and bailed out
+    False before the clients could finish)."""
+
+    async def main():
+        clock = FakeClock()          # frozen at 0.0 throughout
+        d = AsyncDistributor(timeout=5.0, redistribute_min=0.02,
+                             clock=clock, watchdog_interval=0.005)
+        d.register_task(TaskDef("echo", lambda x, _: x))
+        d.add_work("echo", [1, 2, 3])
+        d.spawn_clients([ClientProfile(name="c0", speed=2000.0)])
+        assert await d.run_until_done(timeout=1e-6)
+        return d
+
+    d = _run(main())
+    assert len(d.queue.results()) == 3
+
+
+def test_run_until_done_times_out_in_virtual_seconds():
+    """Conversely, advancing the virtual clock past the deadline times
+    the run out even though almost no wall time passed."""
+
+    async def main():
+        clock = FakeClock()
+        d = AsyncDistributor(timeout=5.0, redistribute_min=0.02,
+                             clock=clock, watchdog_interval=0.005)
+        d.register_task(TaskDef("echo", lambda x, _: x))
+        d.add_work("echo", [1, 2, 3])
+        # no clients: the queue can never drain
+        runner = asyncio.ensure_future(d.run_until_done(timeout=1.0))
+        await asyncio.sleep(0.02)
+        clock.advance(10.0)          # virtual time blows the 1.0s budget
+        return await runner
+
+    assert _run(main()) is False

@@ -325,3 +325,40 @@ def test_sharded_handout_order_matches_single_queue_vct_order(
                   lease_sizes=[1 + op % 4 for op in ops[:5]])
     assert handed_single == handed_sharded
     assert sorted(set(handed_single)) == list(range(serial))
+
+
+class CountingLock:
+    """Context-manager lock proxy that counts acquisitions."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.acquires = 0
+
+    def __enter__(self):
+        self.acquires += 1
+        return self.inner.__enter__()
+
+    def __exit__(self, *exc):
+        return self.inner.__exit__(*exc)
+
+
+def test_prune_batches_routing_cleanup_into_bounded_lock_traffic():
+    """Pruning N tickets must touch the store's _meta_lock a constant
+    number of times (route + cleanup), not once per ticket."""
+    q, clock = make_sharded(n_shards=3)
+    tasks = distinct_shard_tasks(2, 3)
+    tids = []
+    for task in tasks:
+        tids.extend(q.add_many(task, list(range(25))))
+    batch = q.lease("c", len(tids))
+    q.submit_batch(batch.lease_id, {t: t for t in batch.ticket_ids}, "c")
+    keep = q.add_many(tasks[0], ["unfinished"])   # must survive the prune
+
+    counting = CountingLock(q._meta_lock)
+    q._meta_lock = counting
+    assert q.prune(tids + keep) == len(tids)      # keep is incomplete
+    assert counting.acquires <= 3
+    # routing for pruned ids is gone; the unfinished ticket still routes
+    assert all(t not in q._ticket_shard for t in tids)
+    assert keep[0] in q._ticket_shard
+    assert q.results_for(keep) is None
