@@ -5,11 +5,17 @@ Prints ``name,us_per_call,derived`` CSV rows (plus the detailed records) so
 results are machine-comparable across runs.  Scaled-down sizes run inside a
 CPU budget; pass --full for paper-scale settings.
 
-The ``scheduler``, ``federation`` and ``cache`` entries additionally write
-machine-readable ``BENCH_scheduler.json`` / ``BENCH_federation.json`` /
-``BENCH_cache.json`` (throughput, speedup, stale-serve and egress numbers)
-so the perf trajectory is tracked across PRs — CI uploads them as
-artifacts.  ``--out-dir`` relocates them.
+The ``scheduler``, ``federation``, ``cache`` and ``transport`` entries
+additionally write machine-readable ``BENCH_scheduler.json`` /
+``BENCH_federation.json`` / ``BENCH_cache.json`` / ``BENCH_transport.json``
+(throughput, speedup, stale-serve and egress numbers) so the perf
+trajectory is tracked across PRs — CI uploads them as artifacts.
+``--out-dir`` relocates them.
+
+A benchmark that raises is reported with its full traceback and the run
+exits nonzero; JSON files are written atomically (temp file + rename)
+only after their benchmark's own assertions pass, so a failed run can
+never leave a partial or stale-looking BENCH_*.json behind.
 """
 from __future__ import annotations
 
@@ -18,15 +24,20 @@ import json
 import os
 import sys
 import time
+import traceback
 
 OUT_DIR = "."
 
 
 def _write_json(name: str, payload: dict) -> str:
+    """Atomically write BENCH_<name>.json (temp + rename): readers and CI
+    artifact uploads can never observe a half-written file."""
     os.makedirs(OUT_DIR, exist_ok=True)
     path = os.path.join(OUT_DIR, f"BENCH_{name}.json")
-    with open(path, "w") as f:
+    tmp = f"{path}.tmp"
+    with open(tmp, "w") as f:
         json.dump(payload, f, indent=2)
+    os.replace(tmp, path)
     print(f"  wrote {path}")
     return path
 
@@ -156,12 +167,34 @@ def bench_cache(full: bool):
     t0 = time.perf_counter()
     results = cache_coherence.run_sweep()
     us = (time.perf_counter() - t0) * 1e6
-    _write_json("cache", results)
     v = results["versioned"]
+    # assert BEFORE writing: a failed coherence bar must not leave a
+    # fresh-looking BENCH_cache.json behind
+    assert v["stale_serves"] == 0, v
+    _write_json("cache", results)
     _csv("cache_coherence", us,
          f"stale_serves={v['stale_serves']}|"
          f"egress_saved_vs_clear={results['egress_saved_vs_clear_pct']}%")
-    assert v["stale_serves"] == 0, v
+    return results
+
+
+def bench_transport(full: bool):
+    """Wire-protocol overhead (real loopback sockets, wall clock); writes
+    BENCH_transport.json with serialized-vs-in-process round throughput,
+    the wire byte ledger, and the over-the-wire re-register storm."""
+    from benchmarks import transport_overhead
+
+    t0 = time.perf_counter()
+    results = transport_overhead.run_sweep()
+    us = (time.perf_counter() - t0) * 1e6
+    # acceptance bars first (see transport_overhead.main): coherence
+    # survives serialization; wire costs <= half the round throughput
+    assert results["storm"]["stale_serves"] == 0, results["storm"]
+    assert results["throughput_ratio"] >= 0.5, results
+    _write_json("transport", results)
+    _csv("transport_overhead", us,
+         f"throughput_ratio={results['throughput_ratio']}x|"
+         f"storm_stale={results['storm']['stale_serves']}")
     return results
 
 
@@ -174,6 +207,7 @@ BENCHES = {
     "scheduler": bench_scheduler,
     "federation": bench_federation,
     "cache": bench_cache,
+    "transport": bench_transport,
 }
 
 
@@ -194,10 +228,16 @@ def main() -> None:
         print(f"== {name} ==", flush=True)
         try:
             BENCHES[name](args.full)
-        except Exception as e:  # keep the harness going
+        except Exception:
+            # keep the harness going so one broken benchmark doesn't hide
+            # the others' results, but fail LOUDLY: full traceback now,
+            # nonzero exit at the end (no BENCH json is written for a
+            # failed entry — _write_json runs after a bench's assertions)
             failures += 1
-            print(f"  FAILED: {e!r}")
+            print(f"  FAILED: {name}")
+            traceback.print_exc()
     if failures:
+        print(f"{failures} benchmark(s) failed", file=sys.stderr)
         sys.exit(1)
 
 

@@ -1,0 +1,200 @@
+"""Transport-overhead benchmark: serialized wire rounds vs in-process.
+
+Two runs of the identical workload (same distributor, sizer, client count
+and speeds, same ticket mix):
+
+  * ``inprocess`` — ``AsyncBrowserClient`` tasks sharing the event loop
+    with the distributor, communicating by method calls (the pre-transport
+    federation's only mode);
+  * ``transport`` — every client is a ``RemoteBrowserClient`` on the far
+    side of a loopback socket speaking the length-prefixed JSON protocol
+    (docs/PROTOCOL.md): every lease, submit, and asset fetch is a framed,
+    pickled round-trip.
+
+The headline number is **round-throughput ratio** (transport tickets/s ÷
+in-process tickets/s); the acceptance bar is ≥ 0.5x.  The wire ledger
+(frames and bytes per ticket) quantifies what a round actually costs in
+serialization.  A third phase re-runs the PR 3 **re-register storm** with
+every client remote and asserts **zero stale serves** — cache coherence
+must survive the serialization boundary.
+
+Unlike the virtual-clock benchmarks, this one runs real sockets, so it
+uses wall-clock time: each cell is the median of ``REPS`` repetitions.
+
+Usage:
+  PYTHONPATH=src python benchmarks/transport_overhead.py [--json out.json]
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import statistics
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+from repro.core.distributor import (AdaptiveSizer, AsyncDistributor,
+                                    ClientProfile, TaskDef)
+from repro.core.transport import TransportServer, spawn_remote_clients
+
+N_TICKETS = 400
+N_CLIENTS = 4
+SPEED = 800.0          # work units/s -> 1.25 ms simulated compute/ticket
+REPS = 3
+STORM_ROUNDS = 8
+STORM_TICKETS = 16
+
+
+def _square(x, static):
+    return x * x
+
+
+def _read_weights(x, static):
+    return (x, static["weights"])
+
+
+def _profiles():
+    return [ClientProfile(name=f"c{i}", speed=SPEED)
+            for i in range(N_CLIENTS)]
+
+
+def _dist(**kw):
+    return AsyncDistributor(
+        timeout=30.0, redistribute_min=0.05,
+        sizer=AdaptiveSizer(target_lease_time=0.05, max_size=32),
+        watchdog_interval=0.02, grace=4.0, **kw)
+
+
+async def _run_inprocess() -> float:
+    d = _dist()
+    d.register_task(TaskDef("sq", _square))
+    tids = d.add_work("sq", list(range(N_TICKETS)))
+    d.spawn_clients(_profiles())
+    t0 = time.perf_counter()
+    ok = await d.run_until_done(timeout=120.0)
+    elapsed = time.perf_counter() - t0
+    assert ok, d.console()
+    assert len(d.queue.results_for(tids)) == N_TICKETS
+    return elapsed
+
+
+async def _run_transport() -> tuple[float, dict]:
+    d = _dist()
+    d.register_task(TaskDef("sq", _square))
+    tids = d.add_work("sq", list(range(N_TICKETS)))
+    server = TransportServer(d)
+    addr = await server.start()
+    t0 = time.perf_counter()
+    clients, tasks = spawn_remote_clients(addr, _profiles())
+    ok = await d.run_until_done(timeout=120.0)
+    elapsed = time.perf_counter() - t0
+    assert ok, d.console()
+    assert len(d.queue.results_for(tids)) == N_TICKETS
+    await asyncio.gather(*tasks)
+    wire = server.stats()
+    await server.stop()
+    return elapsed, wire
+
+
+async def _run_storm() -> dict:
+    """The PR 3 re-register storm with every client remote: weights are
+    re-published each round; a ticket observing any other round's weights
+    is a stale serve.  The bar is zero."""
+    d = _dist(keep_alive=True)
+    d.add_static("weights", -1)
+    d.register_task(TaskDef("rw", _read_weights, static_files=("weights",)))
+    server = TransportServer(d)
+    addr = await server.start()
+    clients, tasks = spawn_remote_clients(addr, _profiles())
+    stale = total = 0
+    for rnd in range(STORM_ROUNDS):
+        d.add_static("weights", rnd)
+        tids = d.add_work("rw", list(range(STORM_TICKETS)))
+        deadline = time.monotonic() + 60.0
+        while True:
+            wake = d._wake_event()
+            out = d.queue.results_for(tids)
+            if out is not None:
+                break
+            assert time.monotonic() < deadline, d.console()
+            await d._wait_on(wake, 0.05)
+        for _, w in out:
+            total += 1
+            stale += (w != rnd)
+        d.queue.prune(tids)
+    for c in clients:
+        await c.stop()
+    await asyncio.gather(*tasks, return_exceptions=True)
+    await d.shutdown()
+    await server.stop()
+    return {"rounds": STORM_ROUNDS, "tickets": total, "stale_serves": stale,
+            "revalidations": sum(c.revalidations for c in clients),
+            "push_invalidations": sum(c.push_invalidations
+                                      for c in clients)}
+
+
+def run_sweep() -> dict:
+    """Run all cells; returns the machine-readable results dict
+    (``benchmarks/run.py`` writes it as BENCH_transport.json)."""
+    inproc = [asyncio.run(_run_inprocess()) for _ in range(REPS)]
+    trans = []
+    wire = None
+    for _ in range(REPS):
+        elapsed, wire = asyncio.run(_run_transport())
+        trans.append(elapsed)
+    t_in = statistics.median(inproc)
+    t_tr = statistics.median(trans)
+    thr_in = N_TICKETS / t_in
+    thr_tr = N_TICKETS / t_tr
+    storm = asyncio.run(_run_storm())
+    return {
+        "workload": {"tickets": N_TICKETS, "clients": N_CLIENTS,
+                     "speed": SPEED, "reps": REPS},
+        "inprocess": {"makespan_s": round(t_in, 4),
+                      "tickets_per_s": round(thr_in, 1)},
+        "transport": {"makespan_s": round(t_tr, 4),
+                      "tickets_per_s": round(thr_tr, 1),
+                      "frames": wire["frames_in"] + wire["frames_out"],
+                      "wire_bytes": wire["bytes_in"] + wire["bytes_out"],
+                      "bytes_per_ticket": round(
+                          (wire["bytes_in"] + wire["bytes_out"])
+                          / N_TICKETS, 1)},
+        "throughput_ratio": round(thr_tr / thr_in, 3),
+        "storm": storm,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="also write results to this path")
+    args = ap.parse_args()
+    results = run_sweep()
+    print(f"{'cell':<12} {'makespan':>10} {'tickets/s':>10}")
+    for cell in ("inprocess", "transport"):
+        r = results[cell]
+        print(f"{cell:<12} {r['makespan_s']:>9.3f}s "
+              f"{r['tickets_per_s']:>10.1f}")
+    tr = results["transport"]
+    print(f"wire: {tr['frames']} frames, {tr['wire_bytes']} bytes "
+          f"({tr['bytes_per_ticket']} bytes/ticket)")
+    print(f"throughput ratio (transport/in-process): "
+          f"{results['throughput_ratio']}x")
+    s = results["storm"]
+    print(f"storm over the wire: {s['stale_serves']}/{s['tickets']} stale "
+          f"({s['revalidations']} revalidations, "
+          f"{s['push_invalidations']} push invalidations)")
+    # acceptance bars: coherence survives serialization, and the wire
+    # costs at most half the in-process round throughput
+    assert s["stale_serves"] == 0, s
+    assert results["throughput_ratio"] >= 0.5, results
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,15 @@ once through per-member edge caches, member 0 is killed mid-run, and
 the survivors steal its stranded work (``--all`` runs everything).
 
   PYTHONPATH=src python examples/sashimi_browser_sim.py --federation
+
+``--transport`` runs the cross-host transport demo: a 2-member
+federation behind a ``TransportServer`` loopback socket, every client a
+``RemoteBrowserClient`` speaking only the length-prefixed JSON protocol
+(docs/PROTOCOL.md) — zero direct object references.  Mid-run every
+connection is hard-dropped; the clients reconnect, resume their
+unsubmitted results, and the round still completes exactly.
+
+  PYTHONPATH=src python examples/sashimi_browser_sim.py --transport
 """
 import argparse
 import asyncio
@@ -29,6 +38,7 @@ from repro.core.distributor import (AdaptiveSizer, AsyncDistributor,
 from repro.core.federation import FederatedDistributor
 from repro.core.project import CalculationFramework, ProjectBase, TaskBase
 from repro.core.split_parallel import SplitConcurrentDispatcher
+from repro.core.transport import TransportServer, spawn_remote_clients
 from repro.data import clustered_images
 
 
@@ -217,21 +227,84 @@ async def demo_federation():
     print(f"  lease releases (watchdog rescues): {con['lease_releases']}")
 
 
+def prime_check(n, static):
+    """Module-level so the task code pickles across the wire."""
+    return static["is_prime"](n)
+
+
+async def demo_transport():
+    """Cross-host transport: a 2-member federation behind a loopback
+    ``TransportServer``, every client a ``RemoteBrowserClient`` that holds
+    no reference to any distributor object — leases, submits, asset
+    fetches, and invalidations are all framed JSON round-trips
+    (docs/PROTOCOL.md).  Mid-run the server hard-drops every connection;
+    clients reconnect with resume and the round completes exactly."""
+    fed = FederatedDistributor(
+        2, n_shards=4, timeout=10.0, redistribute_min=0.05,
+        sizer=AdaptiveSizer(target_lease_time=0.05, max_size=16),
+        watchdog_interval=0.01, grace=2.0,
+        project_name="TransportDemo")
+    fed.add_static("is_prime", is_prime)
+    fed.register_task(TaskDef("prime", prime_check,
+                              static_files=("is_prime",)))
+    prime_tids = fed.add_work("prime", list(range(2, 402)))
+
+    server = TransportServer(fed)
+    host, port = await server.start()
+    clients, tasks = spawn_remote_clients(
+        (host, port),
+        [ClientProfile(name=f"remote{i}", speed=2000.0) for i in range(4)],
+        reconnect_delay=0.02)
+
+    await asyncio.sleep(0.05)            # let leases get in flight
+    dropped = server.drop_connections()  # simulated network partition
+    ok = await fed.run_until_done(timeout=60.0)
+    assert ok, fed.console()
+    await asyncio.gather(*tasks)
+    wire = server.stats()
+    await server.stop()
+
+    res = fed.queue.results()
+    primes = [n for n, tid in zip(range(2, 402), prime_tids) if res[tid]]
+    assert len(primes) == 79             # π(401)
+
+    print(f"transport: {len(prime_tids)} tickets over {host}:{port}, "
+          f"{dropped} connections dropped mid-run, "
+          f"{sum(c.reconnects for c in clients)} reconnects — "
+          f"all results exact")
+    print(f"  wire: {wire['frames_in']}+{wire['frames_out']} frames, "
+          f"{wire['bytes_in'] + wire['bytes_out']} bytes, "
+          f"{wire['protocol_errors']} protocol errors")
+    for c in clients:
+        print(f"  {c.profile.name}: member={c.member} "
+              f"executed={c.executed} revalidations={c.revalidations} "
+              f"reconnects={c.reconnects}")
+    print(f"  edges: "
+          f"{[round(m.edge.stats()['hit_rate'], 2) for m in fed.members]} "
+          f"hit rate; origin egress {dict(fed.download_count)}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--federation", action="store_true",
                     help="run the federation-fabric demo only")
+    ap.add_argument("--transport", action="store_true",
+                    help="run the cross-host transport demo only")
     ap.add_argument("--all", action="store_true",
-                    help="run every demo including the federation")
+                    help="run every demo including federation + transport")
     args = ap.parse_args()
     if args.federation:
         asyncio.run(demo_federation())
+        return
+    if args.transport:
+        asyncio.run(demo_transport())
         return
     demo_primes_v1()
     asyncio.run(demo_knn_v2())
     asyncio.run(demo_split_round_v2())
     if args.all:
         asyncio.run(demo_federation())
+        asyncio.run(demo_transport())
 
 
 if __name__ == "__main__":

@@ -16,5 +16,8 @@ Modules map to the paper as follows (see README.md for the full table):
                          locks, global min-VCT merge — beyond-paper);
   * ``federation``     — multi-distributor federation: home-shard members
                          with work-stealing plus the edge cache tier in
-                         front of the origin HTTP store (beyond-paper).
+                         front of the origin HTTP store (beyond-paper);
+  * ``transport``      — the cross-host wire protocol (length-prefixed
+                         JSON frames, loopback server, remote clients
+                         with reconnect-resume; spec in docs/PROTOCOL.md).
 """

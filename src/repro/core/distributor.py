@@ -118,6 +118,28 @@ class Fetched:
     not_modified: bool = False
     current: bool = True
 
+    # -- wire codec (docs/PROTOCOL.md) ---------------------------------------
+
+    def to_wire(self, encode_value) -> dict:
+        """JSON-safe dict for the transport layer: a not-modified reply is
+        version metadata only; otherwise ``payload`` carries the encoded
+        value (``encode_value`` is the opaque payload codec)."""
+        d = {"version": self.version, "not_modified": self.not_modified,
+             "current": self.current}
+        if not self.not_modified:
+            d["payload"] = encode_value(self.value)
+        return d
+
+    @classmethod
+    def from_wire(cls, d: dict, decode_value) -> "Fetched":
+        """Rebuild a fetch reply from its wire dict (inverse of
+        :meth:`to_wire`)."""
+        if d["not_modified"]:
+            return cls(None, d["version"], not_modified=True,
+                       current=d.get("current", True))
+        return cls(decode_value(d["payload"]), d["version"],
+                   current=d.get("current", True))
+
 
 @dataclass
 class ClientProfile:
@@ -328,6 +350,46 @@ class _CacheEntry:
     validated: int
 
 
+def merge_versioned_fetch(entry: Optional[_CacheEntry], got: Fetched,
+                          min_version: int
+                          ) -> tuple[Optional[_CacheEntry], bool, bool]:
+    """The pure cache-merge decision for the download-through-cache rule,
+    shared by the sync in-process path (``BrowserNodeBase``) and the
+    async wire path (``transport.RemoteBrowserClient``) so the two
+    staleness guarantees can never diverge.
+
+    ``entry`` is the current cache slot (or None), ``got`` the reply to a
+    conditional fetch, ``min_version`` the ticket's pin.  Returns
+    ``(new_entry, revalidated, needs_refetch)``:
+
+      * ``revalidated`` — the reply was an authoritative "not modified";
+        the entry is re-validated at the pin (counter-bump accounting);
+      * ``needs_refetch`` — the payload was served by an edge whose fill
+        raced an invalidation (``current=False``): retry once
+        unconditionally and fold the retry with
+        :func:`merge_unconditional_fetch`;
+      * otherwise ``new_entry`` carries the fresh payload, validated at
+        the pin."""
+    if got.not_modified:
+        # authoritative "your copy is current": validate at the pin
+        return (_CacheEntry(entry.value, entry.version,
+                            max(min_version, entry.version)), True, False)
+    if not got.current:
+        return None, False, True           # heal through a raced edge fill
+    return (_CacheEntry(got.value, got.version,
+                        max(min_version, got.version)), False, False)
+
+
+def merge_unconditional_fetch(got: Fetched, min_version: int) -> _CacheEntry:
+    """Fold the retry after a raced edge fill: validate at the pin only
+    if the transport now claims currency, else only at the payload's own
+    version — so the next pinned ticket revalidates instead of freezing
+    the staleness in."""
+    validated = (max(min_version, got.version) if got.current
+                 else got.version)
+    return _CacheEntry(got.value, got.version, validated)
+
+
 class BrowserNodeBase:
     """Per-client state and helpers shared by the v1 thread client and the
     v2 asyncio client: LRU cache, counters, deterministic failure RNG, and
@@ -362,30 +424,23 @@ class BrowserNodeBase:
         edge); ``min_version`` is the ticket's pin.
 
           * entry validated at >= the pin: serve from cache, no trip;
-          * otherwise fetch conditionally: "not modified" bumps the
-            validated mark, a payload replaces the entry;
-          * a payload the transport does NOT claim current (an edge
-            whose fill raced an invalidation) is retried once, and is
-            validated only at its own version if the retry is still
-            unsure — so the next pinned ticket revalidates instead of
-            freezing the staleness in."""
+          * otherwise fetch conditionally and fold the reply with
+            :func:`merge_versioned_fetch` — "not modified" bumps the
+            validated mark, a payload replaces the entry, and a payload
+            the transport does NOT claim current (an edge whose fill
+            raced an invalidation) is retried once unconditionally."""
         entry = self.cache.get(cache_key)
         if entry is not None and entry.validated >= min_version:
             return entry.value
         got = fetch(entry.version if entry is not None else None)
-        if got.not_modified:
-            # authoritative "your copy is current": validate at the pin
+        new, revalidated, refetch = merge_versioned_fetch(entry, got,
+                                                          min_version)
+        if refetch:
+            new = merge_unconditional_fetch(fetch(None), min_version)
+        if revalidated:
             self.revalidations += 1
-            value, version = entry.value, entry.version
-            validated = max(min_version, version)
-        else:
-            if not got.current:
-                got = fetch(None)      # heal through a raced edge fill
-            value, version = got.value, got.version
-            validated = (max(min_version, version) if got.current
-                         else version)
-        self.cache.put(cache_key, _CacheEntry(value, version, validated))
-        return value
+        self.cache.put(cache_key, new)
+        return new.value
 
     def _get_task(self, name: str, min_version: int = 0) -> TaskDef:
         """Step 3: task code through the cache, revalidating when the
@@ -571,6 +626,24 @@ class AsyncDistributor(HttpServerBase):
 
     # -- client/session management ------------------------------------------
 
+    def transport_endpoints(self) -> list["AsyncDistributor"]:
+        """The lease/fetch endpoints a ``TransportServer`` may bind remote
+        connections to — for a single distributor, itself.  A federation
+        returns its alive members, so each remote client lands on one
+        member's scheduler + edge cache (see ``core/transport.py``)."""
+        return [self]
+
+    def ensure_watchdog(self):
+        """Arm the lease watchdog if it isn't running (must be called with
+        an event loop running).  Spawning in-process clients does this
+        automatically; a ``TransportServer`` serving only remote clients
+        calls it explicitly.  The ``.done()`` check matters: a
+        non-keep_alive watchdog self-terminates when a round drains, and a
+        later spawn/connection must arm a fresh one."""
+        if self._watchdog_task is None or self._watchdog_task.done():
+            loop = asyncio.get_running_loop()
+            self._watchdog_task = loop.create_task(self._watchdog())
+
     def spawn_clients(self, profiles) -> list["AsyncBrowserClient"]:
         """Create one :class:`AsyncBrowserClient` task per profile (must be
         called with an event loop running)."""
@@ -578,10 +651,7 @@ class AsyncDistributor(HttpServerBase):
         cs = [AsyncBrowserClient(self, p) for p in profiles]
         self.clients.extend(cs)
         self._client_tasks.extend(loop.create_task(c.run()) for c in cs)
-        if self._watchdog_task is None or self._watchdog_task.done():
-            # .done() matters: a non-keep_alive watchdog self-terminates
-            # when a round drains, and a later spawn must arm a fresh one
-            self._watchdog_task = loop.create_task(self._watchdog())
+        self.ensure_watchdog()
         return cs
 
     async def run_until_done(self, timeout: float = 60.0, *,

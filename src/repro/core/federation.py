@@ -221,15 +221,20 @@ class FederationMember(AsyncDistributor):
 
     # clients of this member fetch assets through its edge, not the origin
     def fetch_task_versioned(self, name: str, if_version=None):
+        """Serve task code from this member's edge (conditional fetch:
+        ``if_version`` matching costs a counter bump, not a payload)."""
         return self.edge.fetch_task_versioned(name, if_version)
 
     def serve_static_versioned(self, key: str, if_version=None):
+        """Serve a static asset from this member's edge (conditional)."""
         return self.edge.serve_static_versioned(key, if_version)
 
     def fetch_task(self, name: str) -> TaskDef:
+        """Unconditional task fetch through the edge (v1 compat)."""
         return self.edge.fetch_task(name)
 
     def serve_static(self, key: str):
+        """Unconditional static fetch through the edge (v1 compat)."""
         return self.edge.serve_static(key)
 
     def _notify_waiters(self):
@@ -290,6 +295,8 @@ class FederatedDistributor(HttpServerBase):
 
     @property
     def keep_alive(self) -> bool:
+        """True when every member survives drained rounds (the
+        ``SplitConcurrentDispatcher`` mode); setting it fans out."""
         return all(m.keep_alive for m in self.members)
 
     @keep_alive.setter
@@ -332,6 +339,14 @@ class FederatedDistributor(HttpServerBase):
     def alive_members(self) -> list[FederationMember]:
         """Members still serving clients."""
         return [m for m in self.members if m.alive]
+
+    def transport_endpoints(self) -> list[FederationMember]:
+        """Endpoints a ``TransportServer`` binds remote connections to: the
+        alive members.  Each remote client is pinned to one member for its
+        connection's lifetime, so its leases take the member's home-shard /
+        steal path and its asset fetches go through that member's edge —
+        exactly like an in-process client of that member."""
+        return self.alive_members()
 
     def spawn_clients(self, profiles, *, member: Optional[int] = None):
         """Attach clients to members.  Default policy is least-loaded:

@@ -65,13 +65,21 @@ class TaskHandle:
 
     def block(self, callback: Optional[Callable] = None,
               timeout: Optional[float] = None):
-        """Wait for all tickets; return results ordered like the inputs."""
+        """Wait for all of THIS task's tickets; returns results ordered
+        like the inputs ("as if processed by the local machine"), passing
+        them to ``callback`` first when given.  Raises TimeoutError with
+        the console snapshot if ``timeout`` elapses.  Uses the queue's
+        O(round) ``results_for`` rather than copying the whole results
+        table, so long-running multi-task projects don't pay for history."""
         ok = self.framework.distributor.queue.wait_all(timeout)
         if not ok:
             raise TimeoutError(
                 f"tickets unfinished: {self.framework.distributor.console()}")
-        res = self.framework.distributor.queue.results()
-        ordered = [res[tid] for tid in self._ticket_ids]
+        ordered = self.framework.distributor.queue.results_for(
+            self._ticket_ids)
+        if ordered is None:       # wait_all raced a concurrent producer
+            raise TimeoutError(
+                f"tickets unfinished: {self.framework.distributor.console()}")
         if callback is not None:
             callback(ordered)
         return ordered

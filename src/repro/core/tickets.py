@@ -76,6 +76,30 @@ class Ticket:
                       self.last_distributed_at, lease_id=self.lease_id,
                       task_version=self.task_version)
 
+    # -- wire codec (docs/PROTOCOL.md) ---------------------------------------
+    # Scheduling state (created_at / last_distributed_at / distribute_count)
+    # is meaningful only on the distributor's clock and never crosses the
+    # wire; a remote client needs exactly what it takes to execute the
+    # ticket and submit its result.
+
+    def to_wire(self, encode_args: Callable[[Any], Any]) -> dict:
+        """The ticket as a JSON-safe dict for the transport layer.
+        ``encode_args`` serialises ``args`` (opaque payload codec)."""
+        return {"ticket_id": self.ticket_id, "task_name": self.task_name,
+                "args": encode_args(self.args), "work": self.work,
+                "task_version": self.task_version,
+                "lease_id": self.lease_id}
+
+    @classmethod
+    def from_wire(cls, d: dict,
+                  decode_args: Callable[[Any], Any]) -> "Ticket":
+        """Rebuild a client-side ticket from its wire dict (inverse of
+        :meth:`to_wire`; server-only scheduling fields default to zero)."""
+        return cls(d["ticket_id"], d["task_name"], decode_args(d["args"]),
+                   created_at=0.0, work=d["work"],
+                   lease_id=d.get("lease_id"),
+                   task_version=d.get("task_version", 0))
+
 
 @dataclass
 class ClientStats:
@@ -136,6 +160,24 @@ class LeaseBatch:
     def ticket_ids(self) -> list:
         """Ids of the batched tickets, in lease order."""
         return [t.ticket_id for t in self.tickets]
+
+    # -- wire codec (docs/PROTOCOL.md) ---------------------------------------
+
+    def to_wire(self, encode_args) -> dict:
+        """The lease as a JSON-safe ``lease_grant`` body: lease id, client,
+        and the tickets' wire dicts.  ``issued_at``, ``expected_duration``
+        and ``shards`` are distributor-side scheduling state and stay off
+        the wire."""
+        return {"lease_id": self.lease_id, "client": self.client,
+                "tickets": [t.to_wire(encode_args) for t in self.tickets]}
+
+    @classmethod
+    def from_wire(cls, d: dict, decode_args) -> "LeaseBatch":
+        """Rebuild a client-side lease from its wire dict (inverse of
+        :meth:`to_wire`)."""
+        return cls(d["lease_id"], d["client"],
+                   [Ticket.from_wire(t, decode_args) for t in d["tickets"]],
+                   issued_at=0.0)
 
 
 class TicketQueue:

@@ -1,0 +1,125 @@
+#!/usr/bin/env python
+"""Check that intra-repo markdown links resolve.
+
+Scans markdown files for inline links/images ``[text](target)`` and
+verifies every *relative* target (skipping http(s)/mailto/absolute URLs)
+points at an existing file or directory, resolved against the linking
+file's location.  For ``file.md#anchor`` (and in-file ``#anchor``)
+targets, the anchor must match a heading in the target file under
+GitHub's slug rules (lowercase, punctuation stripped, spaces → dashes).
+
+Usage:
+  python tools/check_md_links.py [root]        # default: repo root
+
+Exit status is nonzero if any link is broken; each broken link is
+reported as ``file:line: target — reason``.  CI runs this in the docs
+job so README ⇄ ARCHITECTURE ⇄ PROTOCOL cross-links can't rot.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# inline links/images, tolerating one level of nested [] in the text;
+# reference-style definitions are rare here and skipped on purpose
+_LINK = re.compile(r"!?\[(?:[^\]\[]|\[[^\]]*\])*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.+?)\s*#*\s*$")
+_CODE_FENCE = re.compile(r"^(```|~~~)")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug for a heading: lowercase, drop everything but
+    word chars/spaces/dashes, spaces to dashes (backticks etc. removed)."""
+    s = heading.strip().lower()
+    s = re.sub(r"[`*_]", "", s)
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def heading_slugs(md_path: str) -> set[str]:
+    """All anchor slugs a markdown file exposes (fenced code excluded)."""
+    slugs: set[str] = set()
+    seen: dict[str, int] = {}
+    in_fence = False
+    with open(md_path, encoding="utf-8") as f:
+        for line in f:
+            if _CODE_FENCE.match(line):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            m = _HEADING.match(line)
+            if not m:
+                continue
+            slug = github_slug(m.group(1))
+            n = seen.get(slug, 0)
+            seen[slug] = n + 1
+            slugs.add(slug if n == 0 else f"{slug}-{n}")
+    return slugs
+
+
+def iter_links(md_path: str):
+    """Yield ``(line_number, target)`` for every inline link, skipping
+    fenced code blocks (ASCII diagrams are full of ``[...]``)."""
+    in_fence = False
+    with open(md_path, encoding="utf-8") as f:
+        for i, line in enumerate(f, 1):
+            if _CODE_FENCE.match(line):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for m in _LINK.finditer(line):
+                yield i, m.group(1)
+
+
+def check_file(md_path: str) -> list[str]:
+    """Broken-link report lines for one markdown file (empty = clean)."""
+    problems = []
+    base = os.path.dirname(md_path)
+    for lineno, target in iter_links(md_path):
+        if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # http:, mailto:, ...
+            continue
+        if target.startswith("/"):
+            continue                                   # site-absolute: skip
+        path_part, _, anchor = target.partition("#")
+        dest = md_path if not path_part else os.path.normpath(
+            os.path.join(base, path_part))
+        if not os.path.exists(dest):
+            problems.append(f"{md_path}:{lineno}: {target} — "
+                            f"no such file {dest}")
+            continue
+        if anchor and dest.endswith(".md"):
+            if anchor not in heading_slugs(dest):
+                problems.append(f"{md_path}:{lineno}: {target} — "
+                                f"no heading #{anchor} in {dest}")
+    return problems
+
+
+def find_markdown(root: str) -> list[str]:
+    """Every tracked-ish .md under root (skips hidden dirs and caches)."""
+    out = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames
+                       if not d.startswith(".") and d != "__pycache__"]
+        out.extend(os.path.join(dirpath, f) for f in filenames
+                   if f.endswith(".md"))
+    return sorted(out)
+
+
+def main() -> int:
+    root = sys.argv[1] if len(sys.argv) > 1 else "."
+    files = find_markdown(root)
+    problems = []
+    for md in files:
+        problems.extend(check_file(md))
+    for p in problems:
+        print(p)
+    print(f"checked {len(files)} markdown files: "
+          f"{len(problems)} broken link(s)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
