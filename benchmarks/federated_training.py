@@ -1,0 +1,545 @@
+"""Training-fabric benchmark: federation-scale §4.1 rounds end to end.
+
+Four cells, mirroring the acceptance bars:
+
+  * ``throughput`` — discrete-event simulation (virtual clock, fully
+    deterministic) of round-based data-parallel SGD over the REAL
+    fabric: the real ``ShardedTicketQueue`` with per-member affinity
+    placement, real ``EdgeCache``/version-pin fetch paths (clients are
+    ``BrowserNodeBase`` instances computing the real gradients), members
+    modelled as serialized service stations.  1 vs 4 members on the
+    bimodal client mix; the bar is **≥ 2x round throughput at 4
+    members**.
+  * ``equivalence`` — the real asyncio :class:`FederatedTrainer` +
+    :class:`FederatedTrainingLoop` on a 4-member federation: the
+    federated loss trajectory must match in-process full-batch training
+    within float tolerance, with zero stale-weight executions.
+  * ``faults`` — one member killed mid-run AND one pathological
+    straggler client, under both straggler policies: ``reticket`` must
+    complete every round with exact math (trajectory still matches
+    in-process) and ``fold`` must close every round at the K-of-N
+    barrier; zero stale-weight executions in both.
+  * ``resume`` — kill-and-resume from a round-boundary checkpoint
+    (paper JSON+base64 format) reproduces the unkilled federated loss
+    trajectory.
+
+Usage:
+  PYTHONPATH=src python benchmarks/federated_training.py [--json out.json]
+                                                         [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import heapq
+import itertools
+import json
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core.distributor import (AdaptiveSizer, BrowserNodeBase,
+                                    ClientProfile, FixedSizer, TaskDef)
+from repro.core.federation import FederatedDistributor
+from repro.core.split_parallel import TrainState, weighted_grad_mean
+from repro.core.tickets import CANCELLED
+from repro.optim import adagrad
+from repro.train_fabric import (FederatedTrainer, FederatedTrainingLoop,
+                                Rebalancer, affinity_placement,
+                                checkpoint_path, load_round_checkpoint)
+
+# -- the workload: data-parallel linear regression --------------------------
+# Tiny on purpose: the benchmark measures the FABRIC (rounds, barriers,
+# failover, checkpoints), not FLOPs.  Gradients are exact, so the
+# work-weighted shard aggregate equals the full-batch gradient and
+# loss-equivalence is a hard check, not a statistical one.
+
+D_IN = 8
+N_ROWS = 96
+LR = 0.3
+_rng = np.random.default_rng(7)
+X = _rng.normal(size=(N_ROWS, D_IN)).astype(np.float32)
+W_TRUE = _rng.normal(size=(D_IN,)).astype(np.float32)
+Y = (X @ W_TRUE + 0.01 * _rng.normal(size=(N_ROWS,))).astype(np.float32)
+
+RTT = 0.05          # client <-> member round-trip latency (virtual s)
+SERVICE = 0.025     # member service time per lease/submit request
+N_SIM_CLIENTS = 16
+BASE_RATE = 10.0    # rows / s for a "slow" simulated client
+SIM_GRACE = 3.0
+
+
+def grad_shard(args, static):
+    """The registered task: exact gradient + loss of one row slice, with
+    the served weights' round tag echoed back (stale-weight detector)."""
+    lo, hi = args
+    w = np.asarray(static["weights"]["params"]["w"])
+    r = X[lo:hi] @ w - Y[lo:hi]
+    return {"grad": {"w": (2.0 * X[lo:hi].T @ r / (hi - lo))
+                     .astype(np.float32)},
+            "loss": float((r ** 2).mean()),
+            "round": static["weights"]["round"]}
+
+
+def fresh_state(opt) -> TrainState:
+    params = {"w": np.zeros(D_IN, np.float32)}
+    return TrainState(params=params, head={}, head_stale={},
+                      opt_state=opt.init(params), head_opt_state={},
+                      prev_features=(), prev_labels=(), prev_mask=(),
+                      step=np.zeros((), np.int32))
+
+
+def in_process_losses(rounds: int) -> list[float]:
+    """Full-batch reference trajectory (same optimizer, same data)."""
+    opt = adagrad(LR)
+    state = fresh_state(opt)
+    params, opt_state = state.params, state.opt_state
+    losses = []
+    for _ in range(rounds):
+        w = np.asarray(params["w"])
+        r = X @ w - Y
+        losses.append(float((r ** 2).mean()))
+        g = {"w": (2.0 * X.T @ r / N_ROWS).astype(np.float32)}
+        params, opt_state = opt.update(g, opt_state, params)
+    return losses
+
+
+def equal_plan(n_shards: int) -> tuple[list, list]:
+    """Deterministic equal partition of the batch into row slices."""
+    bounds = np.linspace(0, N_ROWS, n_shards + 1).astype(int)
+    args = [(int(lo), int(hi)) for lo, hi in zip(bounds[:-1], bounds[1:])]
+    work = [float(hi - lo) for lo, hi in args]
+    return args, work
+
+
+def rate_plan(trainer: FederatedTrainer, default_shards: int
+              ) -> tuple[list, list]:
+    """Measured-rate partition: shard sizes from the fabric's per-client
+    EWMA throughput (``client_rates`` → ``adaptive_shard_sizes``)."""
+    sizes = trainer.plan_shards(N_ROWS, default_shards=default_shards)
+    bounds = np.cumsum([0] + sizes)
+    args = [(int(lo), int(hi)) for lo, hi in zip(bounds[:-1], bounds[1:])]
+    return args, [float(s) for s in sizes]
+
+
+# ---------------------------------------------------------------------------
+# Cell 1: virtual-clock round-throughput simulation (1 vs 4 members)
+# ---------------------------------------------------------------------------
+
+
+class SimClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+class _SimBrowser(BrowserNodeBase):
+    """A browser node whose fetches go through its member's real edge
+    cache with real version pins — only the *timing* is simulated."""
+
+    def __init__(self, member, profile):
+        self._init_browser(member, profile)
+
+
+def simulate_training(n_members: int, *, rounds: int,
+                      redistribute_min: float = 0.5) -> dict:
+    """Round-based training as a discrete-event sim: lease/submit pass
+    through their member's serialized service station; execution takes
+    ``work / speed`` virtual seconds; the driver closes each round at the
+    (full) barrier, aggregates, steps the optimizer, publishes the next
+    round's weights, and wakes the idle fleet."""
+    clock = SimClock()
+    fed = FederatedDistributor(
+        n_members, n_shards=max(2 * n_members, 2), timeout=300.0,
+        redistribute_min=redistribute_min, clock=clock)
+    fed.register_task(TaskDef("grad_shard", grad_shard,
+                              static_files=("weights",)))
+    q = fed.queue
+    sizer = AdaptiveSizer(target_lease_time=0.25, max_size=4)
+    opt = adagrad(LR)
+    params = {"w": np.zeros(D_IN, np.float32)}
+    opt_state = opt.init(params)
+
+    speeds = {f"fast{i}": 8 * BASE_RATE for i in range(N_SIM_CLIENTS // 2)}
+    speeds.update({f"slow{i}": BASE_RATE
+                   for i in range(N_SIM_CLIENTS // 2)})
+    member_of = {name: i % n_members
+                 for i, name in enumerate(speeds)}
+    browsers = {name: _SimBrowser(fed.members[member_of[name]],
+                                  ClientProfile(name=name))
+                for name in speeds}
+    busy = [0.0] * n_members
+    idle: set[str] = set()
+    seq = itertools.count()
+    events: list = []
+    losses: list[float] = []
+    stale = 0
+    state = {"round": -1, "tids": [], "work_of": {}}
+    makespan = None
+
+    def service(member: int, t: float) -> float:
+        start = max(t, busy[member])
+        busy[member] = start + SERVICE
+        return busy[member]
+
+    def wake_idle(t: float):
+        for name in list(idle):
+            heapq.heappush(events, (t, next(seq), "wake", name, None))
+        idle.clear()
+
+    def start_round(t: float):
+        state["round"] += 1
+        fed.add_static("weights", {"round": state["round"],
+                                   "params": params})
+        # many small equal slices; the adaptive lease sizer batches them
+        # per client's measured rate (PR 1's balancing, round-scoped)
+        args, work = equal_plan(2 * N_SIM_CLIENTS)
+        groups = affinity_placement(fed, len(args))
+        tids: list = [None] * len(args)
+        for shard, positions in groups.items():
+            got = fed.add_work("grad_shard",
+                               [args[p] for p in positions],
+                               work=[work[p] for p in positions],
+                               shard=shard)
+            for p, tid in zip(positions, got):
+                tids[p] = tid
+        state["tids"] = tids
+        state["work_of"] = {tid: work[p] for p, tid in enumerate(tids)}
+        wake_idle(t)
+
+    def close_round(t: float):
+        nonlocal params, opt_state, stale, makespan
+        done = q.completed_results(state["tids"])
+        got, works = [], []
+        for tid in state["tids"]:
+            r = done.get(tid)
+            if r is None or r is CANCELLED:
+                continue
+            got.append(r)
+            works.append(state["work_of"][tid])
+        stale += sum(1 for g in got if g["round"] != state["round"])
+        q.prune(state["tids"])
+        losses.append(float(sum(g["loss"] * w for g, w in zip(got, works))
+                            / sum(works)))
+        grads = weighted_grad_mean([g["grad"] for g in got], works)
+        params, opt_state = opt.update(grads, opt_state, params)
+        if state["round"] + 1 >= rounds:
+            makespan = t
+            return
+        start_round(t)
+
+    idle.update(speeds)        # everyone starts parked; round 0 wakes them
+    start_round(0.0)
+
+    while events and makespan is None:
+        t, _, kind, name, payload = heapq.heappop(events)
+        clock.t = t
+        if kind == "wake":
+            heapq.heappush(events, (service(member_of[name], t), next(seq),
+                                    "leased", name, None))
+        elif kind == "leased":
+            m = member_of[name]
+            home = fed.members[m].home_shards
+            stats = q.stats.get(name)
+            n_lease = sizer.lease_size(stats)
+            batch = q.lease(name, n_lease, shards=home) if home else None
+            if batch is None and len(home) < q.n_shards:
+                batch = q.lease(name, n_lease)
+            if batch is None:
+                idle.add(name)
+                continue
+            eta = sizer.expected_duration(stats, len(batch.tickets))
+            batch.expected_duration = eta
+            if eta is not None:
+                heapq.heappush(events,
+                               (batch.issued_at + SIM_GRACE * max(eta, 1e-3),
+                                next(seq), "watchdog", "", batch.lease_id))
+            # execute now (download-through-cache at the pinned version),
+            # deliver after the simulated compute time
+            b = browsers[name]
+            results = {}
+            for ticket in batch.tickets:
+                task = b._get_task(ticket.task_name, ticket.task_version)
+                static = b._get_static(task, ticket.task_version)
+                results[ticket.ticket_id] = task.run(ticket.args, static)
+            finish = t + RTT + batch.work / speeds[name]
+            heapq.heappush(events, (finish, next(seq), "finish", name,
+                                    (batch, results)))
+        elif kind == "finish":
+            heapq.heappush(events, (service(member_of[name], t), next(seq),
+                                    "submitted", name, payload))
+        elif kind == "submitted":
+            batch, results = payload
+            q.submit_batch(batch.lease_id, results, name)
+            heapq.heappush(events, (t, next(seq), "wake", name, None))
+            done = q.completed_results(state["tids"])
+            if len(done) >= len(state["tids"]):
+                close_round(t)
+        elif kind == "watchdog":
+            if q.release(payload, client_failed=True):
+                wake_idle(t)
+
+    return {"members": n_members,
+            "rounds": rounds,
+            "makespan_s": round(makespan or clock.t, 3),
+            "rounds_per_s": round(rounds / max(makespan or clock.t, 1e-9),
+                                  3),
+            "stale_executions": stale,
+            "final_loss": round(losses[-1], 6),
+            "losses": [round(x, 6) for x in losses]}
+
+
+def cell_throughput(rounds: int) -> dict:
+    cells = {f"fed-{n}": simulate_training(n, rounds=rounds)
+             for n in (1, 4)}
+    cells["speedup_4v1_rounds"] = round(
+        cells["fed-4"]["rounds_per_s"] / cells["fed-1"]["rounds_per_s"], 2)
+    return cells
+
+
+# ---------------------------------------------------------------------------
+# Cells 2-4: the real asyncio trainer
+# ---------------------------------------------------------------------------
+
+
+async def _kill_soon(fed, index: int, delay: float):
+    await asyncio.sleep(delay)
+    await fed.kill_member(index)
+
+
+async def train_async(*, n_members: int, profiles, rounds: int,
+                      straggler_policy: str = "wait", barrier_k=None,
+                      plan: str = "equal", n_shards_round: int = 8,
+                      kill_member_at_round=None, use_rebalancer=False,
+                      checkpoint_dir=None, resume_from=None,
+                      sizer=None) -> dict:
+    """One federated training run on the real fabric; returns its
+    trajectory and fault counters."""
+    fed = FederatedDistributor(
+        n_members, n_shards=2 * n_members, timeout=20.0,
+        redistribute_min=0.02,
+        sizer=sizer if sizer is not None
+        else AdaptiveSizer(target_lease_time=0.05, max_size=8),
+        watchdog_interval=0.01, grace=2.0,
+        project_name="FederatedTraining")
+    fed.register_task(TaskDef("grad_shard", grad_shard,
+                              static_files=("weights",)))
+    fed.spawn_clients(profiles)
+    opt = adagrad(LR)
+    if resume_from is not None:
+        seed_state, start_round, _extra = load_round_checkpoint(resume_from)
+    else:
+        seed_state, start_round = fresh_state(opt), 0
+    reb = Rebalancer(fed, steal_threshold=3, cooldown=1) \
+        if use_rebalancer else None
+    kill_task = None
+    trainer = FederatedTrainer(fed, task_name="grad_shard",
+                               barrier_k=barrier_k,
+                               straggler_policy=straggler_policy,
+                               timeout=30.0, rebalancer=reb)
+    loop = FederatedTrainingLoop(trainer, opt, seed_state,
+                                 round_index=start_round,
+                                 checkpoint_dir=checkpoint_dir,
+                                 checkpoint_every=1)
+    complete_rounds = 0
+    try:
+        async with trainer:
+            for _ in range(start_round, rounds):
+                if (kill_member_at_round is not None
+                        and loop.round_index == kill_member_at_round):
+                    kill_task = asyncio.get_running_loop().create_task(
+                        _kill_soon(fed, 0, 0.02))
+                if plan == "equal":
+                    args, work = equal_plan(n_shards_round)
+                else:
+                    args, work = rate_plan(trainer, n_shards_round)
+                res = await loop.run_round(args, work)
+                complete_rounds += res.complete
+    finally:
+        if kill_task is not None:
+            await kill_task
+        await trainer.aclose()       # idempotent after the context exit
+        await fed.shutdown()
+    return {"losses": loop.losses,
+            "completed_rounds": loop.round_index - start_round,
+            "complete_rounds": complete_rounds,
+            "stale_executions": loop.stale_executions,
+            "reticketed": trainer.reticketed_total,
+            "folded": trainer.folded_total,
+            "migrations": fed.migrations}
+
+
+def _bimodal_profiles(n_fast: int, n_slow: int, *, straggler: bool = False):
+    ps = [ClientProfile(name=f"fast{i}", speed=2000.0)
+          for i in range(n_fast)]
+    ps += [ClientProfile(name=f"slow{i}", speed=400.0)
+           for i in range(n_slow)]
+    if straggler:
+        ps.append(ClientProfile(name="straggler", speed=30.0))
+    return ps
+
+
+def cell_equivalence(rounds: int) -> dict:
+    fed = asyncio.run(train_async(
+        n_members=4, profiles=_bimodal_profiles(4, 3), rounds=rounds,
+        plan="rates", n_shards_round=8))
+    ref = in_process_losses(rounds)
+    delta = max(abs(a - b) for a, b in zip(fed["losses"], ref))
+    return {"rounds": rounds, "max_loss_delta": float(delta),
+            "stale_executions": fed["stale_executions"],
+            "completed_rounds": fed["completed_rounds"],
+            "final_loss": fed["losses"][-1]}
+
+
+def cell_faults(rounds: int) -> dict:
+    # more shards than clients + one-ticket leases: every client
+    # (straggler included) holds work every round, so the K-of-N policies
+    # genuinely trigger instead of the straggler never winning a ticket
+    n_shards = 12
+    k = n_shards - 2
+    out = {}
+    for policy in ("reticket", "fold"):
+        run = asyncio.run(train_async(
+            n_members=4, profiles=_bimodal_profiles(4, 3, straggler=True),
+            rounds=rounds, straggler_policy=policy, barrier_k=k,
+            plan="equal", n_shards_round=n_shards,
+            kill_member_at_round=1, use_rebalancer=True,
+            sizer=FixedSizer(1)))
+        cell = {"completed_rounds": run["completed_rounds"],
+                "complete_rounds": run["complete_rounds"],
+                "stale_executions": run["stale_executions"],
+                "reticketed": run["reticketed"],
+                "folded": run["folded"],
+                "migrations": run["migrations"]}
+        if policy == "reticket":
+            ref = in_process_losses(rounds)
+            cell["max_loss_delta"] = float(max(
+                abs(a - b) for a, b in zip(run["losses"], ref)))
+        out[policy] = cell
+    return out
+
+
+def cell_resume(rounds: int, kill_at: int) -> dict:
+    with tempfile.TemporaryDirectory() as ckdir:
+        baseline = asyncio.run(train_async(
+            n_members=2, profiles=_bimodal_profiles(2, 2), rounds=rounds,
+            plan="equal", n_shards_round=6))
+        # the "killed" run: same config, checkpoints every round, stops
+        # (is killed) after `kill_at` rounds
+        asyncio.run(train_async(
+            n_members=2, profiles=_bimodal_profiles(2, 2), rounds=kill_at,
+            plan="equal", n_shards_round=6, checkpoint_dir=ckdir))
+        resumed = asyncio.run(train_async(
+            n_members=2, profiles=_bimodal_profiles(2, 2), rounds=rounds,
+            plan="equal", n_shards_round=6,
+            resume_from=checkpoint_path(ckdir, kill_at)))
+    tail_delta = max(abs(a - b) for a, b in
+                     zip(baseline["losses"][kill_at:], resumed["losses"]))
+    return {"rounds": rounds, "resumed_from_round": kill_at,
+            "max_loss_delta": float(tail_delta),
+            "stale_executions": resumed["stale_executions"]}
+
+
+# ---------------------------------------------------------------------------
+
+
+def run_sweep(*, smoke: bool = False) -> dict:
+    rounds = 6 if smoke else 10
+    out = {
+        "throughput": cell_throughput(rounds),
+        "equivalence": cell_equivalence(rounds),
+        "faults": cell_faults(rounds),
+        "resume": cell_resume(rounds, kill_at=rounds // 2),
+        "workload": {"rows": N_ROWS, "d_in": D_IN, "lr": LR,
+                     "sim_clients": N_SIM_CLIENTS,
+                     "service_s": SERVICE, "rtt_s": RTT},
+    }
+    return out
+
+
+def check(results: dict) -> None:
+    """The acceptance bars (shared by main() and benchmarks/run.py)."""
+    thr = results["throughput"]
+    assert thr["speedup_4v1_rounds"] >= 2.0, \
+        f"4-member federation must sustain >= 2x single-member round " \
+        f"throughput (got {thr['speedup_4v1_rounds']}x)"
+    for cell in ("fed-1", "fed-4"):
+        assert thr[cell]["stale_executions"] == 0, (cell, thr[cell])
+
+    eq = results["equivalence"]
+    assert eq["completed_rounds"] == eq["rounds"], eq
+    assert eq["stale_executions"] == 0, eq
+    assert eq["max_loss_delta"] < 1e-4, \
+        f"federated trajectory must match in-process: {eq}"
+
+    faults = results["faults"]
+    rt, fo = faults["reticket"], faults["fold"]
+    assert rt["completed_rounds"] == eq["rounds"], rt
+    assert rt["stale_executions"] == 0 and fo["stale_executions"] == 0, \
+        faults
+    assert rt["reticketed"] > 0, \
+        f"the straggler must trigger re-ticketing: {rt}"
+    assert rt["max_loss_delta"] < 1e-4, \
+        f"reticket keeps the math exact even under faults: {rt}"
+    assert rt["migrations"] >= 1, \
+        f"the dead member's shards must fail over: {rt}"
+    assert fo["completed_rounds"] == eq["rounds"], fo
+    assert fo["folded"] > 0, \
+        f"the fold policy must actually fold the straggler: {fo}"
+
+    rs = results["resume"]
+    assert rs["max_loss_delta"] < 1e-6, \
+        f"resume must reproduce the unkilled trajectory: {rs}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, help="write results here")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced size (CI smoke)")
+    args = ap.parse_args()
+    results = run_sweep(smoke=args.smoke)
+
+    thr = results["throughput"]
+    print(f"{'cell':<24}{'rounds/s':>10}{'makespan(s)':>13}{'stale':>7}")
+    print("-" * 54)
+    for cell in ("fed-1", "fed-4"):
+        m = thr[cell]
+        print(f"throughput {cell:<13}{m['rounds_per_s']:>10.3f}"
+              f"{m['makespan_s']:>13.2f}{m['stale_executions']:>7}")
+    print(f"\nbimodal mix: 4-member federation sustains "
+          f"{thr['speedup_4v1_rounds']:.2f}x the single member's round "
+          f"throughput")
+    eq = results["equivalence"]
+    print(f"equivalence: {eq['completed_rounds']} rounds, max |Δloss| vs "
+          f"in-process = {eq['max_loss_delta']:.2e}, "
+          f"{eq['stale_executions']} stale executions")
+    rt = results["faults"]["reticket"]
+    fo = results["faults"]["fold"]
+    print(f"faults/reticket: {rt['completed_rounds']} rounds under member "
+          f"death + straggler ({rt['reticketed']} re-ticketed, "
+          f"{rt['migrations']} shard migrations, max |Δloss| "
+          f"{rt['max_loss_delta']:.2e}, {rt['stale_executions']} stale)")
+    print(f"faults/fold: {fo['completed_rounds']} rounds, "
+          f"{fo['folded']} straggler shards folded at the K-of-N barrier, "
+          f"{fo['stale_executions']} stale")
+    rs = results["resume"]
+    print(f"resume: from round {rs['resumed_from_round']} checkpoint, "
+          f"max |Δloss| vs unkilled = {rs['max_loss_delta']:.2e}")
+
+    check(results)
+    print("all training-fabric bars passed")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

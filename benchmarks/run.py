@@ -5,12 +5,13 @@ Prints ``name,us_per_call,derived`` CSV rows (plus the detailed records) so
 results are machine-comparable across runs.  Scaled-down sizes run inside a
 CPU budget; pass --full for paper-scale settings.
 
-The ``scheduler``, ``federation``, ``cache`` and ``transport`` entries
-additionally write machine-readable ``BENCH_scheduler.json`` /
-``BENCH_federation.json`` / ``BENCH_cache.json`` / ``BENCH_transport.json``
-(throughput, speedup, stale-serve and egress numbers) so the perf
-trajectory is tracked across PRs — CI uploads them as artifacts.
-``--out-dir`` relocates them.
+The ``scheduler``, ``federation``, ``cache``, ``transport`` and
+``training`` entries additionally write machine-readable
+``BENCH_scheduler.json`` / ``BENCH_federation.json`` /
+``BENCH_cache.json`` / ``BENCH_transport.json`` / ``BENCH_training.json``
+(throughput, speedup, stale-serve, egress and loss-equivalence numbers)
+so the perf trajectory is tracked across PRs — CI uploads them as
+artifacts.  ``--out-dir`` relocates them.
 
 A benchmark that raises is reported with its full traceback and the run
 exits nonzero; JSON files are written atomically (temp file + rename)
@@ -198,6 +199,27 @@ def bench_transport(full: bool):
     return results
 
 
+def bench_training(full: bool):
+    """Training-fabric sweep (virtual-clock throughput sim + real asyncio
+    trainer cells); writes BENCH_training.json with the 4v1 round-
+    throughput speedup, loss-equivalence deltas, fault-tolerance
+    counters, and the kill/resume reproduction delta."""
+    from benchmarks import federated_training
+
+    t0 = time.perf_counter()
+    results = federated_training.run_sweep(smoke=not full)
+    us = (time.perf_counter() - t0) * 1e6
+    # acceptance bars BEFORE writing (a failed bar must not leave a
+    # fresh-looking BENCH_training.json behind)
+    federated_training.check(results)
+    _write_json("training", results)
+    _csv("federated_training", us,
+         f"speedup_4v1_rounds={results['throughput']['speedup_4v1_rounds']}x|"
+         f"equiv_delta={results['equivalence']['max_loss_delta']:.1e}|"
+         f"resume_delta={results['resume']['max_loss_delta']:.1e}")
+    return results
+
+
 BENCHES = {
     "table2": bench_table2,
     "table4": bench_table4,
@@ -208,6 +230,7 @@ BENCHES = {
     "federation": bench_federation,
     "cache": bench_cache,
     "transport": bench_transport,
+    "training": bench_training,
 }
 
 

@@ -548,15 +548,27 @@ class AsyncDistributor(HttpServerBase):
                 and self.queue.all_done())
 
     def add_work(self, task_name: str, args_list, *,
-                 work: float = 1.0) -> list[int]:
+                 work: float = 1.0,
+                 shard: Optional[int] = None) -> list[int]:
         """Enqueue tickets (non-async producer API); wakes idle clients.
         Tickets pin the task's current registry coherence version, so a
-        later re-register can't make them execute stale assets."""
+        later re-register can't make them execute stale assets.
+        ``shard`` places the batch on an explicit queue shard (sharded
+        stores only — the training fabric's per-member affinity)."""
+        kw = {} if shard is None else {"shard": shard}
         tids = self.queue.add_many(task_name, args_list, work=work,
-                                   task_version=self.task_version(task_name))
+                                   task_version=self.task_version(task_name),
+                                   **kw)
         self._work_added = True
         self._notify_waiters()
         return tids
+
+    def client_rates(self) -> dict:
+        """{client: EWMA work-units/s} (None until first measured) — the
+        feed for ``split_parallel.adaptive_shard_sizes``, so producers can
+        size shards to measured throughput.  Same surface as
+        ``FederatedDistributor.client_rates``."""
+        return {name: s.rate for name, s in self.queue.stats.items()}
 
     def _queue_lease(self, client_name: str, n: int):
         """Queue checkout hook: a federation member overrides this to

@@ -289,6 +289,7 @@ class FederatedDistributor(HttpServerBase):
                 watchdog_interval=watchdog_interval,
                 keep_alive=keep_alive,
                 project_name=f"{project_name}/member{i}"))
+        self.migrations = 0           # home-shard moves (rebalancer)
         self._wake: Optional[asyncio.Event] = None
 
     # -- keep_alive fans out (SplitConcurrentDispatcher sets it) -------------
@@ -326,11 +327,14 @@ class FederatedDistributor(HttpServerBase):
     # -- producer / client management -----------------------------------------
 
     def add_work(self, task_name: str, args_list, *,
-                 work: float = 1.0) -> list[int]:
-        """Enqueue version-pinned tickets on the owning shard; wakes the
-        whole fabric."""
+                 work: float = 1.0,
+                 shard: Optional[int] = None) -> list[int]:
+        """Enqueue version-pinned tickets on the owning shard (or an
+        explicit ``shard`` index — the training fabric's per-member
+        affinity placement); wakes the whole fabric."""
         tids = self.queue.add_many(task_name, args_list, work=work,
-                                   task_version=self.task_version(task_name))
+                                   task_version=self.task_version(task_name),
+                                   shard=shard)
         for m in self.members:
             m._work_added = True
         self._notify_all()
@@ -365,6 +369,38 @@ class FederatedDistributor(HttpServerBase):
                                    m.index))
             spawned.extend(target.spawn_clients([p]))
         return spawned
+
+    def home_shard_indices(self, member: int) -> list[int]:
+        """Queue-shard indices in ``member``'s home set — the producer-side
+        view a trainer needs to place a round's tickets with per-member
+        affinity (``add_work(shard=...)``)."""
+        owned = {id(sh) for sh in self.members[member].home_shards}
+        return [j for j, sh in enumerate(self.queue.shards)
+                if id(sh) in owned]
+
+    def migrate_shard(self, shard_index: int, to_member: int) -> bool:
+        """Move queue shard ``shard_index`` from its current owner's home
+        set to ``to_member``'s — the rebalancing primitive.
+
+        Mid-run safe: home sets are consulted per lease, in-flight leases
+        against the old owner drain normally, and the shared store means
+        no tickets move — only the *affinity* (which member serves the
+        shard from its own locks) changes.  Returns False when the target
+        already owns the shard (or no member does); raises on a dead
+        target."""
+        target = self.members[to_member]
+        if not target.alive:
+            raise RuntimeError(f"member{to_member} is dead")
+        sh = self.queue.shards[shard_index]
+        donor = next((m for m in self.members
+                      if any(h is sh for h in m.home_shards)), None)
+        if donor is None or donor is target:
+            return False
+        donor.home_shards.remove(sh)
+        target.home_shards.append(sh)
+        self.migrations += 1
+        self._notify_all()          # the new owner's idle clients wake up
+        return True
 
     async def kill_member(self, index: int) -> int:
         """Fault injection: member ``index`` dies — its clients and
@@ -401,6 +437,7 @@ class FederatedDistributor(HttpServerBase):
         client/steal/edge views."""
         snap = self.queue.snapshot()
         snap["project"] = self.project_name
+        snap["migrations"] = self.migrations
         snap["members"] = [
             {"name": f"member{m.index}", "alive": m.alive,
              "steals": m.steals, "home_shards": len(m.home_shards),

@@ -121,19 +121,31 @@ class ShardedTicketQueue:
     # -- producer side --------------------------------------------------------
 
     def add(self, task_name: str, args: Any, *, work: float = 1.0,
-            task_version: int = 0) -> int:
-        """Enqueue one ticket on its task's shard; returns its id."""
-        sh = self.shard_for(task_name)
+            task_version: int = 0, shard: Optional[int] = None) -> int:
+        """Enqueue one ticket on its task's shard (or an explicit
+        ``shard`` index — see :meth:`add_many`); returns its id."""
+        sh = (self.shard_for(task_name) if shard is None
+              else self.shards[shard])
         tid = sh.add(task_name, args, work=work, task_version=task_version)
         with self._meta_lock:
             self._ticket_shard[tid] = sh
         return tid
 
     def add_many(self, task_name: str, args_list, *, work=1.0,
-                 task_version: int = 0) -> list[int]:
+                 task_version: int = 0,
+                 shard: Optional[int] = None) -> list[int]:
         """Bulk-enqueue on the owning shard (one shard lock acquisition;
-        producers for different tasks don't contend at all)."""
-        sh = self.shard_for(task_name)
+        producers for different tasks don't contend at all).
+
+        ``shard`` overrides the task-name hash with an explicit shard
+        index — the training fabric uses it to spread one task's round of
+        tickets across the federation members' *home* shards (per-member
+        shard affinity), so each member serves its slice from its own
+        locks instead of stealing everything from one hot shard.  All
+        downstream routing (submit / results / prune) follows the
+        per-ticket table, so placement is free to differ per round."""
+        sh = (self.shard_for(task_name) if shard is None
+              else self.shards[shard])
         tids = sh.add_many(task_name, args_list, work=work,
                            task_version=task_version)
         with self._meta_lock:
@@ -318,6 +330,18 @@ class ShardedTicketQueue:
         Three lock acquisitions total (route, per-shard prune, routing
         cleanup) — NOT one ``_meta_lock`` round per ticket, which made
         pruning a long round O(n) lock traffic."""
+        pruned: list = []
+        for sh, tids in self._route_ids(ticket_ids):
+            pruned.extend(sh.prune_ex(tids))
+        if pruned:
+            with self._meta_lock:
+                for tid in pruned:
+                    self._ticket_shard.pop(tid, None)
+        return len(pruned)
+
+    def _route_ids(self, ticket_ids) -> list[tuple[TicketQueue, list]]:
+        """Group ticket ids by owning shard (one ``_meta_lock``
+        acquisition; unknown — already pruned — ids are dropped)."""
         with self._meta_lock:
             routed = [(tid, self._ticket_shard.get(tid))
                       for tid in ticket_ids]
@@ -325,14 +349,33 @@ class ShardedTicketQueue:
         for tid, sh in routed:
             if sh is not None:
                 by_shard.setdefault(id(sh), (sh, []))[1].append(tid)
-        pruned: list = []
-        for sh, tids in by_shard.values():
-            pruned.extend(sh.prune_ex(tids))
-        if pruned:
+        return list(by_shard.values())
+
+    def cancel(self, ticket_ids) -> int:
+        """Force-complete tickets with the CANCELLED sentinel, routed to
+        their owning shards (the K-of-N barrier's fold path)."""
+        n = sum(sh.cancel(tids) for sh, tids in self._route_ids(ticket_ids))
+        if n:
+            # GC global lease records fully drained by the cancellations:
+            # a dead client's never-submitted lease would otherwise leak
+            # its _leases entry forever (no watchdog patrols a lease with
+            # no outstanding tickets, and no submit runs _gc_lease)
             with self._meta_lock:
-                for tid in pruned:
-                    self._ticket_shard.pop(tid, None)
-        return len(pruned)
+                drained = [
+                    lid for lid, (_, touched) in self._leases.items()
+                    if not any(sh.lease_is_outstanding(lid)
+                               for sh in touched)]
+                for lid in drained:
+                    del self._leases[lid]
+        return n
+
+    def completed_results(self, ticket_ids) -> dict:
+        """{ticket_id: result} for the already-completed subset (partial-
+        progress probe for round barriers; routes each id to its shard)."""
+        out: dict = {}
+        for sh, tids in self._route_ids(ticket_ids):
+            out.update(sh.completed_results(tids))
+        return out
 
     def report_error(self, ticket_id: int, error: str, client: str = "?"):
         """Route an error report to the owning shard."""

@@ -321,7 +321,73 @@ def adaptive_shard_sizes(rates: dict, global_batch: int, *,
     return sizes
 
 
-class SplitConcurrentDispatcher:
+def weighted_grad_mean(shard_grads, shard_sizes) -> Any:
+    """Work-weighted mean of per-shard gradient pytrees — the exact
+    combination rule for unevenly sized data-parallel shards.
+
+    One fused ``tree_map`` over ALL shard trees at once: each leaf is
+    reduced in a single pass, so no per-shard scaled pytree copies are
+    materialised on the per-step hot path (the old implementation built
+    O(n_shards) intermediate trees per call)."""
+    total = float(sum(shard_sizes))
+    weights = [w / total for w in shard_sizes]
+
+    def fuse(*leaves):
+        acc = leaves[0] * weights[0]
+        for g, w in zip(leaves[1:], weights[1:]):
+            acc = acc + g * w
+        return acc
+
+    return jax.tree_util.tree_map(fuse, *shard_grads)
+
+
+class RoundDriverLifetime:
+    """Explicit client-lifetime ownership shared by the round drivers
+    (``SplitConcurrentDispatcher``, ``train_fabric.FederatedTrainer``).
+
+    A round driver needs the distributor's clients to survive drained
+    queues between rounds, so constructing one flips ``keep_alive`` on —
+    but the caller's original mode must come back when the driver is
+    done, or a discarded driver leaves the distributor permanently
+    changed.  :meth:`aclose` (or the async context manager) restores it;
+    one implementation here so the restore/notify semantics can't
+    diverge between drivers."""
+
+    def _own_clients(self, distributor):
+        self.dist = distributor
+        self._prev_keep_alive = distributor.keep_alive
+        distributor.keep_alive = True
+        self._closed = False
+
+    async def __aenter__(self):
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self.aclose()
+
+    def _notify(self):
+        """Wake the whole fabric (federation) or this distributor's
+        parked waiters."""
+        notify = getattr(self.dist, "_notify_all", None)
+        (notify or self.dist._notify_waiters)()
+
+    async def aclose(self, *, shutdown: bool = False):
+        """End this driver's ownership of the client lifetime: restore
+        the distributor's original ``keep_alive`` (parked clients wake,
+        re-check the now-restored terminal condition, and exit once the
+        queue drains), optionally shutting the distributor down outright.
+        Idempotent."""
+        if self._closed:
+            return
+        self._closed = True
+        self.dist.keep_alive = self._prev_keep_alive
+        if shutdown:
+            await self.dist.shutdown()
+        else:
+            self._notify()
+
+
+class SplitConcurrentDispatcher(RoundDriverLifetime):
     """Bridge from §4.1 split training to the Distributor v2 scheduler.
 
     Each training step, the backbone's data-parallel shards become a batch
@@ -337,10 +403,7 @@ class SplitConcurrentDispatcher:
     """
 
     def __init__(self, distributor, task_name: str = "backbone_shard"):
-        self.dist = distributor
-        # clients must survive drained queues between training steps;
-        # the caller ends them with distributor.shutdown()
-        self.dist.keep_alive = True
+        self._own_clients(distributor)
         self.task_name = task_name
         self.rounds = 0
 
@@ -387,15 +450,9 @@ class SplitConcurrentDispatcher:
 
     @staticmethod
     def aggregate(shard_grads, shard_sizes) -> Any:
-        """Work-weighted mean of per-shard gradient pytrees."""
-        total = float(sum(shard_sizes))
-        scaled = [
-            jax.tree_util.tree_map(lambda g, w=w: g * (w / total), grads)
-            for grads, w in zip(shard_grads, shard_sizes)]
-        out = scaled[0]
-        for s in scaled[1:]:
-            out = jax.tree_util.tree_map(lambda a, b: a + b, out, s)
-        return out
+        """Work-weighted mean of per-shard gradient pytrees (one fused
+        ``tree_map`` — see :func:`weighted_grad_mean`)."""
+        return weighted_grad_mean(shard_grads, shard_sizes)
 
 
 def init_prev_features(state: TrainState, api: ModelApi, batch,

@@ -38,6 +38,19 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
 
+class _Cancelled:
+    """Sentinel result for tickets force-completed by a barrier fold (the
+    K-of-N straggler path): the round closed without them, so they must
+    drain from the queue's bookkeeping without a real result."""
+
+    def __repr__(self):
+        return "<cancelled>"
+
+
+#: The result recorded for a cancelled ticket (see TicketQueue.cancel).
+CANCELLED = _Cancelled()
+
+
 @dataclass
 class Ticket:
     """One unit of distributable work (paper §2.1.1: a slice of a Task's
@@ -470,6 +483,31 @@ class TicketQueue:
                     self.stats.setdefault(
                         batch.client, ClientStats(batch.client)).failures += 1
             return released
+
+    def cancel(self, ticket_ids) -> int:
+        """Force-complete tickets with the :data:`CANCELLED` sentinel (the
+        K-of-N barrier's fold path: a round closed without its stragglers).
+
+        The tickets drain from every lease and from the done-accounting
+        exactly as a real submit would, so watchdogs stop patrolling them
+        and ``all_done`` can flip; a straggler's own submit arriving later
+        is dropped as a duplicate.  Already-completed or unknown ids are
+        skipped.  Returns how many tickets were cancelled."""
+        with self._lock:
+            return sum(self._submit_locked(tid, CANCELLED, "cancelled")
+                       for tid in ticket_ids)
+
+    def completed_results(self, ticket_ids) -> dict:
+        """{ticket_id: result} for the subset of ``ticket_ids`` already
+        completed — the partial-progress probe a K-of-N round barrier
+        polls (contrast :meth:`results_for`, which is all-or-nothing)."""
+        with self._lock:
+            out = {}
+            for tid in ticket_ids:
+                t = self._tickets.get(tid)
+                if t is not None and t.completed:
+                    out[tid] = t.result
+            return out
 
     def seconds_until_eligible(self) -> Optional[float]:
         """Time until the next in-cool-down ticket becomes leasable, or

@@ -292,6 +292,20 @@ class TransportServer:
             n += 1
         return n
 
+    def drop_member_connections(self, index: int) -> int:
+        """Hard-close every connection bound to federation member
+        ``index`` — the transport half of ``kill_member``.  A remote
+        client whose member dies would otherwise keep talking to a
+        scheduler with no watchdog; dropping the connection makes it
+        reconnect-with-resume, and ``_pick_endpoint`` (alive members only)
+        lands it on a survivor.  Returns how many connections dropped."""
+        n = 0
+        for conn in list(self._conns):
+            if getattr(conn.endpoint, "index", None) == index:
+                conn.close()
+                n += 1
+        return n
+
     def stats(self) -> dict:
         """Console counters: live connections and wire traffic totals."""
         return {"connections": len(self._conns),

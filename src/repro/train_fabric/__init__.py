@@ -1,0 +1,33 @@
+"""Training fabric: federation-scale §4.1 training as a first-class,
+fault-tolerant workload.
+
+Joins the ML stack (``repro.models`` / ``repro.optim`` /
+``repro.checkpoint``) to the Sashimi fabric (``repro.core``): a round
+engine with per-member shard affinity and versioned per-round weights
+(:class:`FederatedTrainer`), straggler-aware K-of-N barriers, shard
+rebalancing driven by the members' steal counters (:class:`Rebalancer`),
+and resumable round-boundary checkpoints in the paper's JSON+base64
+model-file format.  See ``docs/ARCHITECTURE.md`` §Training fabric and
+``benchmarks/federated_training.py``.
+"""
+from repro.train_fabric.checkpointing import (CHECKPOINT_FORMAT,
+                                              checkpoint_path,
+                                              latest_checkpoint,
+                                              load_round_checkpoint,
+                                              save_round_checkpoint,
+                                              state_from_tree, state_to_tree)
+from repro.train_fabric.rebalancer import Migration, Rebalancer
+from repro.train_fabric.round_engine import (STRAGGLER_POLICIES,
+                                             FederatedTrainer,
+                                             FederatedTrainingLoop,
+                                             RoundResult,
+                                             affinity_placement,
+                                             resolve_barrier_k)
+
+__all__ = [
+    "CHECKPOINT_FORMAT", "FederatedTrainer", "FederatedTrainingLoop",
+    "Migration", "Rebalancer", "RoundResult", "STRAGGLER_POLICIES",
+    "affinity_placement", "checkpoint_path", "latest_checkpoint",
+    "load_round_checkpoint", "resolve_barrier_k", "save_round_checkpoint",
+    "state_from_tree", "state_to_tree",
+]

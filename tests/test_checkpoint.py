@@ -58,6 +58,58 @@ def test_npz_roundtrip_nested(tmp_path):
     np.testing.assert_array_equal(rt["tup"][1]["x"], tree["tup"][1]["x"])
 
 
+def test_full_train_state_roundtrip_paper_format(tmp_path):
+    """A FULL split-training ``TrainState`` — backbone params, head and
+    stale-head slots, BOTH optimizer states, bf16 feature-replay buffers,
+    and the step counter — survives the paper's JSON+base64 round-
+    checkpoint format bit-exactly (the resumable-training contract)."""
+    import dataclasses
+
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.core.split_parallel import init_prev_features, make_train_step
+    from repro.data import make_lm_batch
+    from repro.models.model import build_model
+    from repro.optim import get_optimizer
+    from repro.train_fabric import (checkpoint_path, load_round_checkpoint,
+                                    save_round_checkpoint, state_to_tree)
+
+    cfg = dataclasses.replace(get_smoke_config("qwen3-4b"),
+                              tie_embeddings=False)
+    api = build_model(cfg, compute_dtype=jnp.float32)
+    opt = get_optimizer("adagrad", 0.05)
+    init_state, step = make_train_step(api, opt, strategy="split_concurrent")
+    state = init_state(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {k: jnp.asarray(v)
+             for k, v in make_lm_batch(rng, 2, 16, cfg.vocab_size).items()}
+    state = init_prev_features(state, api, batch, dtype=jnp.bfloat16)
+    state, _ = jax.jit(step)(state, batch)    # non-trivial opt state, step=1
+    # the replay buffer is kept in bf16 between steps on memory-tight
+    # runs — exercise exactly that mixed-precision layout
+    state = dataclasses.replace(
+        state, prev_features=jnp.asarray(state.prev_features, jnp.bfloat16))
+
+    path = save_round_checkpoint(checkpoint_path(str(tmp_path), 1), state,
+                                 round_index=1, extra={"demo": True})
+    got, rnd, extra = load_round_checkpoint(path)
+    assert rnd == 1 and extra == {"demo": True}
+    assert int(got.step) == 1
+
+    ref = jax.tree_util.tree_leaves_with_path(state_to_tree(state))
+    new = jax.tree_util.tree_leaves_with_path(state_to_tree(got))
+    assert len(ref) == len(new)
+    saw_bf16 = False
+    for (ka, a), (kb, b) in zip(sorted(ref, key=lambda kv: str(kv[0])),
+                                sorted(new, key=lambda kv: str(kv[0]))):
+        assert str(ka) == str(kb)
+        a, b = np.asarray(a), np.asarray(b)
+        assert a.dtype == b.dtype and a.shape == b.shape, str(ka)
+        assert a.tobytes() == b.tobytes(), f"bits differ at {ka}"
+        saw_bf16 |= str(a.dtype) == "bfloat16"
+    assert saw_bf16, "the state must exercise bf16 leaves"
+
+
 def test_model_params_roundtrip(tmp_path):
     """A real (smoke) model's params survive the paper format."""
     import jax

@@ -1,0 +1,517 @@
+"""Training-fabric tests: the round engine's K-of-N barrier and
+straggler policies, per-member affinity placement, shard rebalancing,
+explicit client-lifetime ownership, and resumable round checkpoints."""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core.distributor import (AdaptiveSizer, AsyncDistributor,
+                                    ClientProfile, FixedSizer, TaskDef)
+from repro.core.federation import FederatedDistributor
+from repro.core.shards import ShardedTicketQueue
+from repro.core.split_parallel import (SplitConcurrentDispatcher,
+                                       TrainState, weighted_grad_mean)
+from repro.core.tickets import CANCELLED, TicketQueue
+from repro.optim import adagrad
+from repro.train_fabric import (FederatedTrainer, FederatedTrainingLoop,
+                                Rebalancer, checkpoint_path,
+                                latest_checkpoint, load_round_checkpoint,
+                                resolve_barrier_k, save_round_checkpoint,
+                                state_from_tree, state_to_tree)
+
+
+def _run(coro):
+    return asyncio.run(coro)
+
+
+def make_fed(n_members=2, **kw):
+    kw.setdefault("timeout", 5.0)
+    kw.setdefault("redistribute_min", 0.02)
+    kw.setdefault("sizer", AdaptiveSizer(target_lease_time=0.02, max_size=8))
+    kw.setdefault("watchdog_interval", 0.005)
+    kw.setdefault("grace", 2.0)
+    return FederatedDistributor(n_members, **kw)
+
+
+# --- queue-level primitives -------------------------------------------------
+
+
+def test_cancel_drains_bookkeeping_and_drops_late_submit():
+    q = TicketQueue(timeout=5.0, redistribute_min=0.01)
+    tids = q.add_many("t", [1, 2, 3])
+    batch = q.lease("c", 3)
+    assert q.cancel(tids[1:]) == 2
+    assert not q.all_done()                      # tids[0] still open
+    # the straggler's late submit for a cancelled ticket is a duplicate
+    assert q.submit_batch(batch.lease_id, {tids[1]: "late"}, "c") == 0
+    assert q.submit(tids[0], "real", "c")
+    assert q.all_done()
+    got = q.completed_results(tids)
+    assert got[tids[0]] == "real"
+    assert got[tids[1]] is CANCELLED and got[tids[2]] is CANCELLED
+    # cancelling an already-completed or unknown id is a no-op
+    assert q.cancel([tids[0], 999]) == 0
+
+
+def test_completed_results_is_partial():
+    q = TicketQueue(timeout=5.0, redistribute_min=0.01)
+    tids = q.add_many("t", ["a", "b"])
+    assert q.completed_results(tids) == {}
+    q.lease("c", 1)
+    q.submit(tids[0], "ra", "c")
+    assert q.completed_results(tids) == {tids[0]: "ra"}
+    assert q.results_for(tids) is None           # all-or-nothing contract
+
+
+def test_sharded_add_many_explicit_shard_placement_routes_results():
+    q = ShardedTicketQueue(4, timeout=5.0, redistribute_min=0.01)
+    a = q.add_many("task", [1, 2], shard=3)
+    b = q.add_many("task", [3], shard=0)
+    assert all(t.ticket_id in [x for x in a]
+               for t in q.shards[3]._tickets.values())
+    assert len(q.shards[0]._tickets) == 1
+    # same task name, two shards: submit/results/cancel still route
+    batch = q.lease("c", 3)
+    assert sorted(batch.ticket_ids) == sorted(a + b)
+    q.submit_batch(batch.lease_id, {a[0]: 10, b[0]: 30}, "c")
+    assert q.completed_results(a + b) == {a[0]: 10, b[0]: 30}
+    assert q.cancel([a[1]]) == 1
+    assert q.all_done()
+
+
+def test_sharded_cancel_gcs_fully_drained_lease():
+    """A lease whose every ticket was cancelled (fold path, client dead —
+    it will never submit) must not leak its global lease record."""
+    q = ShardedTicketQueue(2, timeout=5.0, redistribute_min=0.01)
+    tids = q.add_many("t", [1, 2])
+    batch = q.lease("doomed", 2)
+    assert batch is not None and len(q._leases) == 1
+    q.cancel(tids)
+    assert q.all_done()
+    assert q._leases == {}          # GC'd, not leaked until process exit
+
+
+def test_resolve_barrier_k():
+    assert resolve_barrier_k(8, None) == 8
+    assert resolve_barrier_k(8, 6) == 6
+    assert resolve_barrier_k(8, 100) == 8
+    assert resolve_barrier_k(8, 0) == 1
+    assert resolve_barrier_k(8, 0.75) == 6
+    assert resolve_barrier_k(8, 0.8) == 7        # ceil
+    assert resolve_barrier_k(8, 1.0) == 8
+    with pytest.raises(ValueError):
+        resolve_barrier_k(8, 1.5)
+    with pytest.raises(KeyError):
+        FederatedTrainer(make_fed(), straggler_policy="nope")
+
+
+# --- the round engine -------------------------------------------------------
+
+
+def _grad_task():
+    def run(args, static):
+        return {"grad": {"w": np.full(2, float(args), np.float32)},
+                "loss": float(args),
+                "round": static["weights"]["round"]}
+    return TaskDef("backbone_shard", run, static_files=("weights",))
+
+
+async def _basic_round(policy, barrier_k, profiles):
+    # one-ticket leases: the slow client holds exactly one shard, so the
+    # K-of-N policies trigger deterministically
+    fed = make_fed(2, n_shards=4, sizer=FixedSizer(1))
+    fed.register_task(_grad_task())
+    fed.spawn_clients(profiles)
+    async with FederatedTrainer(fed, barrier_k=barrier_k,
+                                straggler_policy=policy,
+                                timeout=20.0) as tr:
+        res = await tr.run_round(
+            list(range(6)), shard_work=[1.0] * 6,
+            statics={"weights": {"round": 0}})
+    await fed.shutdown()
+    return res
+
+
+def test_run_round_full_barrier_orders_results():
+    res = _run(_basic_round(
+        "wait", None,
+        [ClientProfile(name=f"c{i}", speed=500.0) for i in range(3)]))
+    assert res.complete and res.stragglers == []
+    assert [r["loss"] for r in res.results] == [0.0, 1, 2, 3, 4, 5]
+    assert res.work_arrived == res.work_total == 6.0
+
+
+def test_run_round_fold_cancels_straggler():
+    # one client is ~1000x slower; the barrier closes at 5 of 6 and folds
+    res = _run(_basic_round(
+        "fold", 5,
+        [ClientProfile(name="fast0", speed=500.0),
+         ClientProfile(name="fast1", speed=500.0),
+         ClientProfile(name="dead-slow", speed=0.5)]))
+    assert len(res.arrived) >= 5
+    assert len(res.stragglers) <= 1
+    for p in res.stragglers:
+        assert res.results[p] is None
+    assert res.work_arrived == float(len(res.arrived))
+
+
+def test_run_round_reticket_recovers_all_results():
+    res = _run(_basic_round(
+        "reticket", 5,
+        [ClientProfile(name="fast0", speed=500.0),
+         ClientProfile(name="fast1", speed=500.0),
+         ClientProfile(name="dead-slow", speed=0.5)]))
+    # the laggard's lease was force-released and a fast client redid it:
+    # every shard still arrived, math exact
+    assert res.complete
+    assert [r["loss"] for r in res.results] == [0.0, 1, 2, 3, 4, 5]
+
+
+def test_trainer_restores_keep_alive_and_aclose_is_idempotent():
+    async def body():
+        fed = make_fed(2)
+        assert fed.keep_alive is False
+        tr = FederatedTrainer(fed)
+        assert fed.keep_alive is True
+        await tr.aclose()
+        assert fed.keep_alive is False
+        await tr.aclose()                        # idempotent
+        with pytest.raises(RuntimeError):
+            await tr.run_round([1])
+        # a pre-set keep_alive=True caller keeps its mode
+        fed2 = make_fed(2, keep_alive=True)
+        async with FederatedTrainer(fed2):
+            pass
+        assert fed2.keep_alive is True
+        await fed.shutdown()
+        await fed2.shutdown()
+    _run(body())
+
+
+def test_split_dispatcher_restores_keep_alive():
+    async def body():
+        d = AsyncDistributor(timeout=5.0, redistribute_min=0.02)
+        assert d.keep_alive is False
+        async with SplitConcurrentDispatcher(d) as disp:
+            assert d.keep_alive is True
+            d.register_task(TaskDef("backbone_shard",
+                                    lambda a, s: a * 2))
+            d.spawn_clients([ClientProfile(name="c", speed=500.0)])
+            out = await disp.run_round([1, 2, 3], timeout=20.0)
+            assert out == [2, 4, 6]
+        assert d.keep_alive is False
+        await d.shutdown()
+    _run(body())
+
+
+def test_affinity_placement_spreads_over_alive_members_home_shards():
+    fed = make_fed(3, n_shards=6)
+    tr = FederatedTrainer(fed)
+    groups = tr.placement(6)
+    # every target shard belongs to some alive member's home set
+    home_all = {j for m in fed.members
+                for j in fed.home_shard_indices(m.index)}
+    assert set(groups) <= home_all
+    assert sorted(p for ps in groups.values() for p in ps) == list(range(6))
+    # a dead member's home shards stop receiving placements
+    fed.members[0].alive = False
+    groups2 = tr.placement(6)
+    dead_home = set(fed.home_shard_indices(0))
+    assert not (set(groups2) & dead_home)
+    # single AsyncDistributor: no placement (plain add_work path)
+    d = AsyncDistributor()
+    assert FederatedTrainer(d).placement(4) is None
+
+
+def test_plan_shards_uses_measured_rates():
+    fed = make_fed(2)
+    tr = FederatedTrainer(fed)
+    assert tr.plan_shards(10, default_shards=4) == [3, 3, 2, 2]
+    from repro.core.tickets import ClientStats
+    fed.queue.stats["fast"] = ClientStats("fast", rate=30.0)
+    fed.queue.stats["slow"] = ClientStats("slow", rate=10.0)
+    sizes = tr.plan_shards(8)
+    assert sorted(sizes) == [2, 6]
+    # the satellite surface: AsyncDistributor.client_rates matches
+    d = AsyncDistributor()
+    d.queue.stats["c"] = ClientStats("c", rate=5.0)
+    assert d.client_rates() == {"c": 5.0}
+
+
+def test_timed_out_round_cancels_its_tickets():
+    """An abandoned round must not leave zombie tickets leasable (or
+    all_done() poisoned) after the TimeoutError is handled."""
+    async def body():
+        fed = make_fed(2, n_shards=4, sizer=FixedSizer(1))
+        fed.register_task(_grad_task())
+        fed.spawn_clients([ClientProfile(name="dead-slow", speed=0.01)])
+        async with FederatedTrainer(fed, timeout=0.2) as tr:
+            with pytest.raises(TimeoutError):
+                await tr.run_round([0, 1],
+                                   statics={"weights": {"round": 0}})
+            assert fed.queue.all_done()
+            assert fed.queue.results() == {}       # pruned, not lingering
+        await fed.shutdown()
+    _run(body())
+
+
+def test_plan_shards_skips_dead_members_clients():
+    """EWMA entries outlive their clients; a killed member's clients
+    must not be apportioned phantom shards."""
+    async def body():
+        from repro.core.tickets import ClientStats
+        fed = make_fed(2)
+        fed.spawn_clients([ClientProfile(name="gone", speed=100.0)],
+                          member=0)
+        fed.spawn_clients([ClientProfile(name="alive", speed=100.0)],
+                          member=1)
+        fed.queue.stats["gone"] = ClientStats("gone", rate=50.0)
+        fed.queue.stats["alive"] = ClientStats("alive", rate=50.0)
+        tr = FederatedTrainer(fed)
+        assert sorted(tr.plan_shards(8)) == [4, 4]
+        await fed.kill_member(0)
+        assert tr.plan_shards(8) == [8]        # only the live client
+        await tr.aclose(shutdown=True)
+    _run(body())
+
+
+# --- rebalancer -------------------------------------------------------------
+
+
+def test_rebalancer_migrates_to_chronic_stealer():
+    fed = make_fed(2, n_shards=4)
+    reb = Rebalancer(fed, steal_threshold=2, cooldown=1)
+    # backlog on member0's home shards; member1 keeps stealing
+    fed.register_task(TaskDef("t", lambda a, s: a))
+    home0 = fed.home_shard_indices(0)
+    fed.add_work("t", list(range(10)), shard=home0[0])
+    fed.members[1].steals = 5
+    migs = reb.observe_round()
+    assert len(migs) == 1
+    m = migs[0]
+    assert m.reason == "steals"
+    assert m.from_member == 0 and m.to_member == 1
+    assert m.shard_index in home0
+    assert m.shard_index in fed.home_shard_indices(1)
+    assert fed.migrations == 1
+    # cool-down: an immediately repeated signal does not migrate again
+    fed.members[1].steals += 5
+    assert reb.observe_round() == []
+
+
+def test_rebalancer_fails_over_dead_members_shards():
+    fed = make_fed(3, n_shards=6)
+    reb = Rebalancer(fed)
+    dead_home = fed.home_shard_indices(0)
+    assert len(dead_home) == 2
+    fed.members[0].alive = False
+    migs = reb.observe_round()
+    assert {m.reason for m in migs} == {"failover"}
+    assert sorted(m.shard_index for m in migs) == sorted(dead_home)
+    assert fed.home_shard_indices(0) == []
+    # survivors got one each (round-robin)
+    assert len(fed.home_shard_indices(1)) == 3
+    assert len(fed.home_shard_indices(2)) == 3
+
+
+def test_migrate_shard_guards():
+    fed = make_fed(2, n_shards=4)
+    own0 = fed.home_shard_indices(0)
+    assert fed.migrate_shard(own0[0], 0) is False      # already owns it
+    fed.members[1].alive = False
+    with pytest.raises(RuntimeError):
+        fed.migrate_shard(own0[0], 1)
+
+
+# --- aggregate fusion -------------------------------------------------------
+
+
+def test_weighted_grad_mean_matches_manual_weighting():
+    rng = np.random.default_rng(0)
+    shards = [{"a": rng.normal(size=(3, 2)).astype(np.float32),
+               "b": {"c": rng.normal(size=4).astype(np.float32)}}
+              for _ in range(4)]
+    sizes = [1.0, 2.0, 3.0, 6.0]
+    out = weighted_grad_mean(shards, sizes)
+    total = sum(sizes)
+    want_a = sum(s["a"] * (w / total) for s, w in zip(shards, sizes))
+    np.testing.assert_allclose(out["a"], want_a, atol=1e-6)
+    want_c = sum(s["b"]["c"] * (w / total) for s, w in zip(shards, sizes))
+    np.testing.assert_allclose(out["b"]["c"], want_c, atol=1e-6)
+    # the dispatcher's staticmethod is the same fused rule
+    out2 = SplitConcurrentDispatcher.aggregate(shards, sizes)
+    np.testing.assert_array_equal(out["a"], out2["a"])
+
+
+# --- checkpointing ----------------------------------------------------------
+
+
+def _full_state(opt):
+    import jax.numpy as jnp
+    params = {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+              "emb": jnp.asarray(np.ones((2, 2)), jnp.bfloat16)}
+    head = {"head": {"out": np.full((3,), 0.5, np.float32)}}
+    return TrainState(
+        params=params, head=head,
+        head_stale={"head": {"out": np.full((3,), 0.25, np.float32)}},
+        opt_state=opt.init(params), head_opt_state=opt.init(head),
+        prev_features=np.zeros((2, 4), np.float32),
+        prev_labels=np.zeros((2,), np.int32),
+        prev_mask=np.ones((2,), np.float32),
+        step=np.asarray(7, np.int32))
+
+
+def test_round_checkpoint_roundtrips_full_train_state(tmp_path):
+    import jax
+    opt = adagrad(0.1)
+    state = _full_state(opt)
+    path = save_round_checkpoint(
+        checkpoint_path(str(tmp_path), 3), state, round_index=3,
+        extra={"losses": [1.0, 0.5], "policy": "reticket"})
+    assert latest_checkpoint(str(tmp_path)) == path
+    got, rnd, extra = load_round_checkpoint(path)
+    assert rnd == 3
+    assert extra["policy"] == "reticket" and extra["losses"] == [1.0, 0.5]
+    a_leaves = jax.tree_util.tree_leaves(state_to_tree(state))
+    b_leaves = jax.tree_util.tree_leaves(state_to_tree(got))
+    assert len(a_leaves) == len(b_leaves)
+    for a, b in zip(a_leaves, b_leaves):
+        a, b = np.asarray(a), np.asarray(b)
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(
+            a.view(np.uint8) if a.dtype.kind in "fV" else a,
+            b.view(np.uint8) if b.dtype.kind in "fV" else b)
+    assert int(got.step) == 7
+    with pytest.raises(ValueError):
+        (tmp_path / "bad.json").write_text('{"__dict__": {}}')
+        load_round_checkpoint(str(tmp_path / "bad.json"))
+
+
+def test_state_tree_roundtrip_preserves_structure():
+    opt = adagrad(0.1)
+    state = _full_state(opt)
+    rebuilt = state_from_tree(state_to_tree(state))
+    assert isinstance(rebuilt, TrainState)
+    assert rebuilt.prev_features.shape == (2, 4)
+
+
+# --- the training loop: kill/resume regression ------------------------------
+
+
+def _lin_data():
+    rng = np.random.default_rng(11)
+    X = rng.normal(size=(48, 4)).astype(np.float32)
+    y = (X @ rng.normal(size=4).astype(np.float32)).astype(np.float32)
+    return X, y
+
+
+_X, _Y = _lin_data()
+
+
+def _lin_grad_task():
+    def run(args, static):
+        lo, hi = args
+        w = np.asarray(static["weights"]["params"]["w"])
+        r = _X[lo:hi] @ w - _Y[lo:hi]
+        return {"grad": {"w": (2 * _X[lo:hi].T @ r / (hi - lo))
+                         .astype(np.float32)},
+                "loss": float((r ** 2).mean()),
+                "round": static["weights"]["round"]}
+    return TaskDef("backbone_shard", run, static_files=("weights",))
+
+
+async def _train(rounds, ckdir, resume_from=None):
+    fed = make_fed(2, n_shards=4, sizer=FixedSizer(1))
+    fed.register_task(_lin_grad_task())
+    fed.spawn_clients([ClientProfile(name=f"c{i}", speed=500.0)
+                       for i in range(3)])
+    opt = adagrad(0.2)
+    if resume_from is None:
+        params = {"w": np.zeros(4, np.float32)}
+        state = TrainState(params=params, head={}, head_stale={},
+                           opt_state=opt.init(params), head_opt_state={},
+                           prev_features=(), prev_labels=(), prev_mask=(),
+                           step=np.zeros((), np.int32))
+        start = 0
+    else:
+        state, start, _ = load_round_checkpoint(resume_from)
+    trainer = FederatedTrainer(fed, timeout=20.0)
+    loop = FederatedTrainingLoop(trainer, opt, state, round_index=start,
+                                 checkpoint_dir=ckdir)
+    args = [(i, i + 12) for i in range(0, 48, 12)]
+    async with trainer:
+        for _ in range(start, rounds):
+            await loop.run_round(args, [12.0] * 4)
+        await trainer.aclose(shutdown=True)
+    return loop
+
+
+def _wire_grad_shard(args, static):
+    """Module-level so the task code pickles across the wire."""
+    lo, hi = args
+    w = np.asarray(static["weights"]["params"]["w"])
+    r = _X[lo:hi] @ w - _Y[lo:hi]
+    return {"grad": {"w": (2 * _X[lo:hi].T @ r / (hi - lo))
+                     .astype(np.float32)},
+            "loss": float((r ** 2).mean()),
+            "round": static["weights"]["round"]}
+
+
+def test_training_rounds_over_wire_with_member_failover():
+    """The round engine is transport-agnostic: remote clients speaking
+    only the wire protocol drive training rounds, and when a member dies
+    mid-training its connections are dropped so the clients reconnect to
+    a survivor and the next round still completes exactly."""
+    from repro.core.transport import TransportServer, spawn_remote_clients
+
+    async def body():
+        fed = make_fed(2, n_shards=4)
+        fed.register_task(TaskDef("backbone_shard", _wire_grad_shard,
+                                  static_files=("weights",)))
+        server = TransportServer(fed)
+        host, port = await server.start()
+        clients, tasks = spawn_remote_clients(
+            (host, port),
+            [ClientProfile(name=f"r{i}", speed=500.0) for i in range(3)],
+            reconnect_delay=0.02)
+        opt = adagrad(0.2)
+        params = {"w": np.zeros(4, np.float32)}
+        state = TrainState(params=params, head={}, head_stale={},
+                           opt_state=opt.init(params), head_opt_state={},
+                           prev_features=(), prev_labels=(), prev_mask=(),
+                           step=np.zeros((), np.int32))
+        trainer = FederatedTrainer(fed, timeout=20.0)
+        loop = FederatedTrainingLoop(trainer, opt, state)
+        shard_args = [(i, i + 12) for i in range(0, 48, 12)]
+        async with trainer:
+            res = await loop.run_round(shard_args, [12.0] * 4)
+            assert res.complete
+            await fed.kill_member(0)
+            dropped = server.drop_member_connections(0)
+            res2 = await loop.run_round(shard_args, [12.0] * 4)
+            assert res2.complete
+        await asyncio.gather(*tasks)
+        await server.stop()
+        assert dropped >= 1
+        assert loop.stale_executions == 0
+        assert len(loop.losses) == 2 and loop.losses[1] < loop.losses[0]
+        # every surviving connection is bound to the alive member
+        assert all(c.member == 1 for c in clients if c.member is not None)
+        await fed.shutdown()
+
+    _run(body())
+
+
+def test_kill_and_resume_at_round_boundary_reproduces_trajectory(tmp_path):
+    full = _run(_train(5, str(tmp_path / "a")))
+    assert full.stale_executions == 0
+    # "kill" after 2 rounds, resume from the round-2 checkpoint
+    killed_dir = str(tmp_path / "b")
+    _run(_train(2, killed_dir))
+    ck = latest_checkpoint(killed_dir)
+    assert ck == checkpoint_path(killed_dir, 2)
+    resumed = _run(_train(5, str(tmp_path / "c"), resume_from=ck))
+    assert resumed.round_index == 5 and len(resumed.losses) == 3
+    np.testing.assert_allclose(resumed.losses, full.losses[2:],
+                               rtol=0, atol=1e-7)
