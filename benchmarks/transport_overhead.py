@@ -13,16 +13,31 @@ and speeds, same ticket mix):
 
 The headline number is **round-throughput ratio** (transport tickets/s ÷
 in-process tickets/s); the acceptance bar is ≥ 0.5x.  The wire ledger
-(frames and bytes per ticket) quantifies what a round actually costs in
-serialization.  A third phase re-runs the PR 3 **re-register storm** with
-every client remote and asserts **zero stale serves** — cache coherence
-must survive the serialization boundary.
+(frames and bytes per direction — ``down`` = server→client, ``up`` =
+client→server) quantifies what a round actually costs in serialization.
+A third phase re-runs the PR 3 **re-register storm** with every client
+remote and asserts **zero stale serves** — cache coherence must survive
+the serialization boundary.
+
+The **weight-rounds** phase measures what protocol v2 was built for: a
+paper-sized CNN ``TrainState`` (the Fig. 2 network — conv 5×5×{16,20,20}
++ FC 320→10 — in bfloat16) re-published every round with only the FC
+head changing (a frozen-backbone fine-tune, ~14% of the parameters).
+The identical workload runs against a v1-only server (JSON frames,
+pickle+base64 payloads, full re-download per round) and a v2 server
+(binary frames, changed-leaves deltas); the acceptance bar is
+**down-bytes/round ratio > 5x** with zero stale serves on both.  With
+``--baseline`` the v2 bytes/round are additionally gated against a
+recorded baseline ×1.2 (the CI regression check).
 
 Unlike the virtual-clock benchmarks, this one runs real sockets, so it
-uses wall-clock time: each cell is the median of ``REPS`` repetitions.
+uses wall-clock time: each cell is the median of ``REPS`` repetitions
+(the byte ledgers are deterministic and measured once).
 
 Usage:
-  PYTHONPATH=src python benchmarks/transport_overhead.py [--json out.json]
+  PYTHONPATH=src python benchmarks/transport_overhead.py \
+      [--json out.json] [--baseline benchmarks/baselines/transport_baseline.json] \
+      [--update-baseline]
 """
 from __future__ import annotations
 
@@ -33,11 +48,19 @@ import statistics
 import sys
 import time
 
+import numpy as np
+
 sys.path.insert(0, "src")
 
 from repro.core.distributor import (AdaptiveSizer, AsyncDistributor,
                                     ClientProfile, TaskDef)
 from repro.core.transport import TransportServer, spawn_remote_clients
+
+try:
+    import ml_dtypes
+    BF16 = np.dtype(ml_dtypes.bfloat16)
+except ImportError:    # pragma: no cover - jax always ships ml_dtypes
+    BF16 = np.dtype(np.float16)
 
 N_TICKETS = 400
 N_CLIENTS = 4
@@ -45,6 +68,8 @@ SPEED = 800.0          # work units/s -> 1.25 ms simulated compute/ticket
 REPS = 3
 STORM_ROUNDS = 8
 STORM_TICKETS = 16
+WEIGHT_ROUNDS = 8      # weight-rounds phase: 1 cold + this many deltas
+BASELINE_SLACK = 1.2   # --baseline gate: fail past recorded bytes × this
 
 
 def _square(x, static):
@@ -53,6 +78,30 @@ def _square(x, static):
 
 def _read_weights(x, static):
     return (x, static["weights"])
+
+
+def _weights_probe(x, static):
+    """Touch every leaf of this round's weights, return tiny results (so
+    the UP direction stays small and DOWN isolates the publish cost)."""
+    w = static["weights"]
+    checksum = float(sum(np.asarray(v, np.float32).sum()
+                         for layer in w["params"].values()
+                         for v in layer.values()))
+    return (w["round"], checksum)
+
+
+def _fig2_cnn_params(rng):
+    """The paper's Fig. 2 CNN for 32×32×3 inputs, as a bfloat16 pytree:
+    three 5×5 conv layers (16/20/20 maps, 2×2 pooling) and a 320→10 FC
+    head — ~22.5k parameters, ~45 KB raw in bf16."""
+    def w(*shape):
+        return rng.standard_normal(shape).astype(BF16)
+    return {
+        "conv1": {"w": w(5, 5, 3, 16), "b": w(16)},
+        "conv2": {"w": w(5, 5, 16, 20), "b": w(20)},
+        "conv3": {"w": w(5, 5, 20, 20), "b": w(20)},
+        "fc": {"w": w(320, 10), "b": w(10)},
+    }
 
 
 def _profiles():
@@ -135,6 +184,74 @@ async def _run_storm() -> dict:
                                       for c in clients)}
 
 
+async def _run_weight_rounds(max_proto: int) -> dict:
+    """The frozen-backbone fine-tune shape on the wire: publish the full
+    CNN state once, then re-publish every round with only the FC head
+    changed.  One client (byte ledgers stay deterministic), speed high
+    enough that serialization dominates.  Returns per-direction bytes per
+    steady-state round (the cold first round is excluded — it is a full
+    download on every protocol)."""
+    d = _dist(keep_alive=True)
+    rng = np.random.default_rng(0)
+    params = _fig2_cnn_params(rng)
+    d.add_static("weights", {"round": -1, "params": params})
+    d.register_task(TaskDef("wp", _weights_probe,
+                            static_files=("weights",)))
+    server = TransportServer(d, max_proto=max_proto)
+    addr = await server.start()
+    clients, tasks = spawn_remote_clients(
+        addr, [ClientProfile(name="c0", speed=SPEED)])
+    stale = total = 0
+    marks = []                       # (bytes_down, bytes_up) after each round
+    for rnd in range(WEIGHT_ROUNDS + 1):
+        # frozen backbone: only the FC head (and the round tag) change
+        params = {**params,
+                  "fc": {"w": rng.standard_normal((320, 10)).astype(BF16),
+                         "b": rng.standard_normal(10).astype(BF16)}}
+        d.add_static("weights", {"round": rnd, "params": params})
+        tids = d.add_work("wp", list(range(4)))
+        deadline = time.monotonic() + 60.0
+        while True:
+            wake = d._wake_event()
+            out = d.queue.results_for(tids)
+            if out is not None:
+                break
+            assert time.monotonic() < deadline, d.console()
+            await d._wait_on(wake, 0.05)
+        for seen, _ in out:
+            total += 1
+            stale += (seen != rnd)
+        d.queue.prune(tids)
+        marks.append((server.bytes_out, server.bytes_in))
+    for c in clients:
+        await c.stop()
+    await asyncio.gather(*tasks, return_exceptions=True)
+    await d.shutdown()
+    await server.stop()
+    assert stale == 0, f"{stale}/{total} stale serves at proto {max_proto}"
+    # steady state: rounds 1..N (round 0 pays the cold full download)
+    down = (marks[-1][0] - marks[0][0]) / WEIGHT_ROUNDS
+    up = (marks[-1][1] - marks[0][1]) / WEIGHT_ROUNDS
+    return {"proto": clients[0].proto,
+            "rounds": WEIGHT_ROUNDS,
+            "bytes_down_per_round": round(down, 1),
+            "bytes_up_per_round": round(up, 1),
+            "deltas_applied": clients[0].deltas_applied,
+            "full_downloads": int(d.download_count["weights"]),
+            "delta_downloads": int(d.delta_count["weights"]),
+            "stale_serves": stale}
+
+
+def _weight_rounds_cell() -> dict:
+    v1 = asyncio.run(_run_weight_rounds(max_proto=1))
+    v2 = asyncio.run(_run_weight_rounds(max_proto=2))
+    ratio_down = v1["bytes_down_per_round"] / v2["bytes_down_per_round"]
+    ratio_up = v1["bytes_up_per_round"] / v2["bytes_up_per_round"]
+    return {"v1": v1, "v2": v2,
+            "ratio_down": round(ratio_down, 2),
+            "ratio_up": round(ratio_up, 2)}
+
+
 def run_sweep() -> dict:
     """Run all cells; returns the machine-readable results dict
     (``benchmarks/run.py`` writes it as BENCH_transport.json)."""
@@ -158,11 +275,18 @@ def run_sweep() -> dict:
                       "tickets_per_s": round(thr_tr, 1),
                       "frames": wire["frames_in"] + wire["frames_out"],
                       "wire_bytes": wire["bytes_in"] + wire["bytes_out"],
+                      "bytes_up": wire["bytes_in"],
+                      "bytes_down": wire["bytes_out"],
+                      "bytes_up_per_ticket": round(
+                          wire["bytes_in"] / N_TICKETS, 1),
+                      "bytes_down_per_ticket": round(
+                          wire["bytes_out"] / N_TICKETS, 1),
                       "bytes_per_ticket": round(
                           (wire["bytes_in"] + wire["bytes_out"])
                           / N_TICKETS, 1)},
         "throughput_ratio": round(thr_tr / thr_in, 3),
         "storm": storm,
+        "weight_rounds": _weight_rounds_cell(),
     }
 
 
@@ -170,6 +294,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=None,
                     help="also write results to this path")
+    ap.add_argument("--baseline", default=None,
+                    help="gate v2 weight-round bytes against this recorded "
+                         f"baseline × {BASELINE_SLACK} (CI regression check)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite --baseline with the measured v2 bytes")
     args = ap.parse_args()
     results = run_sweep()
     print(f"{'cell':<12} {'makespan':>10} {'tickets/s':>10}")
@@ -179,21 +308,62 @@ def main():
               f"{r['tickets_per_s']:>10.1f}")
     tr = results["transport"]
     print(f"wire: {tr['frames']} frames, {tr['wire_bytes']} bytes "
-          f"({tr['bytes_per_ticket']} bytes/ticket)")
+          f"(up {tr['bytes_up_per_ticket']} + "
+          f"down {tr['bytes_down_per_ticket']} bytes/ticket)")
     print(f"throughput ratio (transport/in-process): "
           f"{results['throughput_ratio']}x")
     s = results["storm"]
     print(f"storm over the wire: {s['stale_serves']}/{s['tickets']} stale "
           f"({s['revalidations']} revalidations, "
           f"{s['push_invalidations']} push invalidations)")
-    # acceptance bars: coherence survives serialization, and the wire
-    # costs at most half the in-process round throughput
+    wr = results["weight_rounds"]
+    print(f"weight rounds (Fig.2 CNN, bf16, FC-only updates):")
+    for proto in ("v1", "v2"):
+        r = wr[proto]
+        print(f"  {proto}: down {r['bytes_down_per_round']:>9.1f} B/round  "
+              f"up {r['bytes_up_per_round']:>7.1f} B/round  "
+              f"(deltas {r['delta_downloads']}, "
+              f"full downloads {r['full_downloads']})")
+    print(f"  down-bytes ratio v1/v2: {wr['ratio_down']}x "
+          f"(up: {wr['ratio_up']}x)")
+    # acceptance bars: coherence survives serialization, the wire costs
+    # at most half the in-process round throughput, and v2 deltas cut the
+    # publish-direction bytes by more than 5x on the paper-CNN workload
     assert s["stale_serves"] == 0, s
     assert results["throughput_ratio"] >= 0.5, results
+    assert wr["v2"]["deltas_applied"] >= WEIGHT_ROUNDS - 1, wr
+    assert wr["ratio_down"] > 5.0, wr
+    if args.baseline:
+        gate_against_baseline(wr, args.baseline,
+                              update=args.update_baseline)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(results, f, indent=2)
         print(f"wrote {args.json}")
+
+
+def gate_against_baseline(wr: dict, path: str, *, update: bool = False):
+    """Fail when the measured v2 bytes/round regress above the recorded
+    baseline × BASELINE_SLACK; ``update=True`` rewrites the record."""
+    measured = {"v2_bytes_down_per_round": wr["v2"]["bytes_down_per_round"],
+                "v2_bytes_up_per_round": wr["v2"]["bytes_up_per_round"],
+                "ratio_down": wr["ratio_down"]}
+    if update:
+        with open(path, "w") as f:
+            json.dump(measured, f, indent=2)
+            f.write("\n")
+        print(f"baseline updated: {path}")
+        return
+    with open(path) as f:
+        baseline = json.load(f)
+    for key in ("v2_bytes_down_per_round", "v2_bytes_up_per_round"):
+        cap = baseline[key] * BASELINE_SLACK
+        assert measured[key] <= cap, (
+            f"{key} regressed: {measured[key]} > {baseline[key]} x "
+            f"{BASELINE_SLACK} = {cap:.1f}")
+    print(f"baseline ok: {path} "
+          f"(down {measured['v2_bytes_down_per_round']} <= "
+          f"{baseline['v2_bytes_down_per_round']} x {BASELINE_SLACK})")
 
 
 if __name__ == "__main__":

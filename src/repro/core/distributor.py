@@ -40,6 +40,13 @@ from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
 from repro.core.tickets import ClientStats, LeaseBatch, TicketQueue
+from repro.core.wire import (DeltaApplyError, apply_delta, flatten_tree,
+                             leaf_equal)
+
+#: Delta staleness horizon: a client whose cached copy is more than this
+#: many re-publishes behind gets a full payload instead of a delta (the
+#: registry only keeps leaf stamps for the last DELTA_HISTORY versions).
+DELTA_HISTORY = 8
 
 
 class LRUCache:
@@ -117,6 +124,11 @@ class Fetched:
     version: int
     not_modified: bool = False
     current: bool = True
+    #: protocol v2 delta reply: the version the changed-leaf dict in
+    #: ``value`` patches (None = ``value`` is a full payload).  Set only
+    #: when the client asked for a delta and its base is inside the
+    #: registry's DELTA_HISTORY window.
+    delta_base: Optional[int] = None
 
     # -- wire codec (docs/PROTOCOL.md) ---------------------------------------
 
@@ -128,6 +140,8 @@ class Fetched:
              "current": self.current}
         if not self.not_modified:
             d["payload"] = encode_value(self.value)
+            if self.delta_base is not None:
+                d["delta_base"] = self.delta_base
         return d
 
     @classmethod
@@ -138,7 +152,8 @@ class Fetched:
             return cls(None, d["version"], not_modified=True,
                        current=d.get("current", True))
         return cls(decode_value(d["payload"]), d["version"],
-                   current=d.get("current", True))
+                   current=d.get("current", True),
+                   delta_base=d.get("delta_base"))
 
 
 @dataclass
@@ -217,6 +232,40 @@ class AdaptiveSizer:
         return n_tickets * stats.mean_ticket_work / stats.rate
 
 
+@dataclass
+class _DeltaState:
+    """Per-static leaf-stamp bookkeeping for delta serving.
+
+    ``flat`` maps each leaf path (see :func:`repro.core.wire.flatten_tree`)
+    to the *current* leaf object; ``stamps`` maps the same paths to the
+    registry version at which each leaf last changed; ``history`` is the
+    ordered list of the last DELTA_HISTORY publish versions over which the
+    path set was stable.  A structure change (paths added/removed) resets
+    both, so a delta never has to express leaf removal."""
+
+    flat: dict
+    stamps: dict
+    history: list
+
+
+def build_delta_fetched(state: Optional[_DeltaState], version: int,
+                        if_version: Optional[int], *,
+                        current: bool = True) -> Optional[Fetched]:
+    """The pure delta-serving decision, shared by the origin registry and
+    the federation edge caches so their semantics cannot diverge.
+
+    Returns a delta :class:`Fetched` (``value`` = changed-leaves dict,
+    ``delta_base`` = ``if_version``) when the client's base version is
+    inside the stamp window and strictly behind ``version``; otherwise
+    None (caller falls back to a full payload)."""
+    if (state is None or if_version is None or if_version == version
+            or if_version not in state.history):
+        return None
+    changed = {p: leaf for p, leaf in state.flat.items()
+               if state.stamps[p] > if_version}
+    return Fetched(changed, version, current=current, delta_base=if_version)
+
+
 class HttpServerBase:
     """The paper's HTTPServer half, shared by Distributor v1 and v2: a
     **versioned registry** of task code + static assets published to
@@ -241,9 +290,13 @@ class HttpServerBase:
         self.static_store: dict[str, Any] = {}
         self.download_count: collections.Counter = collections.Counter()
         self.revalidation_count: collections.Counter = collections.Counter()
+        #: partial (changed-leaves-only) transfers, keyed like
+        #: download_count — a delta is neither a full download nor a 304
+        self.delta_count: collections.Counter = collections.Counter()
         self._count_lock = threading.Lock()
         self._registry_clock = 0                 # shared monotonic versions
         self._static_versions: dict[str, int] = {}
+        self._static_delta: dict[str, _DeltaState] = {}
         self._invalidation_listeners: list[Callable[[str, int], None]] = []
 
     # -- publishing (producer side) ------------------------------------------
@@ -274,12 +327,30 @@ class HttpServerBase:
 
     def add_static(self, key: str, value: Any):
         """Publish (or re-publish) a dataset/helper; bumps its version and
-        fans out an invalidation for the key."""
+        fans out an invalidation for the key.
+
+        Also stamps each leaf of the value with the version at which it
+        last changed (protocol v2 delta encoding): a re-publish that keeps
+        the tree structure compares leaves bit-exactly against the previous
+        payload, so a later ``serve_static_versioned(..., delta=True)`` can
+        ship only the changed leaves.  A structure change resets the stamp
+        window — the next conditional fetch gets a full payload."""
         with self._count_lock:
             self._registry_clock += 1
             version = self._registry_clock
             self._static_versions[key] = version
             self.static_store[key] = value
+            new_flat = flatten_tree(value)
+            prev = self._static_delta.get(key)
+            if prev is not None and prev.flat.keys() == new_flat.keys():
+                stamps = {p: (prev.stamps[p]
+                              if leaf_equal(prev.flat[p], leaf) else version)
+                          for p, leaf in new_flat.items()}
+                history = (prev.history + [version])[-DELTA_HISTORY:]
+            else:
+                stamps = {p: version for p in new_flat}
+                history = [version]
+            self._static_delta[key] = _DeltaState(new_flat, stamps, history)
         self._notify_invalidation(f"static:{key}", version)
 
     # -- versions -------------------------------------------------------------
@@ -318,17 +389,62 @@ class HttpServerBase:
             return Fetched(task, task.version)
 
     def serve_static_versioned(self, key: str,
-                               if_version: Optional[int] = None) -> Fetched:
+                               if_version: Optional[int] = None, *,
+                               delta: bool = False) -> Fetched:
         """Download a static asset, conditionally (see
-        :meth:`fetch_task_versioned`)."""
+        :meth:`fetch_task_versioned`).
+
+        With ``delta=True`` (protocol v2) a client whose ``if_version`` is
+        inside the DELTA_HISTORY stamp window gets only the leaves that
+        changed since (``delta_count`` ledger); past the horizon — or
+        across a structure change — it falls back to the full payload."""
         with self._count_lock:
             value = self.static_store[key]
             version = self._static_versions.get(key, 0)
             if if_version is not None and version == if_version:
                 self.revalidation_count[key] += 1
                 return Fetched(None, version, not_modified=True)
+            if delta:
+                got = build_delta_fetched(self._static_delta.get(key),
+                                          version, if_version)
+                if got is not None:
+                    self.delta_count[key] += 1
+                    return got
             self.download_count[key] += 1
             return Fetched(value, version)
+
+    def static_delta_state(self, key: str
+                           ) -> Optional[tuple[int, _DeltaState]]:
+        """Snapshot ``(version, delta_state)`` for a static, taken
+        atomically — an edge cache stores it alongside the payload it just
+        fetched (discarding it if the versions disagree, i.e. the fetch
+        raced a re-publish) so it can serve deltas without an origin
+        round-trip."""
+        with self._count_lock:
+            state = self._static_delta.get(key)
+            if state is None:
+                return None
+            return (self._static_versions.get(key, 0),
+                    _DeltaState(dict(state.flat), dict(state.stamps),
+                                list(state.history)))
+
+    def static_delta_stats(self, key: str) -> dict:
+        """Observability for the training loop: how much of the last
+        publish of ``key`` actually changed (what a v2 delta fetch ships)
+        versus the total leaf count."""
+        with self._count_lock:
+            state = self._static_delta.get(key)
+            version = self._static_versions.get(key, 0)
+            if state is None:
+                return {"version": version, "leaves": 0, "changed": 0,
+                        "window": 0}
+            return {
+                "version": version,
+                "leaves": len(state.flat),
+                "changed": sum(1 for p in state.flat
+                               if state.stamps[p] == version),
+                "window": len(state.history),
+            }
 
     def serve_static(self, key: str):
         """Unconditional static download (v1 compat surface)."""
@@ -369,13 +485,29 @@ def merge_versioned_fetch(entry: Optional[_CacheEntry], got: Fetched,
         unconditionally and fold the retry with
         :func:`merge_unconditional_fetch`;
       * otherwise ``new_entry`` carries the fresh payload, validated at
-        the pin."""
+        the pin.
+
+    A **delta** reply (``got.delta_base`` set, protocol v2) is spliced
+    into the cached entry with :func:`repro.core.wire.apply_delta`; if the
+    entry does not match the delta's base version — or the patch does not
+    fit — the delta is discarded and ``needs_refetch`` asks for a full
+    payload instead, so a bad delta can degrade to an extra round-trip but
+    never to a wrong value."""
     if got.not_modified:
         # authoritative "your copy is current": validate at the pin
         return (_CacheEntry(entry.value, entry.version,
                             max(min_version, entry.version)), True, False)
     if not got.current:
         return None, False, True           # heal through a raced edge fill
+    if got.delta_base is not None:
+        if entry is None or entry.version != got.delta_base:
+            return None, False, True       # base moved: take a full payload
+        try:
+            merged = apply_delta(entry.value, got.value)
+        except DeltaApplyError:
+            return None, False, True       # corrupt delta: full payload
+        return (_CacheEntry(merged, got.version,
+                            max(min_version, got.version)), False, False)
     return (_CacheEntry(got.value, got.version,
                         max(min_version, got.version)), False, False)
 

@@ -37,7 +37,7 @@ from typing import Any, Callable, Optional
 
 from repro.core.distributor import (AdaptiveSizer, AsyncDistributor,
                                     Fetched, HttpServerBase, LRUCache,
-                                    TaskDef)
+                                    TaskDef, build_delta_fetched)
 from repro.core.shards import ShardedTicketQueue
 
 
@@ -73,9 +73,12 @@ class EdgeCache:
                  capacity: int = 64, subscribe: bool = True):
         self.origin = origin
         self.name = name
-        self.cache = LRUCache(capacity)   # key -> (value, version)
+        self.cache = LRUCache(capacity)   # key -> (value, version, dstate)
         self.download_count: collections.Counter = collections.Counter()
         self.revalidation_count: collections.Counter = collections.Counter()
+        #: client-facing partial transfers (protocol v2 deltas served
+        #: locally from the cached leaf-stamp snapshot)
+        self.delta_count: collections.Counter = collections.Counter()
         self.invalidations = 0
         self._floor: dict[str, int] = {}  # key -> minimum current version
         self._lock = threading.Lock()
@@ -96,11 +99,22 @@ class EdgeCache:
                 self.invalidations += 1
 
     def _read_through(self, cache_key: str, ledger_key: str,
-                      fetch, if_version: Optional[int]) -> Fetched:
+                      fetch, if_version: Optional[int], *,
+                      delta: bool = False,
+                      delta_state_fetch=None) -> Fetched:
         """Shared fetch path: LRU probe under the lock, origin fetch
         outside it, conditional short-circuit when the client's version
         matches our entry AND the entry is at or above the invalidation
-        floor (i.e. provably current)."""
+        floor (i.e. provably current).
+
+        Statics additionally read the origin's leaf-stamp snapshot on a
+        miss fill (``delta_state_fetch``), kept only when its version
+        matches the payload fetched (a mismatch means the fill raced a
+        re-publish).  With it cached, a v2 client's ``delta=True``
+        conditional fetch is answered locally with just the changed
+        leaves — same :func:`build_delta_fetched` decision as the origin,
+        and only when the entry is provably current (a sub-floor entry
+        already forces the client to refetch a full payload)."""
         with self._lock:
             self.download_count[ledger_key] += 1
             entry = self.cache.get(cache_key)
@@ -110,16 +124,27 @@ class EdgeCache:
                 entry = None
         if entry is None:
             got = fetch()                      # origin round-trip, unlocked
-            entry = (got.value, got.version)
+            dstate = None
+            if delta_state_fetch is not None:
+                snap = delta_state_fetch()     # second trip, still unlocked
+                if snap is not None and snap[0] == got.version:
+                    dstate = snap[1]
+            entry = (got.value, got.version, dstate)
             with self._lock:
                 if got.version >= self._floor.get(cache_key, 0):
                     self.cache.put(cache_key, entry)
-        value, version = entry
+        value, version = entry[0], entry[1]
+        dstate = entry[2] if len(entry) > 2 else None
         with self._lock:
             current = version >= self._floor.get(cache_key, 0)
             if if_version is not None and if_version == version and current:
                 self.revalidation_count[ledger_key] += 1
                 return Fetched(None, version, not_modified=True)
+            if delta and current and dstate is not None:
+                got_d = build_delta_fetched(dstate, version, if_version)
+                if got_d is not None:
+                    self.delta_count[ledger_key] += 1
+                    return got_d
         # current=False tells the client this payload raced an
         # invalidation — serve it, but don't let it validate a pin
         return Fetched(value, version, current=current)
@@ -133,13 +158,20 @@ class EdgeCache:
             if_version)
 
     def serve_static_versioned(self, key: str,
-                               if_version: Optional[int] = None) -> Fetched:
-        """Serve a static asset, read-through to the origin on a miss."""
+                               if_version: Optional[int] = None, *,
+                               delta: bool = False) -> Fetched:
+        """Serve a static asset, read-through to the origin on a miss.
+        ``delta=True`` (protocol v2) serves changed-leaves deltas from the
+        cached leaf-stamp snapshot when the client's base is in window."""
         # "static:" namespace so an asset literally named "task:<x>" can't
         # collide with task <x>'s code (same split BrowserNodeBase uses)
+        delta_state_fetch = getattr(self.origin, "static_delta_state", None)
         return self._read_through(
             f"static:{key}", key,
-            lambda: self.origin.serve_static_versioned(key), if_version)
+            lambda: self.origin.serve_static_versioned(key), if_version,
+            delta=delta,
+            delta_state_fetch=(None if delta_state_fetch is None
+                               else (lambda: delta_state_fetch(key))))
 
     def fetch_task(self, name: str) -> TaskDef:
         """Unconditional task fetch (v1 compat surface)."""
@@ -167,6 +199,7 @@ class EdgeCache:
                 "evictions": self.cache.evictions,
                 "invalidations": self.invalidations,
                 "revalidations": sum(self.revalidation_count.values()),
+                "deltas": sum(self.delta_count.values()),
                 "hit_rate": (self.cache.hits / requests) if requests else 0.0,
             }
 
@@ -225,9 +258,11 @@ class FederationMember(AsyncDistributor):
         ``if_version`` matching costs a counter bump, not a payload)."""
         return self.edge.fetch_task_versioned(name, if_version)
 
-    def serve_static_versioned(self, key: str, if_version=None):
-        """Serve a static asset from this member's edge (conditional)."""
-        return self.edge.serve_static_versioned(key, if_version)
+    def serve_static_versioned(self, key: str, if_version=None, *,
+                               delta: bool = False):
+        """Serve a static asset from this member's edge (conditional;
+        ``delta=True`` ships changed leaves only, protocol v2)."""
+        return self.edge.serve_static_versioned(key, if_version, delta=delta)
 
     def fetch_task(self, name: str) -> TaskDef:
         """Unconditional task fetch through the edge (v1 compat)."""

@@ -37,6 +37,8 @@ import collections
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
+from repro.core.wire import ProtocolError
+
 
 class _Cancelled:
     """Sentinel result for tickets force-completed by a barrier fold (the
@@ -107,11 +109,31 @@ class Ticket:
     def from_wire(cls, d: dict,
                   decode_args: Callable[[Any], Any]) -> "Ticket":
         """Rebuild a client-side ticket from its wire dict (inverse of
-        :meth:`to_wire`; server-only scheduling fields default to zero)."""
-        return cls(d["ticket_id"], d["task_name"], decode_args(d["args"]),
-                   created_at=0.0, work=d["work"],
+        :meth:`to_wire`; server-only scheduling fields default to zero).
+
+        Wire dicts come from an untrusted peer: missing or mistyped
+        fields raise ``ProtocolError("bad-message")`` instead of leaking
+        KeyError/TypeError into the request loop."""
+        if not isinstance(d, dict):
+            raise ProtocolError("bad-message", "ticket must be an object")
+        ticket_id = d.get("ticket_id")
+        task_name = d.get("task_name")
+        work = d.get("work")
+        task_version = d.get("task_version", 0)
+        if (not isinstance(ticket_id, int) or isinstance(ticket_id, bool)
+                or not isinstance(task_name, str)
+                or not isinstance(work, (int, float))
+                or isinstance(work, bool)
+                or not isinstance(task_version, int)
+                or isinstance(task_version, bool)
+                or "args" not in d):
+            raise ProtocolError("bad-message",
+                                f"malformed ticket fields: "
+                                f"{sorted(d.keys())}")
+        return cls(ticket_id, task_name, decode_args(d["args"]),
+                   created_at=0.0, work=float(work),
                    lease_id=d.get("lease_id"),
-                   task_version=d.get("task_version", 0))
+                   task_version=task_version)
 
 
 @dataclass
@@ -187,9 +209,22 @@ class LeaseBatch:
     @classmethod
     def from_wire(cls, d: dict, decode_args) -> "LeaseBatch":
         """Rebuild a client-side lease from its wire dict (inverse of
-        :meth:`to_wire`)."""
-        return cls(d["lease_id"], d["client"],
-                   [Ticket.from_wire(t, decode_args) for t in d["tickets"]],
+        :meth:`to_wire`).  Malformed grants from an untrusted peer raise
+        ``ProtocolError("bad-message")``, not bare KeyError/TypeError."""
+        if not isinstance(d, dict):
+            raise ProtocolError("bad-message",
+                                "lease grant must be an object")
+        lease_id = d.get("lease_id")
+        client = d.get("client")
+        tickets = d.get("tickets")
+        if (not isinstance(lease_id, int) or isinstance(lease_id, bool)
+                or not isinstance(client, str)
+                or not isinstance(tickets, list)):
+            raise ProtocolError("bad-message",
+                                f"malformed lease grant fields: "
+                                f"{sorted(d.keys())}")
+        return cls(lease_id, client,
+                   [Ticket.from_wire(t, decode_args) for t in tickets],
                    issued_at=0.0)
 
 

@@ -11,6 +11,20 @@ client ⇄ distributor surface becomes a real **message protocol**:
     assets, ticket args, results) travel as base64 fields inside the JSON
     envelope — this reproduction pickles them, where the paper ships
     JavaScript source; the envelope is identical either way.
+  * **Protocol v2** (negotiated in ``hello`` via ``max_proto``; v1 peers
+    keep the JSON-only wire unchanged) adds **binary chunk frames**: a
+    header frame may announce ``chunks``/``blob_bytes``, followed by that
+    many raw-byte frames (length prefix with the top bit set).  Static
+    payloads then ride the :mod:`repro.core.wire` binary codec — raw
+    array buffers with a compact dtype/shape manifest, zero pickle and
+    zero base64 for array data, streamed in bounded chunks so a large
+    weight blob never materializes as one frame.  Conditional static
+    fetches may ask for a **delta** (``"delta": true``): the registry's
+    per-leaf version stamps let it ship only the leaves that changed
+    since the client's cached version (full payload past the
+    ``DELTA_HISTORY`` staleness horizon), and the client splices them in
+    via the same ``merge_versioned_fetch`` helper the in-process path
+    uses.
   * **Messages** — ``hello``/``hello_ok``, ``lease_request``/
     ``lease_grant``, ``submit``/``submit_ok``, ``release``/``release_ok``,
     ``fetch_task``/``fetch_static`` answered by ``task_data``/
@@ -56,28 +70,43 @@ from repro.core.distributor import (BrowserNodeBase, ClientProfile, Fetched,
                                     TaskDef, merge_unconditional_fetch,
                                     merge_versioned_fetch)
 from repro.core.tickets import LeaseBatch
+# ProtocolError lives in the leaf module repro.core.wire (the registry's
+# codecs raise it too); re-exported here where it historically lived.
+from repro.core.wire import ProtocolError, decode_binary, encode_binary
 
-#: Protocol version sent in ``hello``; a mismatch is refused with an
-#: ``error`` frame (code ``proto-mismatch``) and the connection is closed.
-PROTOCOL_VERSION = 1
+#: Highest protocol version this build speaks.  ``hello`` negotiates: the
+#: client sends ``proto`` (its floor, 1 for compatibility) and
+#: ``max_proto``; the server answers with the highest version both sides
+#: support.  A ``proto`` outside the server's supported range is refused
+#: with an ``error`` frame (code ``proto-mismatch``).
+PROTOCOL_VERSION = 2
 
-#: Default ceiling on one frame's JSON body.  A header announcing more is
-#: rejected (code ``frame-too-large``) without allocating the buffer.
+#: Lowest protocol version still served (v1 = JSON-only wire).
+MIN_PROTOCOL_VERSION = 1
+
+#: Default ceiling on one frame's body (JSON or binary chunk).  A header
+#: announcing more is rejected (code ``frame-too-large``) without
+#: allocating the buffer.
 MAX_FRAME_BYTES = 64 * 1024 * 1024
 
+#: Top bit of the length prefix marks a **binary chunk frame** (raw
+#: bytes, no JSON).  Frame bodies are capped far below 2^31, so the bit
+#: is unambiguous.
+CHUNK_FLAG = 0x80000000
+
+#: Default ceiling on one chunked message's total binary payload
+#: (checked against the header's ``blob_bytes`` BEFORE any chunk is
+#: read, code ``blob-too-large``).
+MAX_BLOB_BYTES = 1 << 30
+
+#: Ceiling on the chunk count one header may announce.
+MAX_BLOB_CHUNKS = 1 << 16
+
+#: Default size a sender slices binary payloads into — large statics
+#: stream in bounded frames instead of materializing as one.
+DEFAULT_CHUNK_BYTES = 1 << 20
+
 _HEADER = struct.Struct(">I")
-
-
-class ProtocolError(Exception):
-    """A malformed, oversized, truncated, or out-of-protocol frame.
-
-    ``code`` is the machine-readable error code that goes on the wire in
-    an ``error`` frame (see docs/PROTOCOL.md §error)."""
-
-    def __init__(self, code: str, message: str):
-        super().__init__(f"{code}: {message}")
-        self.code = code
-        self.message = message
 
 
 # ---------------------------------------------------------------------------
@@ -95,22 +124,63 @@ def encode_frame(msg: dict) -> bytes:
     return _HEADER.pack(len(body)) + body
 
 
+def encode_chunk(part: bytes) -> bytes:
+    """Serialise one binary chunk frame: length prefix with the top bit
+    set, then the raw bytes (protocol v2)."""
+    if len(part) > MAX_FRAME_BYTES:
+        raise ProtocolError("frame-too-large",
+                            f"chunk is {len(part)} bytes "
+                            f"(max {MAX_FRAME_BYTES})")
+    return _HEADER.pack(CHUNK_FLAG | len(part)) + part
+
+
+def build_blob_frames(msg: dict, buffer: bytes, *,
+                      chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+                      max_frame_bytes: int = MAX_FRAME_BYTES) -> list[bytes]:
+    """Frames for one logical message with a binary payload: the JSON
+    header (annotated with ``chunks``/``blob_bytes``) followed by the
+    payload sliced into chunk frames of ``chunk_bytes``.  An empty buffer
+    yields just the plain header frame.  The sender must write the list
+    contiguously (no interleaved pushes) — both sides here do so under
+    their write lock / sequential request loop."""
+    if not buffer:
+        return [encode_frame(msg)]
+    size = max(1, min(chunk_bytes, max_frame_bytes))
+    n_chunks = -(-len(buffer) // size)
+    if n_chunks > MAX_BLOB_CHUNKS:             # huge blob: fewer, larger
+        size = -(-len(buffer) // MAX_BLOB_CHUNKS)
+        n_chunks = -(-len(buffer) // size)
+    frames = [encode_frame({**msg, "chunks": n_chunks,
+                            "blob_bytes": len(buffer)})]
+    for i in range(0, len(buffer), size):
+        frames.append(encode_chunk(buffer[i:i + size]))
+    return frames
+
+
 async def read_frame_ex(reader: asyncio.StreamReader, *,
-                        max_bytes: int = MAX_FRAME_BYTES
-                        ) -> tuple[Optional[dict], int]:
+                        max_bytes: int = MAX_FRAME_BYTES,
+                        allow_chunk: bool = False
+                        ) -> tuple[Any, int]:
     """Read one frame; returns ``(message, wire_bytes)``.
 
-    ``(None, 0)`` means clean EOF at a frame boundary (peer closed).
-    Raises :class:`ProtocolError` for a truncated frame (EOF mid-frame),
-    an oversized length header, a non-JSON body, or a body that is not an
-    object with a string ``type`` — the reader never hangs on garbage."""
+    ``(None, 0)`` means clean EOF at a frame boundary (peer closed).  A
+    JSON frame decodes to a dict; a binary chunk frame (v2, top length
+    bit set) returns raw ``bytes`` — but only where the caller expects
+    one (``allow_chunk=True``, i.e. inside a chunked message), otherwise
+    it is a protocol error (code ``unexpected-chunk``).  Raises
+    :class:`ProtocolError` for a truncated frame (EOF mid-frame), an
+    oversized length header, a non-JSON body, or a body that is not an
+    object with a string ``type`` — the reader never hangs on garbage,
+    and never allocates more than ``max_bytes``."""
     try:
         header = await reader.readexactly(_HEADER.size)
     except asyncio.IncompleteReadError as e:
         if not e.partial:
             return None, 0
         raise ProtocolError("truncated-frame", "EOF inside frame header")
-    (length,) = _HEADER.unpack(header)
+    (raw,) = _HEADER.unpack(header)
+    is_chunk = bool(raw & CHUNK_FLAG)
+    length = raw & (CHUNK_FLAG - 1)
     if length > max_bytes:
         raise ProtocolError("frame-too-large",
                             f"frame announces {length} bytes "
@@ -119,6 +189,12 @@ async def read_frame_ex(reader: asyncio.StreamReader, *,
         body = await reader.readexactly(length)
     except asyncio.IncompleteReadError:
         raise ProtocolError("truncated-frame", "EOF inside frame body")
+    if is_chunk:
+        if not allow_chunk:
+            raise ProtocolError("unexpected-chunk",
+                                "binary chunk frame outside a chunked "
+                                "message")
+        return bytes(body), _HEADER.size + length
     try:
         msg = json.loads(body.decode("utf-8"))
     except (UnicodeDecodeError, ValueError):
@@ -131,9 +207,71 @@ async def read_frame_ex(reader: asyncio.StreamReader, *,
 
 async def read_frame(reader: asyncio.StreamReader, *,
                      max_bytes: int = MAX_FRAME_BYTES) -> Optional[dict]:
-    """:func:`read_frame_ex` without the byte count."""
+    """:func:`read_frame_ex` without the byte count (JSON frames only)."""
     msg, _ = await read_frame_ex(reader, max_bytes=max_bytes)
     return msg
+
+
+async def read_message(reader: asyncio.StreamReader, *,
+                       max_bytes: int = MAX_FRAME_BYTES,
+                       max_blob_bytes: int = MAX_BLOB_BYTES,
+                       allow_chunks: bool = True
+                       ) -> tuple[Optional[dict], int]:
+    """Read one **logical** message: a JSON frame, plus — when its header
+    announces ``chunks``/``blob_bytes`` (protocol v2) — exactly that many
+    binary chunk frames, reassembled into ``msg["_blob"]``.
+
+    The chunk state machine is strict (docs/PROTOCOL.md §Chunked
+    messages): the declared total is validated against ``max_blob_bytes``
+    *before* the first chunk is read (code ``blob-too-large``), chunk
+    count and sizes must match the declaration exactly (code
+    ``bad-blob``), a JSON frame where a chunk is due is
+    ``chunk-mismatch``, and EOF mid-blob is ``truncated-frame``.  Memory
+    is bounded by ``max_blob_bytes`` + one frame."""
+    msg, n = await read_frame_ex(reader, max_bytes=max_bytes)
+    if msg is None or ("chunks" not in msg and "blob_bytes" not in msg):
+        return msg, n
+    if not allow_chunks:
+        raise ProtocolError("bad-blob",
+                            "chunked message on a v1 connection")
+    n_chunks = msg.get("chunks")
+    total = msg.get("blob_bytes")
+    if (not isinstance(n_chunks, int) or isinstance(n_chunks, bool)
+            or not isinstance(total, int) or isinstance(total, bool)
+            or n_chunks < 1 or n_chunks > MAX_BLOB_CHUNKS or total < 0):
+        raise ProtocolError("bad-blob",
+                            f"bad chunk declaration: chunks={n_chunks!r} "
+                            f"blob_bytes={total!r}")
+    if total > max_blob_bytes:
+        raise ProtocolError("blob-too-large",
+                            f"blob announces {total} bytes "
+                            f"(max {max_blob_bytes})")
+    parts: list[bytes] = []
+    received = 0
+    for _ in range(n_chunks):
+        chunk, cn = await read_frame_ex(reader, max_bytes=max_bytes,
+                                        allow_chunk=True)
+        if chunk is None:
+            raise ProtocolError("truncated-frame",
+                                "EOF inside a chunked message")
+        if not isinstance(chunk, bytes):
+            raise ProtocolError("chunk-mismatch",
+                                "JSON frame arrived where a binary chunk "
+                                "was expected")
+        received += len(chunk)
+        n += cn
+        if received > total:
+            raise ProtocolError("bad-blob",
+                                f"chunks carry more than the declared "
+                                f"{total} bytes")
+        parts.append(chunk)
+    if received != total:
+        raise ProtocolError("bad-blob",
+                            f"chunks carry {received} bytes, header "
+                            f"declared {total}")
+    out = dict(msg)
+    out["_blob"] = b"".join(parts)
+    return out, n
 
 
 def encode_payload(obj: Any) -> str:
@@ -150,16 +288,39 @@ def decode_payload(s: str) -> Any:
 
 def _fetch_reply(kind: str, seq, got: Fetched) -> dict:
     """Wire reply for a versioned fetch: ``not_modified`` is metadata only,
-    otherwise the payload rides in a ``task_data``/``static_data`` frame."""
+    otherwise the payload rides in a ``task_data``/``static_data`` frame
+    (v1 JSON form: pickled-base64 ``payload``)."""
     if got.not_modified:
         return {"type": "not_modified", "seq": seq, "version": got.version}
     return {"type": kind, "seq": seq, **got.to_wire(encode_payload)}
 
 
+def _fetch_reply_bin(kind: str, seq, got: Fetched) -> tuple[dict, bytes]:
+    """Protocol v2 wire reply for a versioned fetch with a payload: the
+    JSON header plus the binary buffer (``encoding: "bin"``); array data
+    travels raw, described by the ``manifest``.  A delta reply (changed
+    leaves only) additionally carries ``delta_base``."""
+    manifest, buffer = encode_binary(got.value)
+    header = {"type": kind, "seq": seq, "version": got.version,
+              "not_modified": False, "current": got.current,
+              "encoding": "bin", "manifest": manifest}
+    if got.delta_base is not None:
+        header["delta_base"] = got.delta_base
+    return header, buffer
+
+
 def _decode_fetch(reply: dict) -> Fetched:
-    """Client-side inverse of :func:`_fetch_reply`."""
+    """Client-side inverse of :func:`_fetch_reply` /
+    :func:`_fetch_reply_bin` (the binary buffer rides in
+    ``reply["_blob"]``, attached by :func:`read_message`)."""
     if reply["type"] == "not_modified":
         return Fetched(None, reply["version"], not_modified=True)
+    if reply.get("encoding") == "bin":
+        value = decode_binary(reply.get("manifest"),
+                              reply.get("_blob", b""))
+        return Fetched(value, reply["version"],
+                       current=reply.get("current", True),
+                       delta_base=reply.get("delta_base"))
     return Fetched.from_wire(reply, decode_payload)
 
 
@@ -182,6 +343,7 @@ class _Connection:
         self.client = "?"
         self.leases: dict[int, LeaseBatch] = {}
         self.ready = False                 # hello completed
+        self.proto = MIN_PROTOCOL_VERSION  # negotiated at hello time
         self._wlock = asyncio.Lock()
 
     async def send(self, msg: dict):
@@ -192,6 +354,22 @@ class _Connection:
             await self.writer.drain()
         self.server.frames_out += 1
         self.server.bytes_out += len(frame)
+
+    async def send_blob(self, msg: dict, buffer: bytes):
+        """Write one chunked message (header + binary chunk frames) under
+        the write lock, so a pushed ``invalidate`` can never interleave
+        mid-blob."""
+        frames = build_blob_frames(msg, buffer,
+                                   chunk_bytes=self.server.chunk_bytes,
+                                   max_frame_bytes=self.server
+                                   .max_frame_bytes)
+        async with self._wlock:
+            for frame in frames:
+                self.writer.write(frame)
+            await self.writer.drain()
+        self.server.frames_out += len(frames)
+        self.server.chunks_out += len(frames) - 1
+        self.server.bytes_out += sum(len(f) for f in frames)
 
     async def send_error(self, seq, err: ProtocolError):
         """Best-effort ``error`` frame (swallowed if the peer is gone)."""
@@ -230,16 +408,26 @@ class TransportServer:
     """
 
     def __init__(self, distributor, *, host: str = "127.0.0.1",
-                 port: int = 0, max_frame_bytes: int = MAX_FRAME_BYTES):
+                 port: int = 0, max_frame_bytes: int = MAX_FRAME_BYTES,
+                 max_proto: int = PROTOCOL_VERSION,
+                 chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+                 max_blob_bytes: int = MAX_BLOB_BYTES):
         self.distributor = distributor
         self.host = host
         self.port = port
         self.max_frame_bytes = max_frame_bytes
+        #: highest protocol version this server negotiates; set to 1 to
+        #: behave exactly like a pre-v2 (JSON-only) server
+        self.max_proto = max_proto
+        self.chunk_bytes = chunk_bytes
+        self.max_blob_bytes = max_blob_bytes
         self.address: Optional[tuple[str, int]] = None
         self.frames_in = 0
         self.frames_out = 0
         self.bytes_in = 0
         self.bytes_out = 0
+        self.chunks_in = 0
+        self.chunks_out = 0
         self.protocol_errors = 0
         self._server: Optional[asyncio.AbstractServer] = None
         self._loop: Optional[asyncio.AbstractEventLoop] = None
@@ -311,6 +499,7 @@ class TransportServer:
         return {"connections": len(self._conns),
                 "frames_in": self.frames_in, "frames_out": self.frames_out,
                 "bytes_in": self.bytes_in, "bytes_out": self.bytes_out,
+                "chunks_in": self.chunks_in, "chunks_out": self.chunks_out,
                 "protocol_errors": self.protocol_errors}
 
     # -- invalidation push ----------------------------------------------------
@@ -379,13 +568,23 @@ class TransportServer:
             await conn.send_error(seq, ProtocolError(
                 "bad-handshake", "first frame must be 'hello'"))
             return
-        if msg.get("proto") != PROTOCOL_VERSION:
+        # negotiation: ``proto`` is the client's floor (1 for old
+        # clients), ``max_proto`` its ceiling (defaults to the floor, so
+        # a plain v1 hello negotiates v1); the connection speaks the
+        # highest version inside both sides' ranges
+        proto = msg.get("proto")
+        if (not isinstance(proto, int) or isinstance(proto, bool)
+                or not (MIN_PROTOCOL_VERSION <= proto <= self.max_proto)):
             self.protocol_errors += 1
             await conn.send_error(seq, ProtocolError(
                 "proto-mismatch",
-                f"server speaks proto {PROTOCOL_VERSION}, "
-                f"client sent {msg.get('proto')!r}"))
+                f"server speaks protos {MIN_PROTOCOL_VERSION}.."
+                f"{self.max_proto}, client sent {proto!r}"))
             return
+        client_max = msg.get("max_proto", proto)
+        if not isinstance(client_max, int) or isinstance(client_max, bool):
+            client_max = proto
+        conn.proto = min(self.max_proto, max(proto, client_max))
         conn.client = str(msg.get("client", "remote"))
         try:
             conn.endpoint = self._pick_endpoint(self._conns)
@@ -398,14 +597,16 @@ class TransportServer:
         conn.endpoint.ensure_watchdog()    # re-arm after a drained round
         conn.ready = True
         await conn.send({"type": "hello_ok", "seq": seq,
-                         "proto": PROTOCOL_VERSION,
+                         "proto": conn.proto,
                          "project": conn.endpoint.project_name,
                          "member": getattr(conn.endpoint, "index", None)})
         # -- request loop: sequential request/response per connection ----
         while True:
             try:
-                msg, n = await read_frame_ex(conn.reader,
-                                             max_bytes=self.max_frame_bytes)
+                msg, n = await read_message(
+                    conn.reader, max_bytes=self.max_frame_bytes,
+                    max_blob_bytes=self.max_blob_bytes,
+                    allow_chunks=conn.proto >= 2)
             except ProtocolError as e:
                 # reject loudly, then close: after a framing error the
                 # stream position is unrecoverable
@@ -414,7 +615,8 @@ class TransportServer:
                 return
             if msg is None:
                 return                     # clean close
-            self.frames_in += 1
+            self.frames_in += 1 + msg.get("chunks", 0)
+            self.chunks_in += msg.get("chunks", 0)
             self.bytes_in += n
             await self._dispatch(conn, msg)
 
@@ -425,8 +627,19 @@ class TransportServer:
             if kind == "lease_request":
                 await self._handle_lease(conn, seq)
             elif kind == "submit":
-                results = {int(tid): decode_payload(payload)
-                           for tid, payload in msg["results"].items()}
+                if msg.get("encoding") == "bin":
+                    # v2: one binary blob for the whole result dict —
+                    # gradient arrays go up raw, no pickle+base64
+                    decoded = decode_binary(msg.get("manifest"),
+                                            msg.get("_blob", b""))
+                    if not isinstance(decoded, dict):
+                        raise ProtocolError(
+                            "bad-manifest",
+                            "binary submit must decode to a dict")
+                    results = {int(tid): r for tid, r in decoded.items()}
+                else:
+                    results = {int(tid): decode_payload(payload)
+                               for tid, payload in msg["results"].items()}
                 batch = conn.leases.pop(msg["lease_id"], None)
                 if batch is not None:
                     accepted = await conn.endpoint.submit_batch(batch,
@@ -447,9 +660,17 @@ class TransportServer:
                     msg["name"], if_version=msg.get("if_version"))
                 await conn.send(_fetch_reply("task_data", seq, got))
             elif kind == "fetch_static":
+                want_delta = bool(msg.get("delta")) and conn.proto >= 2
                 got = conn.endpoint.serve_static_versioned(
-                    msg["key"], if_version=msg.get("if_version"))
-                await conn.send(_fetch_reply("static_data", seq, got))
+                    msg["key"], if_version=msg.get("if_version"),
+                    delta=want_delta)
+                if conn.proto >= 2 and not got.not_modified:
+                    # v2: full payloads AND deltas go binary + chunked
+                    header, buffer = _fetch_reply_bin("static_data", seq,
+                                                      got)
+                    await conn.send_blob(header, buffer)
+                else:
+                    await conn.send(_fetch_reply("static_data", seq, got))
             elif kind == "error_report":
                 conn.endpoint.queue.report_error(
                     int(msg["ticket_id"]), str(msg.get("error", "")),
@@ -535,7 +756,10 @@ class RemoteBrowserClient(BrowserNodeBase):
 
     def __init__(self, host: str, port: int, profile: ClientProfile, *,
                  max_reconnects: int = 8, reconnect_delay: float = 0.05,
-                 max_frame_bytes: int = MAX_FRAME_BYTES):
+                 max_frame_bytes: int = MAX_FRAME_BYTES,
+                 max_proto: int = PROTOCOL_VERSION,
+                 chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+                 max_blob_bytes: int = MAX_BLOB_BYTES):
         # cache/counters/failure-RNG come from the shared browser base;
         # there is no distributor object on this side of the wire
         self._init_browser(None, profile)
@@ -544,9 +768,16 @@ class RemoteBrowserClient(BrowserNodeBase):
         self.max_reconnects = max_reconnects
         self.reconnect_delay = reconnect_delay
         self.max_frame_bytes = max_frame_bytes
+        #: highest protocol version this client offers in ``hello``; set
+        #: to 1 to behave exactly like a pre-v2 (JSON-only) client
+        self.max_proto = max_proto
+        self.chunk_bytes = chunk_bytes
+        self.max_blob_bytes = max_blob_bytes
+        self.proto = MIN_PROTOCOL_VERSION  # negotiated at hello time
         self.push_invalidations = 0        # server pushes that hit our cache
         self.reconnects = 0
         self.leases_taken = 0
+        self.deltas_applied = 0            # v2 delta fetches spliced in
         self.bytes_in = 0
         self.bytes_out = 0
         self.member: Optional[int] = None  # endpoint index from hello_ok
@@ -556,7 +787,8 @@ class RemoteBrowserClient(BrowserNodeBase):
         self._writer: Optional[asyncio.StreamWriter] = None
         self._stopping = False
         # finished-but-unsubmitted results, parked for reconnect-resume:
-        # (lease_id, {str(ticket_id): payload}) or None
+        # (lease_id, {str(ticket_id): raw result}) or None — encoded per
+        # the negotiated protocol only at submit time
         self._pending: Optional[tuple[int, dict]] = None
 
     # -- wire plumbing --------------------------------------------------------
@@ -564,9 +796,19 @@ class RemoteBrowserClient(BrowserNodeBase):
     async def _connect(self):
         self._reader, self._writer = await asyncio.open_connection(
             self.host, self.port)
+        # floor 1 so a v1 server accepts the hello as-is; ``max_proto``
+        # advertises how high we can negotiate
         reply = await self._request({"type": "hello",
                                      "client": self.profile.name,
-                                     "proto": PROTOCOL_VERSION})
+                                     "proto": MIN_PROTOCOL_VERSION,
+                                     "max_proto": self.max_proto})
+        proto = reply.get("proto", MIN_PROTOCOL_VERSION)
+        if (not isinstance(proto, int) or isinstance(proto, bool)
+                or not (MIN_PROTOCOL_VERSION <= proto <= self.max_proto)):
+            raise ProtocolError(
+                "proto-mismatch",
+                f"server negotiated unsupported proto {proto!r}")
+        self.proto = proto
         self.member = reply.get("member")
 
     def _disconnect(self):
@@ -577,22 +819,31 @@ class RemoteBrowserClient(BrowserNodeBase):
                 pass
         self._reader = self._writer = None
 
-    async def _request(self, msg: dict) -> dict:
+    async def _request(self, msg: dict, blob: Optional[bytes] = None
+                       ) -> dict:
         """One framed round-trip: send ``msg`` (stamped with a fresh seq),
-        return the reply bearing that seq.  Pushed ``invalidate`` frames
-        arriving in between are applied inline; an ``error`` reply raises
-        :class:`ProtocolError`; a closed stream raises ConnectionError
-        (the run loop's reconnect trigger)."""
+        return the reply bearing that seq.  A ``blob`` (v2 binary
+        payload) is sent as header + chunk frames.  Pushed ``invalidate``
+        frames arriving in between are applied inline; an ``error`` reply
+        raises :class:`ProtocolError`; a closed stream raises
+        ConnectionError (the run loop's reconnect trigger).  Chunked
+        replies are reassembled by :func:`read_message` into
+        ``reply["_blob"]``."""
         if self._writer is None:
             raise ConnectionResetError("not connected")
         seq = next(self._seq)
-        frame = encode_frame({**msg, "seq": seq})
-        self._writer.write(frame)
+        frames = build_blob_frames({**msg, "seq": seq}, blob or b"",
+                                   chunk_bytes=self.chunk_bytes,
+                                   max_frame_bytes=self.max_frame_bytes)
+        for frame in frames:
+            self._writer.write(frame)
         await self._writer.drain()
-        self.bytes_out += len(frame)
+        self.bytes_out += sum(len(f) for f in frames)
         while True:
-            reply, n = await read_frame_ex(self._reader,
-                                           max_bytes=self.max_frame_bytes)
+            reply, n = await read_message(self._reader,
+                                          max_bytes=self.max_frame_bytes,
+                                          max_blob_bytes=self
+                                          .max_blob_bytes)
             if reply is None:
                 raise ConnectionResetError("server closed the connection")
             self.bytes_in += n
@@ -611,12 +862,24 @@ class RemoteBrowserClient(BrowserNodeBase):
             return reply
 
     def _apply_invalidate(self, msg: dict):
-        """Server push: a registry key was re-published — drop our copy.
-        Correctness never depends on this (ticket pins force
-        revalidation); the push just stops us re-validating a copy the
-        origin already knows is stale."""
-        if self.cache.pop(str(msg.get("key"))) is not None:
-            self.push_invalidations += 1
+        """Server push: a registry key was re-published.  Correctness
+        never depends on this (ticket pins force revalidation); the push
+        just stops us re-validating a copy the origin already knows is
+        stale.
+
+        v1 drops the copy outright.  v2 keeps the stale payload but
+        voids its validation mark (``validated = -1`` fails every pin,
+        including 0), so the next use revalidates conditionally — and the
+        kept copy is exactly the **delta base** that lets the server ship
+        only the changed leaves instead of a full payload."""
+        key = str(msg.get("key"))
+        entry = self.cache.pop(key)
+        if entry is None:
+            return
+        self.push_invalidations += 1
+        if self.proto >= 2:
+            entry.validated = -1
+            self.cache.put(key, entry)
 
     # -- version-aware cache (async mirror of BrowserNodeBase) ---------------
 
@@ -637,6 +900,8 @@ class RemoteBrowserClient(BrowserNodeBase):
                                                           min_version)
         if refetch:
             new = merge_unconditional_fetch(await fetch(None), min_version)
+        elif got.delta_base is not None:
+            self.deltas_applied += 1       # changed leaves spliced in
         if revalidated:
             self.revalidations += 1
         self.cache.put(cache_key, new)
@@ -651,12 +916,18 @@ class RemoteBrowserClient(BrowserNodeBase):
         return await self._aget_versioned(f"task:{name}", fetch, min_version)
 
     async def _get_static(self, task: TaskDef, min_version: int) -> dict:
-        """The task's statics through the cache, same revalidation rule."""
+        """The task's statics through the cache, same revalidation rule.
+        On a v2 connection a conditional fetch also asks for a **delta**
+        (changed leaves relative to our cached version); the shared merge
+        helper splices it in, or falls back to a full refetch when the
+        base no longer matches."""
         out = {}
         for key in task.static_files:
             async def fetch(v, k=key):
-                return _decode_fetch(await self._request(
-                    {"type": "fetch_static", "key": k, "if_version": v}))
+                req = {"type": "fetch_static", "key": k, "if_version": v}
+                if v is not None and self.proto >= 2:
+                    req["delta"] = True
+                return _decode_fetch(await self._request(req))
             out[key] = await self._aget_versioned(f"static:{key}", fetch,
                                                   min_version)
         return out
@@ -678,9 +949,7 @@ class RemoteBrowserClient(BrowserNodeBase):
                         # resume: re-submit results finished before the
                         # drop under their old lease id (dupes are fine)
                         lease_id, results = self._pending
-                        await self._request({"type": "submit",
-                                             "lease_id": lease_id,
-                                             "results": results})
+                        await self._submit_results(lease_id, results)
                         self._pending = None
                     if not await self._one_lease():
                         break
@@ -701,6 +970,22 @@ class RemoteBrowserClient(BrowserNodeBase):
         finally:
             self.done = True
             self._disconnect()
+
+    async def _submit_results(self, lease_id: int, results: dict) -> dict:
+        """Submit a lease's results: v2 sends the whole dict as one
+        binary blob (raw array buffers, no pickle+base64); v1 sends the
+        per-ticket pickled-base64 form.  ``results`` maps str(ticket_id)
+        to the RAW result object either way, so a reconnect that
+        renegotiates the protocol re-encodes correctly on resume."""
+        if self.proto >= 2:
+            manifest, buffer = encode_binary(results)
+            return await self._request(
+                {"type": "submit", "lease_id": lease_id,
+                 "encoding": "bin", "manifest": manifest}, blob=buffer)
+        return await self._request(
+            {"type": "submit", "lease_id": lease_id,
+             "results": {tid: encode_payload(r)
+                         for tid, r in results.items()}})
 
     async def _one_lease(self) -> bool:
         """One lease round; returns False when the server says the work is
@@ -725,7 +1010,7 @@ class RemoteBrowserClient(BrowserNodeBase):
                                  "client_failed": True})
             self._stopping = True
             return False
-        results: dict[str, str] = {}       # wire form: str(tid) -> payload
+        results: dict[str, Any] = {}       # str(tid) -> raw result object
         failed = False
         for ticket in batch.tickets:
             try:
@@ -738,8 +1023,8 @@ class RemoteBrowserClient(BrowserNodeBase):
                                        f"{ticket.task_name}")
                 if self.profile.speed > 0:
                     await asyncio.sleep(ticket.work / self.profile.speed)
-                results[str(ticket.ticket_id)] = encode_payload(
-                    task.run(ticket.args, static))
+                results[str(ticket.ticket_id)] = task.run(ticket.args,
+                                                          static)
                 self.executed += 1
             except (ConnectionError, asyncio.IncompleteReadError, OSError,
                     ProtocolError):
@@ -760,8 +1045,7 @@ class RemoteBrowserClient(BrowserNodeBase):
                 self._reload()             # paper: reload browser
                 failed = True
         self._pending = (batch.lease_id, results)
-        await self._request({"type": "submit", "lease_id": batch.lease_id,
-                             "results": results})
+        await self._submit_results(batch.lease_id, results)
         self._pending = None
         if failed:
             # drop the lease bookkeeping for the errored tickets but keep

@@ -1,0 +1,361 @@
+"""Wire-level codecs shared by the transport and the registry (protocol v2).
+
+This module is a *leaf*: it imports nothing from :mod:`repro`, so both
+:mod:`repro.core.transport` (the framing layer) and
+:mod:`repro.core.distributor` (the versioned registry) can use it without
+creating an import cycle.  It provides the three building blocks of wire
+protocol v2 (see ``docs/PROTOCOL.md``):
+
+* :class:`ProtocolError` — the one exception type every decoder raises.
+  Historically defined in ``transport.py``; it lives here now and is
+  re-exported there for compatibility.
+* The **binary payload codec** (:func:`encode_binary` /
+  :func:`decode_binary`): splits an arbitrary pytree into (a) a compact
+  JSON-safe *manifest* describing each array leaf (dtype, shape, nbytes)
+  plus a pickled skeleton for the non-array residue, and (b) one
+  contiguous byte buffer holding the raw array data.  Array payloads
+  cross the wire with zero pickle framing and zero base64 expansion.
+* The **delta helpers** (:func:`flatten_tree`, :func:`leaf_equal`,
+  :func:`apply_delta`): path-addressed leaf flattening used by the
+  registry to stamp per-leaf versions and by clients to splice a
+  changed-leaves delta into their cached full payload.
+
+Decoding is adversarial-input territory (anonymous browsers connect to
+the distributor), so every validation failure raises
+:class:`ProtocolError` with a documented code and decoding never
+allocates based on unchecked size fields: array extents are checked
+against the actual buffer length before any array is materialized.
+"""
+from __future__ import annotations
+
+import base64
+import dataclasses
+import pickle
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+try:  # registers the "bfloat16" (etc.) dtype names with numpy
+    import ml_dtypes  # noqa: F401
+except ImportError:  # pragma: no cover - present wherever jax is
+    ml_dtypes = None
+
+__all__ = [
+    "ProtocolError", "DeltaApplyError",
+    "encode_binary", "decode_binary",
+    "flatten_tree", "leaf_equal", "apply_delta",
+]
+
+#: hard ceiling on manifest array count (a manifest is decoded before its
+#: buffer, so the count must be bounded independently of the data).
+MAX_MANIFEST_ARRAYS = 1 << 16
+#: hard ceiling on array rank accepted from the wire.
+MAX_MANIFEST_NDIM = 32
+
+
+class ProtocolError(Exception):
+    """A wire-protocol violation.  ``code`` is a short machine-readable
+    string from the table in docs/PROTOCOL.md; ``message`` is free text."""
+
+    def __init__(self, code: str, message: str):
+        super().__init__(f"{code}: {message}")
+        self.code = code
+        self.message = message
+
+
+class DeltaApplyError(Exception):
+    """A delta payload does not fit the base tree it claims to patch.
+
+    Raised by :func:`apply_delta`; clients treat it as a cache miss and
+    refetch the full payload rather than failing the fetch."""
+
+
+# --------------------------------------------------------------------------
+# binary payload codec
+# --------------------------------------------------------------------------
+
+
+class _ArrayRef:
+    """Placeholder left in the pickled skeleton where an array leaf was
+    extracted; ``index`` points into the manifest's array table."""
+
+    __slots__ = ("index",)
+
+    def __init__(self, index: int):
+        self.index = index
+
+    def __reduce__(self):
+        return (_ArrayRef, (self.index,))
+
+
+def _is_array_leaf(x: Any) -> bool:
+    """True for numpy/jax array objects (not scalars, not lists)."""
+    if isinstance(x, np.ndarray):
+        return True
+    if isinstance(x, np.generic):  # 0-d numpy scalar: pickle round-trips type
+        return False
+    return (hasattr(x, "__array__") and hasattr(x, "dtype")
+            and hasattr(x, "shape") and hasattr(x, "ndim"))
+
+
+def encode_binary(obj: Any) -> Tuple[Dict[str, Any], bytes]:
+    """Split ``obj`` into a JSON-safe manifest and a raw byte buffer.
+
+    Array leaves (numpy or jax, any dtype including bfloat16) are pulled
+    out into ``buffer`` back-to-back in C order; everything else is
+    pickled with :class:`_ArrayRef` placeholders and carried base64 in
+    ``manifest["rest"]``.  ``decode_binary(manifest, buffer)`` inverts
+    this bit-exactly."""
+    arrays: List[np.ndarray] = []
+
+    def extract(x):
+        if _is_array_leaf(x):
+            a = np.asarray(x)
+            # ascontiguousarray alone would promote 0-d to (1,)
+            arrays.append(np.ascontiguousarray(a).reshape(a.shape))
+            return _ArrayRef(len(arrays) - 1)
+        if isinstance(x, dict):
+            return {k: extract(v) for k, v in x.items()}
+        if isinstance(x, list):
+            return [extract(v) for v in x]
+        if isinstance(x, tuple):
+            return tuple(extract(v) for v in x)
+        if dataclasses.is_dataclass(x) and not isinstance(x, type):
+            try:
+                fields = {f.name: extract(getattr(x, f.name))
+                          for f in dataclasses.fields(x) if f.init}
+                return dataclasses.replace(x, **fields)
+            except TypeError:
+                return x  # exotic dataclass: fall back to whole-object pickle
+        return x
+
+    skeleton = extract(obj)
+    manifest = {
+        "arrays": [{"dtype": a.dtype.name, "shape": list(a.shape),
+                    "nbytes": int(a.nbytes)} for a in arrays],
+        "rest": base64.b64encode(
+            pickle.dumps(skeleton, protocol=pickle.HIGHEST_PROTOCOL)
+        ).decode("ascii"),
+    }
+    return manifest, b"".join(a.tobytes() for a in arrays)
+
+
+def _resolve_dtype(name: Any) -> np.dtype:
+    if not isinstance(name, str):
+        raise ProtocolError("bad-manifest", f"dtype must be a string, "
+                            f"got {type(name).__name__}")
+    try:
+        dt = np.dtype(name)
+    except TypeError:
+        dt = None
+    if dt is None and ml_dtypes is not None:
+        scalar = getattr(ml_dtypes, name, None)
+        if scalar is not None:
+            try:
+                dt = np.dtype(scalar)
+            except TypeError:
+                dt = None
+    if dt is None:
+        raise ProtocolError("bad-manifest", f"unknown dtype {name!r}")
+    if dt.hasobject:
+        raise ProtocolError("bad-manifest",
+                            f"object dtype {name!r} not allowed on the wire")
+    return dt
+
+
+def decode_binary(manifest: Any, buffer: bytes) -> Any:
+    """Inverse of :func:`encode_binary`; validates everything.
+
+    Every malformed-manifest condition (wrong types, unknown or object
+    dtype, shape/nbytes mismatch, extents past the end of ``buffer``,
+    dangling array references, un-unpicklable skeleton) raises
+    ``ProtocolError("bad-manifest")``.  No array is allocated before its
+    extent has been checked against ``len(buffer)``."""
+    if not isinstance(manifest, dict):
+        raise ProtocolError("bad-manifest", "manifest must be an object")
+    entries = manifest.get("arrays")
+    rest = manifest.get("rest")
+    if not isinstance(entries, list) or not isinstance(rest, str):
+        raise ProtocolError("bad-manifest",
+                            "manifest needs 'arrays' list and 'rest' string")
+    if len(entries) > MAX_MANIFEST_ARRAYS:
+        raise ProtocolError("bad-manifest",
+                            f"{len(entries)} arrays exceeds cap "
+                            f"{MAX_MANIFEST_ARRAYS}")
+    arrays: List[np.ndarray] = []
+    offset = 0
+    for i, entry in enumerate(entries):
+        if not isinstance(entry, dict):
+            raise ProtocolError("bad-manifest", f"array {i}: not an object")
+        dt = _resolve_dtype(entry.get("dtype"))
+        shape = entry.get("shape")
+        nbytes = entry.get("nbytes")
+        if (not isinstance(shape, list) or len(shape) > MAX_MANIFEST_NDIM
+                or not all(isinstance(s, int) and not isinstance(s, bool)
+                           and s >= 0 for s in shape)):
+            raise ProtocolError("bad-manifest", f"array {i}: bad shape "
+                                f"{shape!r}")
+        count = 1
+        for s in shape:
+            count *= s
+        if (not isinstance(nbytes, int) or isinstance(nbytes, bool)
+                or nbytes != count * dt.itemsize):
+            raise ProtocolError("bad-manifest",
+                                f"array {i}: nbytes {nbytes!r} != "
+                                f"prod(shape)*itemsize "
+                                f"({count * dt.itemsize})")
+        if offset + nbytes > len(buffer):
+            raise ProtocolError("bad-manifest",
+                                f"array {i}: extent [{offset}, "
+                                f"{offset + nbytes}) past end of "
+                                f"{len(buffer)}-byte buffer")
+        arr = np.frombuffer(buffer, dtype=dt, count=count,
+                            offset=offset).reshape(tuple(shape)).copy()
+        arrays.append(arr)
+        offset += nbytes
+    if offset != len(buffer):
+        raise ProtocolError("bad-manifest",
+                            f"{len(buffer) - offset} trailing bytes after "
+                            f"last declared array")
+    try:
+        skeleton = pickle.loads(base64.b64decode(rest, validate=True))
+    except Exception as exc:
+        raise ProtocolError("bad-manifest",
+                            f"skeleton does not unpickle: {exc}") from None
+
+    def restore(x):
+        if isinstance(x, _ArrayRef):
+            if not (0 <= x.index < len(arrays)):
+                raise ProtocolError("bad-manifest",
+                                    f"dangling array ref {x.index}")
+            return arrays[x.index]
+        if isinstance(x, dict):
+            return {k: restore(v) for k, v in x.items()}
+        if isinstance(x, list):
+            return [restore(v) for v in x]
+        if isinstance(x, tuple):
+            return tuple(restore(v) for v in x)
+        if dataclasses.is_dataclass(x) and not isinstance(x, type):
+            try:
+                fields = {f.name: restore(getattr(x, f.name))
+                          for f in dataclasses.fields(x) if f.init}
+                return dataclasses.replace(x, **fields)
+            except TypeError:
+                return x
+        return x
+
+    return restore(skeleton)
+
+
+# --------------------------------------------------------------------------
+# delta helpers: path-addressed leaf flattening
+# --------------------------------------------------------------------------
+#
+# Paths are tuples of (tag, key) steps so they survive pickling inside a
+# delta payload and never collide the way "/"-joined strings can:
+#   (0, key)   dict entry
+#   (1, i)     list element
+#   (2, i)     tuple element
+#   (3, name)  dataclass field
+
+_DICT, _LIST, _TUPLE, _FIELD = 0, 1, 2, 3
+
+
+def flatten_tree(tree: Any) -> Dict[tuple, Any]:
+    """Map each leaf of ``tree`` to its path.  Containers (dict, list,
+    tuple, dataclass) are traversed; everything else — arrays included —
+    is a leaf.  Leaves are the *same objects* as in ``tree`` (no copy)."""
+    out: Dict[tuple, Any] = {}
+
+    def walk(x, path):
+        if isinstance(x, dict):
+            for k, v in x.items():
+                walk(v, path + ((_DICT, k),))
+        elif isinstance(x, list):
+            for i, v in enumerate(x):
+                walk(v, path + ((_LIST, i),))
+        elif isinstance(x, tuple):
+            for i, v in enumerate(x):
+                walk(v, path + ((_TUPLE, i),))
+        elif dataclasses.is_dataclass(x) and not isinstance(x, type):
+            for f in dataclasses.fields(x):
+                walk(getattr(x, f.name), path + ((_FIELD, f.name),))
+        else:
+            out[path] = x
+
+    walk(tree, ())
+    return out
+
+
+def leaf_equal(a: Any, b: Any) -> bool:
+    """Bit-exact leaf equality: arrays compare dtype + shape + raw bytes,
+    scalars compare type *and* value (so ``1`` != ``1.0`` — a delta that
+    skips a leaf must leave the client holding the identical object)."""
+    a_is_arr = _is_array_leaf(a)
+    if a_is_arr != _is_array_leaf(b):
+        return False
+    if a_is_arr:
+        aa, bb = np.asarray(a), np.asarray(b)
+        if aa.dtype != bb.dtype or aa.shape != bb.shape:
+            return False
+        try:  # byte view: bit-exact (NaN == NaN) without a tobytes() copy
+            return bool(np.array_equal(aa.view(np.uint8),
+                                       bb.view(np.uint8)))
+        except (ValueError, TypeError):  # non-contiguous / 0-d views
+            return aa.tobytes() == bb.tobytes()
+    if type(a) is not type(b):
+        return False
+    try:
+        return bool(a == b)
+    except Exception:
+        return False
+
+
+def apply_delta(base: Any, changed: Dict[tuple, Any]) -> Any:
+    """Return a copy of ``base`` with each ``path -> leaf`` spliced in.
+
+    Copy-on-write: only containers on a changed path are rebuilt;
+    untouched subtrees are shared with ``base``.  Raises
+    :class:`DeltaApplyError` if a path does not exist in ``base`` with
+    the expected container types (the registry never serves a delta
+    across a structure change, so this only fires on corrupt input)."""
+    for path, leaf in changed.items():
+        base = _set_path(base, path, leaf)
+    return base
+
+
+def _set_path(node: Any, path: tuple, leaf: Any) -> Any:
+    if not path:
+        return leaf
+    (tag, key), rest = path[0], path[1:]
+    if tag == _DICT and isinstance(node, dict):
+        if key not in node:
+            raise DeltaApplyError(f"missing dict key {key!r}")
+        out = dict(node)
+        out[key] = _set_path(node[key], rest, leaf)
+        return out
+    if tag == _LIST and isinstance(node, list):
+        if not (isinstance(key, int) and 0 <= key < len(node)):
+            raise DeltaApplyError(f"list index {key!r} out of range")
+        out = list(node)
+        out[key] = _set_path(node[key], rest, leaf)
+        return out
+    if tag == _TUPLE and isinstance(node, tuple):
+        if not (isinstance(key, int) and 0 <= key < len(node)):
+            raise DeltaApplyError(f"tuple index {key!r} out of range")
+        items = list(node)
+        items[key] = _set_path(node[key], rest, leaf)
+        return tuple(items)
+    if tag == _FIELD and dataclasses.is_dataclass(node) \
+            and not isinstance(node, type):
+        names = {f.name for f in dataclasses.fields(node) if f.init}
+        if key not in names:
+            raise DeltaApplyError(f"missing dataclass field {key!r}")
+        try:
+            return dataclasses.replace(
+                node, **{key: _set_path(getattr(node, key), rest, leaf)})
+        except TypeError as exc:
+            raise DeltaApplyError(f"cannot replace field {key!r}: {exc}")
+    raise DeltaApplyError(
+        f"path step ({tag}, {key!r}) does not match node "
+        f"{type(node).__name__}")

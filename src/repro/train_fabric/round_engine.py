@@ -104,6 +104,13 @@ class RoundResult:
     work_total: float = 0.0
     duration: float = 0.0           # on the queue's (injectable) clock
     migrations: int = 0             # rebalancer moves at this boundary
+    publish_deltas: dict = field(default_factory=dict)
+    # per published static: the origin registry's delta view at publish
+    # time ({"version", "leaves", "changed", "window"}) — ``changed``
+    # counts the leaf arrays a v2 client actually downloads this round
+    # (the wire-protocol delta payload); ``leaves`` is what a v1 client
+    # or cold cache pulls.  Empty when the distributor predates the v2
+    # delta registry.
 
     @property
     def complete(self) -> bool:
@@ -205,17 +212,25 @@ class FederatedTrainer(RoundDriverLifetime):
         ``statics`` (e.g. this round's weights) are re-registered on the
         origin BEFORE the tickets are enqueued, so the tickets pin the
         new coherence version and every client revalidates before
-        executing.  Returns a :class:`RoundResult` with per-shard results
-        ordered like ``shard_args`` (None where the barrier folded a
-        straggler)."""
+        executing.  Re-registering through the v2 delta registry stamps
+        each leaf array with the version it last changed, so remote v2
+        clients revalidating against a warm cache download only the
+        changed leaves (``RoundResult.publish_deltas`` records the
+        per-key delta view).  Returns a :class:`RoundResult` with
+        per-shard results ordered like ``shard_args`` (None where the
+        barrier folded a straggler)."""
         if self._closed:
             raise RuntimeError("trainer is closed")
         n = len(shard_args)
         if shard_work is None:
             shard_work = [1.0] * n
+        publish_deltas: dict = {}
         if statics:
+            stats_fn = getattr(self.dist, "static_delta_stats", None)
             for key, value in statics.items():
                 self.dist.add_static(key, value)
+                if stats_fn is not None:
+                    publish_deltas[key] = stats_fn(key)
         t0 = self.dist.queue.clock()
         groups = self.placement(n)
         if groups is None:
@@ -286,7 +301,8 @@ class FederatedTrainer(RoundDriverLifetime):
             arrived=arrived, stragglers=stragglers, reticketed=reticketed,
             work_arrived=sum(shard_work[p] for p in arrived),
             work_total=float(sum(shard_work)),
-            duration=self.dist.queue.clock() - t0, migrations=migrations)
+            duration=self.dist.queue.clock() - t0, migrations=migrations,
+            publish_deltas=publish_deltas)
         self.rounds += 1
         self.reticketed_total += reticketed
         self.folded_total += len(stragglers)
@@ -299,7 +315,10 @@ class FederatedTrainingLoop:
     Server side (this object): holds the full
     :class:`~repro.core.split_parallel.TrainState`, publishes the current
     params each round as the versioned ``weights_key`` static (tagged
-    with the round number), aggregates the arrived shard gradients with
+    with the round number; over the v2 wire protocol a warm remote
+    client then downloads only the param leaves that changed since its
+    cached round — per-round weight deltas), aggregates the arrived
+    shard gradients with
     the work-weighted mean, applies the optimizer, and checkpoints at
     round boundaries.  Client side: the task registered under the
     trainer's ``task_name`` receives ``static[weights_key] = {"round": t,

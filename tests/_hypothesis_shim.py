@@ -11,8 +11,8 @@ seeded PRNG, so failures are reproducible run-to-run.
 Supported API (exactly what the test-suite imports):
 
   * ``given``, ``settings(max_examples=..., deadline=...)``
-  * ``strategies.integers / floats / lists / sampled_from``
-    with ``.filter`` and ``.map``
+  * ``strategies.integers / floats / lists / sampled_from / binary /
+    one_of / tuples`` with ``.filter`` and ``.map``
   * ``extra.numpy.arrays(dtype=..., shape=...)`` and ``array_shapes``
 """
 from __future__ import annotations
@@ -84,6 +84,21 @@ def booleans() -> Strategy:
 
 def just(value) -> Strategy:
     return Strategy(lambda rng: value)
+
+
+def binary(*, min_size: int = 0, max_size: int = 64) -> Strategy:
+    return Strategy(lambda rng: rng.randbytes(rng.randint(min_size,
+                                                          max_size)))
+
+
+def one_of(*strategies) -> Strategy:
+    pool = [_as_strategy(s) for s in strategies]
+    return Strategy(lambda rng: pool[rng.randrange(len(pool))].draw(rng))
+
+
+def tuples(*strategies) -> Strategy:
+    pool = [_as_strategy(s) for s in strategies]
+    return Strategy(lambda rng: tuple(s.draw(rng) for s in pool))
 
 
 # --- decorators ------------------------------------------------------------

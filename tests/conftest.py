@@ -17,7 +17,7 @@ except ImportError:
     hyp.settings = _shim.settings
     hyp.strategies = types.ModuleType("hypothesis.strategies")
     for _name in ("integers", "floats", "lists", "sampled_from", "booleans",
-                  "just"):
+                  "just", "binary", "one_of", "tuples"):
         setattr(hyp.strategies, _name, getattr(_shim, _name))
     extra = types.ModuleType("hypothesis.extra")
     extra.numpy = types.ModuleType("hypothesis.extra.numpy")

@@ -33,6 +33,25 @@ def test_protocol_doc_covers_every_wire_message_type():
         f"message types missing from docs/PROTOCOL.md: {undocumented}")
 
 
+def test_protocol_doc_covers_every_error_code():
+    """Every ProtocolError code raised anywhere in the wire stack must
+    appear (backtick-quoted) in the spec's error table — a new frame
+    type or decoder cannot ship an undocumented failure mode."""
+    spec = open(os.path.join(REPO, "docs", "PROTOCOL.md")).read()
+    raised = set()
+    for mod in ("transport.py", "wire.py", "tickets.py"):
+        src = open(os.path.join(REPO, "src", "repro", "core", mod)).read()
+        raised |= set(re.findall(r"ProtocolError\(\s*[\"']([a-z-]+)[\"']",
+                                 src))
+    assert raised, "no ProtocolError codes found in source (regex rot?)"
+    # the v2 machinery must be present, not just legacy codes
+    assert {"bad-manifest", "bad-blob", "blob-too-large",
+            "unexpected-chunk", "chunk-mismatch"} <= raised
+    undocumented = {c for c in raised if f"`{c}`" not in spec}
+    assert not undocumented, (
+        f"error codes missing from docs/PROTOCOL.md: {undocumented}")
+
+
 def test_protocol_doc_version_matches_code():
     from repro.core.transport import PROTOCOL_VERSION
     spec = open(os.path.join(REPO, "docs", "PROTOCOL.md")).read()

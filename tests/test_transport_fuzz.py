@@ -1,0 +1,344 @@
+"""Protocol fuzzing: adversarial bytes against every v2 decoder.
+
+The distributor listens for anonymous browsers, so the frame reader, the
+chunk state machine, the binary-manifest decoder and the ticket codecs
+are all adversarial-input territory.  The contract under fuzz:
+
+  * every malformed input raises :class:`ProtocolError` with a code from
+    the documented table (docs/PROTOCOL.md) — never a bare ValueError,
+    never a hang (each case runs under a hard ``asyncio.wait_for``);
+  * no decoder allocates based on an unchecked size field: oversized
+    declarations are rejected from the header alone, before any payload
+    bytes are read or buffered.
+
+Runs under real `hypothesis` (CI) or the deterministic shim.
+"""
+import asyncio
+import json
+import struct
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.tickets import LeaseBatch, Ticket
+from repro.core.transport import (CHUNK_FLAG, MAX_BLOB_CHUNKS,
+                                  ProtocolError, build_blob_frames,
+                                  encode_chunk, encode_frame, read_frame_ex,
+                                  read_message)
+from repro.core.wire import decode_binary, encode_binary
+
+#: every code a *decoder* (reader / manifest / ticket codec) may raise.
+#: Keep in sync with the error table in docs/PROTOCOL.md — the docs test
+#: checks the reverse direction (each code in the source is documented).
+DECODER_CODES = {
+    "bad-json", "bad-message", "truncated-frame", "frame-too-large",
+    "unexpected-chunk", "chunk-mismatch", "bad-blob", "blob-too-large",
+    "bad-manifest",
+}
+
+
+def _reader(*chunks: bytes) -> asyncio.StreamReader:
+    # must be constructed inside a running loop (asyncio.StreamReader
+    # binds the current event loop) — call only from within _decode
+    r = asyncio.StreamReader()
+    for c in chunks:
+        r.feed_data(c)
+    r.feed_eof()
+    return r
+
+
+def _decode(make_coro):
+    """Run ``make_coro()`` (a thunk building the reader + coroutine inside
+    the loop) under a hard deadline: garbage must produce a ProtocolError
+    (or clean EOF), never a hang or another exception."""
+    async def go():
+        return await asyncio.wait_for(make_coro(), timeout=5.0)
+    return asyncio.run(go())
+
+
+def expect_code(make_coro, codes):
+    with pytest.raises(ProtocolError) as ei:
+        _decode(make_coro)
+    assert ei.value.code in codes, ei.value
+    return ei.value.code
+
+
+# ---------------------------------------------------------------------------
+# random garbage against the frame reader
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.binary(min_size=0, max_size=200))
+def test_fuzz_read_message_never_hangs_or_leaks_exceptions(data):
+    async def go():
+        return await asyncio.wait_for(
+            read_message(_reader(data), max_bytes=1 << 16,
+                         max_blob_bytes=1 << 16), timeout=5.0)
+    try:
+        msg, n = asyncio.run(go())
+    except ProtocolError as e:
+        assert e.code in DECODER_CODES, e
+    else:
+        # random bytes that happen to parse must be a legal message
+        assert msg is None or (isinstance(msg, dict)
+                               and isinstance(msg["type"], str))
+
+
+@settings(max_examples=120, deadline=None)
+@given(st.binary(min_size=4, max_size=64),
+       st.integers(min_value=0, max_value=0xFFFFFFFF))
+def test_fuzz_header_prefix_with_random_length(tail, length):
+    """A syntactically valid 4-byte length header followed by arbitrary
+    bytes: rejected from the header alone when oversized, else either a
+    decode error or truncation — never a hang."""
+    raw = struct.pack(">I", length) + tail
+    max_bytes = 1 << 12
+    async def go():
+        return await asyncio.wait_for(
+            read_message(_reader(raw), max_bytes=max_bytes,
+                         max_blob_bytes=1 << 16), timeout=5.0)
+    try:
+        asyncio.run(go())
+    except ProtocolError as e:
+        assert e.code in DECODER_CODES, e
+        if (length & (CHUNK_FLAG - 1)) > max_bytes:
+            assert e.code == "frame-too-large"
+
+
+def test_length_field_overflow_rejected_before_read():
+    """All-ones length header: the chunk flag is masked out first, and
+    the remaining 2^31-1 length still exceeds max_bytes — rejected
+    without buffering anything."""
+    code = expect_code(
+        lambda: read_message(_reader(b"\xff\xff\xff\xff" + b"x" * 64),
+                             max_bytes=1024), {"frame-too-large"})
+    assert code == "frame-too-large"
+
+
+@pytest.mark.parametrize("raw", [
+    b"\x00",                                  # EOF inside length header
+    b"\x00\x00\x00\x10{\"ty",                 # EOF inside JSON body
+    struct.pack(">I", CHUNK_FLAG | 8) + b"abc",   # EOF inside chunk body
+])
+def test_truncated_frames_raise(raw):
+    expect_code(lambda: read_frame_ex(_reader(raw), allow_chunk=True),
+                {"truncated-frame"})
+
+
+def test_chunk_frame_outside_blob_rejected():
+    expect_code(lambda: read_message(_reader(encode_chunk(b"orphan"))),
+                {"unexpected-chunk"})
+
+
+# ---------------------------------------------------------------------------
+# the chunk state machine
+# ---------------------------------------------------------------------------
+
+
+def _blob_msg(**over):
+    msg = {"type": "submit", "seq": 1, "chunks": 2, "blob_bytes": 8}
+    msg.update(over)
+    return msg
+
+
+def test_blob_roundtrip_through_reader():
+    frames = build_blob_frames({"type": "submit", "seq": 9}, b"x" * 100,
+                               chunk_bytes=7)
+    msg, n = _decode(lambda: read_message(_reader(*frames)))
+    assert msg["_blob"] == b"x" * 100
+    assert msg["chunks"] == -(-100 // 7)
+    assert n == sum(len(f) for f in frames)
+
+
+def test_blob_too_large_rejected_before_chunks_read():
+    # header alone: no chunk frames are even fed, yet the error is the
+    # cap violation, not a truncation — proof nothing was buffered first
+    expect_code(
+        lambda: read_message(_reader(encode_frame(
+            _blob_msg(blob_bytes=1 << 20))), max_blob_bytes=1 << 10),
+        {"blob-too-large"})
+
+
+@pytest.mark.parametrize("decl", [
+    {"chunks": 0}, {"chunks": -1}, {"chunks": True},
+    {"chunks": MAX_BLOB_CHUNKS + 1}, {"chunks": "2"},
+    {"blob_bytes": -1}, {"blob_bytes": "8"}, {"blob_bytes": None},
+    {"chunks": None, "blob_bytes": None},
+])
+def test_bad_chunk_declarations_rejected(decl):
+    expect_code(lambda: read_message(_reader(encode_frame(
+        _blob_msg(**decl)))), {"bad-blob"})
+
+
+def test_eof_mid_blob_is_truncation():
+    expect_code(lambda: read_message(_reader(
+        encode_frame(_blob_msg()), encode_chunk(b"1234"))),
+        {"truncated-frame"})
+
+
+def test_json_frame_where_chunk_expected():
+    expect_code(lambda: read_message(_reader(
+        encode_frame(_blob_msg()), encode_frame({"type": "sneak"}))),
+        {"chunk-mismatch"})
+
+
+def test_chunk_overrun_rejected():
+    expect_code(lambda: read_message(_reader(
+        encode_frame(_blob_msg()), encode_chunk(b"123456"),
+        encode_chunk(b"123456"))), {"bad-blob"})
+
+
+def test_chunk_underrun_rejected():
+    expect_code(lambda: read_message(_reader(
+        encode_frame(_blob_msg()), encode_chunk(b"12"),
+        encode_chunk(b"34"))), {"bad-blob"})
+
+
+def test_chunked_message_rejected_on_v1_connection():
+    frames = build_blob_frames({"type": "submit", "seq": 1}, b"x" * 8)
+    expect_code(lambda: read_message(_reader(*frames),
+                                     allow_chunks=False), {"bad-blob"})
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.binary(min_size=0, max_size=128), st.integers(1, 5))
+def test_fuzz_blob_reassembly_identity(payload, chunk_bytes):
+    """Well-formed chunked messages always reassemble exactly."""
+    frames = build_blob_frames({"type": "t", "seq": 1}, payload,
+                               chunk_bytes=chunk_bytes)
+    msg, _ = _decode(lambda: read_message(_reader(*frames)))
+    assert msg.get("_blob", b"") == payload
+
+
+# ---------------------------------------------------------------------------
+# binary-manifest decoding
+# ---------------------------------------------------------------------------
+
+
+def _good_manifest():
+    manifest, buffer = encode_binary({"a": __import__("numpy")
+                                      .zeros((2, 3), "float32")})
+    return json.loads(json.dumps(manifest)), buffer
+
+
+@pytest.mark.parametrize("mutate", [
+    lambda m: "not a dict",
+    lambda m: {},
+    lambda m: {**m, "arrays": "nope"},
+    lambda m: {**m, "rest": 42},
+    lambda m: {**m, "rest": "!!! not base64 !!!"},
+    lambda m: {**m, "rest": "YWJj"},                  # b"abc": not a pickle
+    lambda m: {**m, "arrays": [{}]},
+    lambda m: {**m, "arrays": ["x"]},
+    lambda m: {**m, "arrays": [{**m["arrays"][0], "dtype": "object"}]},
+    lambda m: {**m, "arrays": [{**m["arrays"][0], "dtype": "no-such"}]},
+    lambda m: {**m, "arrays": [{**m["arrays"][0], "dtype": 7}]},
+    lambda m: {**m, "arrays": [{**m["arrays"][0], "shape": [-1, 6]}]},
+    lambda m: {**m, "arrays": [{**m["arrays"][0], "shape": [2, True]}]},
+    lambda m: {**m, "arrays": [{**m["arrays"][0], "shape": [1] * 64}]},
+    lambda m: {**m, "arrays": [{**m["arrays"][0], "nbytes": 999}]},
+    lambda m: {**m, "arrays": [{**m["arrays"][0], "nbytes": True}]},
+    lambda m: {**m, "arrays": m["arrays"] * 2},       # extent overrun
+    lambda m: {**m, "arrays": []},                    # trailing bytes
+])
+def test_manifest_mutations_rejected(mutate):
+    manifest, buffer = _good_manifest()
+    with pytest.raises(ProtocolError) as ei:
+        decode_binary(mutate(manifest), buffer)
+    assert ei.value.code == "bad-manifest"
+
+
+def test_manifest_huge_nbytes_rejected_without_allocation():
+    """A declared extent of ~2^40 bytes must be rejected by arithmetic
+    comparison against the actual buffer, never allocated."""
+    n = 1 << 40
+    manifest = {"arrays": [{"dtype": "float64", "shape": [n // 8],
+                            "nbytes": n}],
+                "rest": _good_manifest()[0]["rest"]}
+    with pytest.raises(ProtocolError) as ei:
+        decode_binary(manifest, b"tiny")
+    assert ei.value.code == "bad-manifest"
+
+
+def test_manifest_array_count_cap():
+    manifest, buffer = _good_manifest()
+    entry = {"dtype": "float32", "shape": [0], "nbytes": 0}
+    manifest["arrays"] = [entry] * ((1 << 16) + 1)
+    with pytest.raises(ProtocolError) as ei:
+        decode_binary(manifest, b"")
+    assert ei.value.code == "bad-manifest"
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.binary(min_size=0, max_size=64))
+def test_fuzz_manifest_buffer_mismatch(junk):
+    """A valid manifest over the wrong buffer either decodes (exact size
+    match by construction) or raises bad-manifest — never crashes."""
+    manifest, buffer = _good_manifest()
+    if len(junk) == len(buffer):
+        return                                         # would be valid
+    with pytest.raises(ProtocolError) as ei:
+        decode_binary(manifest, junk)
+    assert ei.value.code == "bad-manifest"
+
+
+# ---------------------------------------------------------------------------
+# ticket / lease codecs
+# ---------------------------------------------------------------------------
+
+
+def _noop_decode(s):
+    return s
+
+
+@pytest.mark.parametrize("d", [
+    {},
+    {"ticket_id": "7", "task_name": "t", "work": 1, "task_version": 0,
+     "args": "x"},
+    {"ticket_id": True, "task_name": "t", "work": 1, "task_version": 0,
+     "args": "x"},
+    {"ticket_id": 7, "task_name": 3, "work": 1, "task_version": 0,
+     "args": "x"},
+    {"ticket_id": 7, "task_name": "t", "work": "fast", "task_version": 0,
+     "args": "x"},
+    {"ticket_id": 7, "task_name": "t", "work": 1, "task_version": "0",
+     "args": "x"},
+    {"ticket_id": 7, "task_name": "t", "work": 1, "task_version": 0},
+])
+def test_ticket_from_wire_rejects_malformed(d):
+    with pytest.raises(ProtocolError) as ei:
+        Ticket.from_wire(d, _noop_decode)
+    assert ei.value.code == "bad-message"
+
+
+@pytest.mark.parametrize("d", [
+    {},
+    {"lease_id": "9", "client": "c", "tickets": []},
+    {"lease_id": 9, "client": 0, "tickets": []},
+    {"lease_id": 9, "client": "c", "tickets": "nope"},
+    {"lease_id": 9, "client": "c", "tickets": [{"ticket_id": "bad"}]},
+])
+def test_lease_batch_from_wire_rejects_malformed(d):
+    with pytest.raises(ProtocolError) as ei:
+        LeaseBatch.from_wire(d, _noop_decode)
+    assert ei.value.code == "bad-message"
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.one_of(st.integers(-5, 5), st.booleans(),
+                          st.just(None), st.binary(max_size=8)),
+                min_size=0, max_size=4))
+def test_fuzz_ticket_codec_random_field_soup(soup):
+    """Random JSON-ish values thrown at every ticket field: the codec
+    either builds a Ticket (all fields happened to be well-typed) or
+    raises bad-message — nothing else escapes."""
+    keys = ["ticket_id", "task_name", "work", "task_version", "args"]
+    d = dict(zip(keys, soup))
+    try:
+        t = Ticket.from_wire(d, _noop_decode)
+    except ProtocolError as e:
+        assert e.code == "bad-message"
+    else:
+        assert isinstance(t.ticket_id, int)
