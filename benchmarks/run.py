@@ -220,6 +220,54 @@ def bench_training(full: bool):
     return results
 
 
+def bench_obs(full: bool):
+    """Observability layer: trace determinism, span balance, and the
+    tracing-overhead gate; writes BENCH_obs.json with the overhead ratio
+    and the traced sweep cell's event counts."""
+    import sys as _sys
+    if "src" not in _sys.path:
+        _sys.path.insert(0, "src")
+    from benchmarks import scheduler_throughput
+    from repro.obs import MetricsRegistry, Tracer, collect_queue
+
+    t0 = time.perf_counter()
+    # determinism: two same-seed virtual-clock runs must serialize to
+    # byte-identical Perfetto JSON (the tracer never reads wall time)
+    sizer, watchdog = scheduler_throughput.POLICIES["adaptive"]
+    traces = []
+    for _ in range(2):
+        tr = Tracer()
+        scheduler_throughput.simulate("churn", sizer, watchdog=watchdog,
+                                      tracer=tr)
+        assert tr.balanced(), tr.open_spans()
+        traces.append(tr.to_json())
+    assert traces[0] == traces[1], "same-seed traces differ"
+    events = traces[0].count('"ph"')
+
+    # metrics registry absorbs a live queue snapshot without error
+    reg = MetricsRegistry()
+    clock = scheduler_throughput.SimClock()
+    from repro.core.tickets import TicketQueue
+    q = TicketQueue(timeout=300.0, clock=clock)
+    q.add_many("work", list(range(16)))
+    collect_queue(reg, q)
+    assert reg.get("queue.tickets_count").value() == 16, reg.snapshot()
+
+    gate = scheduler_throughput.overhead_gate()
+    us = (time.perf_counter() - t0) * 1e6
+    # acceptance bars BEFORE writing (a failed gate must not leave a
+    # fresh-looking BENCH_obs.json behind)
+    assert gate["ok"], gate
+    payload = {"determinism": {"runs": 2, "identical": True,
+                               "events": events},
+               "overhead": gate,
+               "metric_series": len(reg.names())}
+    _write_json("obs", payload)
+    _csv("obs_layer", us,
+         f"overhead_ratio={gate['ratio']}x|trace_events={events}")
+    return payload
+
+
 BENCHES = {
     "table2": bench_table2,
     "table4": bench_table4,
@@ -231,6 +279,7 @@ BENCHES = {
     "cache": bench_cache,
     "transport": bench_transport,
     "training": bench_training,
+    "obs": bench_obs,
 }
 
 

@@ -30,6 +30,7 @@ import heapq
 import itertools
 import json
 import sys
+import time
 
 sys.path.insert(0, "src")
 
@@ -74,14 +75,20 @@ def client_mix(kind: str):
 
 
 def simulate(mix: str, sizer, *, watchdog: bool, grace: float = 3.0,
-             redistribute_min: float = 10.0, timeout: float = 300.0) -> dict:
+             redistribute_min: float = 10.0, timeout: float = 300.0,
+             tracer=None, n_tickets: int = None) -> dict:
     """Run one (mix, policy) cell; returns makespan/idle/redistribution
     metrics.  Event-driven: the heap holds (time, seq, kind, payload) with
-    kinds 'wake' (client asks for a lease) and 'done' (lease completes)."""
+    kinds 'wake' (client asks for a lease) and 'done' (lease completes).
+    ``tracer`` (a ``repro.obs.Tracer``) records the full ticket/lease
+    lifecycle on the virtual clock — same-seed traced runs are
+    byte-identical (asserted by ``benchmarks/run.py --only obs``)."""
     clock = SimClock()
+    if tracer is not None:
+        tracer.clock = clock
     q = TicketQueue(timeout=timeout, redistribute_min=redistribute_min,
-                    clock=clock)
-    q.add_many("work", list(range(N_TICKETS)), work=1.0)
+                    clock=clock, tracer=tracer)
+    q.add_many("work", list(range(n_tickets or N_TICKETS)), work=1.0)
 
     clients = client_mix(mix)
     alive = {name: True for name, _, _ in clients}
@@ -177,6 +184,52 @@ POLICIES = {
 }
 
 
+def overhead_gate(reps: int = 6, n_tickets: int = 8000,
+                  budget: float = 1.05) -> dict:
+    """Tracing-overhead gate: the sweep cell that stresses the queue
+    hardest (bimodal/adaptive) must run within ``budget``x of its
+    untraced wall time when every ticket and lease is being traced.
+
+    Measured at ``n_tickets`` (a production-scale backlog, ~20x the
+    sweep default) so the comparison reflects real queue work per traced
+    event: recording a span is O(1) Python-dict work, while granting a
+    lease scans eligible tickets — at toy backlogs the fixed per-event
+    cost dominates and the ratio says nothing about deployment overhead.
+    Traced/untraced reps are interleaved and both sides take the min
+    (noise on a shared box is one-sided — stalls only ever slow a rep
+    down), with the cyclic GC parked so a collection landing in one
+    side's reps can't bias the ratio."""
+    import gc
+
+    from repro.obs import Tracer
+    sizer, watchdog = POLICIES["adaptive"]
+
+    def one(traced: bool) -> float:
+        t0 = time.perf_counter()
+        simulate("bimodal", sizer, watchdog=watchdog, n_tickets=n_tickets,
+                 tracer=Tracer() if traced else None)
+        return time.perf_counter() - t0
+
+    one(False)                             # warm-up rep, discarded
+    gc_was_enabled = gc.isenabled()
+    gc.disable()
+    try:
+        untraced = one(False)
+        traced = one(True)
+        for _ in range(reps - 1):          # interleaved u/t pairs
+            untraced = min(untraced, one(False))
+            traced = min(traced, one(True))
+            gc.collect()                   # pay collection between pairs
+    finally:
+        if gc_was_enabled:
+            gc.enable()
+    ratio = traced / untraced
+    return {"untraced_s": round(untraced, 5), "traced_s": round(traced, 5),
+            "n_tickets": n_tickets,
+            "ratio": round(ratio, 4), "budget": budget,
+            "ok": ratio <= budget}
+
+
 def run_sweep() -> dict:
     out: dict = {}
     for mix in ("uniform", "bimodal", "churn"):
@@ -189,7 +242,19 @@ def run_sweep() -> dict:
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=None, help="write results here")
+    ap.add_argument("--overhead-gate", action="store_true",
+                    help="measure tracing overhead on the bimodal/adaptive "
+                         "cell and fail unless traced <= 1.05x untraced")
     args = ap.parse_args()
+    if args.overhead_gate:
+        g = overhead_gate()
+        print(f"tracing overhead: traced {g['traced_s']:.4f}s vs untraced "
+              f"{g['untraced_s']:.4f}s -> {g['ratio']:.3f}x "
+              f"(budget {g['budget']}x)")
+        if not g["ok"]:
+            sys.exit(f"tracing overhead {g['ratio']:.3f}x exceeds "
+                     f"{g['budget']}x budget")
+        return
     results = run_sweep()
     hdr = f"{'mix':<10}{'policy':<12}{'makespan(s)':>12}{'idle':>8}" \
           f"{'redist':>8}{'released':>10}"

@@ -34,6 +34,15 @@ with its home shards rebalanced to survivors, and a round-boundary
 checkpoint resumed to the identical loss.
 
   PYTHONPATH=src python examples/sashimi_browser_sim.py --train
+
+``--trace out.json`` runs the training-fabric demo with the
+observability layer on: a ``repro.obs.Tracer`` records the full causal
+ticket lifecycle (enqueue -> route -> lease -> execute -> submit ->
+barrier), the round timeline, straggler reticketing, and the member
+kill + rebalance, then writes a Chrome trace-event JSON you can load
+straight into https://ui.perfetto.dev (or chrome://tracing).
+
+  PYTHONPATH=src python examples/sashimi_browser_sim.py --trace out.json
 """
 import argparse
 import asyncio
@@ -312,12 +321,15 @@ def training_grad_shard(args, static):
             "round": static["weights"]["round"]}
 
 
-async def demo_training(checkpoint_dir):
+async def demo_training(checkpoint_dir, trace_path=None):
     """Training fabric: §4.1 data-parallel rounds as a first-class
     federation workload — measured-rate shard sizing, straggler-aware
     K-of-N barrier, mid-run member death with shard rebalancing, and a
-    bit-exact round-boundary checkpoint resume."""
+    bit-exact round-boundary checkpoint resume.  With ``trace_path``,
+    the whole first run is recorded by a ``repro.obs.Tracer`` and
+    written out as Perfetto-loadable Chrome trace-event JSON."""
     from repro.core.split_parallel import TrainState, adaptive_shard_sizes
+    from repro.obs import MetricsRegistry, Tracer, collect_fabric
     from repro.optim import adagrad
     from repro.train_fabric import (FederatedTrainer, FederatedTrainingLoop,
                                     Rebalancer, checkpoint_path,
@@ -329,7 +341,8 @@ async def demo_training(checkpoint_dir):
     y = (X @ w_true).astype(np.float32)
     opt = adagrad(0.3)
 
-    async def run(rounds, resume_from=None, kill_at=None):
+    async def run(rounds, resume_from=None, kill_at=None, tracer=None,
+                  metrics=None):
         from repro.core.distributor import FixedSizer
         fed = FederatedDistributor(
             3, n_shards=6, timeout=20.0, redistribute_min=0.02,
@@ -337,7 +350,9 @@ async def demo_training(checkpoint_dir):
             # exactly one rate-sized shard per round
             sizer=FixedSizer(1),
             watchdog_interval=0.01, grace=2.0,
-            project_name="TrainingFabricDemo")
+            project_name="TrainingFabricDemo", tracer=tracer)
+        if tracer is not None:
+            tracer.clock = fed.queue.clock
         fed.add_static("train_data", (X, y))
         fed.register_task(TaskDef("grad_shard", training_grad_shard,
                                   static_files=("weights", "train_data")))
@@ -356,7 +371,9 @@ async def demo_training(checkpoint_dir):
         trainer = FederatedTrainer(
             fed, task_name="grad_shard", barrier_k=0.8,
             straggler_policy="reticket", timeout=30.0,
-            rebalancer=Rebalancer(fed, steal_threshold=3, cooldown=1))
+            rebalancer=Rebalancer(fed, steal_threshold=3, cooldown=1,
+                                  metrics=metrics),
+            metrics=metrics)
         loop = FederatedTrainingLoop(trainer, opt, state,
                                      round_index=start,
                                      checkpoint_dir=checkpoint_dir)
@@ -383,7 +400,10 @@ async def demo_training(checkpoint_dir):
             await trainer.aclose(shutdown=True)
         return loop, fed, trainer, shard_plans
 
-    loop, fed, trainer, plans = await run(6, kill_at=2)
+    tracer = Tracer() if trace_path is not None else None
+    metrics = MetricsRegistry() if trace_path is not None else None
+    loop, fed, trainer, plans = await run(6, kill_at=2, tracer=tracer,
+                                          metrics=metrics)
     assert loop.stale_executions == 0
     assert loop.losses[-1] < loop.losses[0]
     con = fed.console()
@@ -397,6 +417,21 @@ async def demo_training(checkpoint_dir):
     print(f"  measured client rates feeding shard sizes (rows/s): {rates}")
     print(f"  shard plan: round 0 (unmeasured) {plans[0]} -> "
           f"round {len(plans) - 1} (rate-sized) {plans[-1]}")
+
+    if trace_path is not None:
+        assert tracer.balanced(), tracer.open_spans()
+        tracer.write(trace_path)
+        collect_fabric(metrics, distributor=fed)
+        steals = metrics.get("federation.steals_total").total()
+        migs = metrics.get("rebalancer.migrations_total").total()
+        print(f"  trace: {tracer.event_count()} events "
+              f"({tracer.spans_closed} spans, all balanced) -> {trace_path} "
+              f"(open in ui.perfetto.dev)")
+        print(f"  metrics: {len(metrics.names())} series — e.g. "
+              f"federation.steals_total={steals:.0f} "
+              f"rebalancer.migrations_total={migs:.0f} "
+              f"round.barrier_wait_seconds count="
+              f"{metrics.get('round.barrier_wait_seconds').count()}")
 
     # kill-and-resume: a fresh federation continues from the round-4
     # checkpoint and lands on the identical loss trajectory
@@ -417,9 +452,16 @@ def main():
                     help="run the cross-host transport demo only")
     ap.add_argument("--train", action="store_true",
                     help="run the training-fabric demo only")
+    ap.add_argument("--trace", metavar="PATH",
+                    help="run the training-fabric demo with the tracer on "
+                         "and write a Perfetto trace-event JSON to PATH")
     ap.add_argument("--all", action="store_true",
                     help="run every demo including federation + transport")
     args = ap.parse_args()
+    if args.trace:
+        with tempfile.TemporaryDirectory() as ckdir:
+            asyncio.run(demo_training(ckdir, trace_path=args.trace))
+        return
     if args.federation:
         asyncio.run(demo_federation())
         return

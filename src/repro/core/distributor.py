@@ -36,6 +36,7 @@ import collections
 import threading
 import time
 import traceback
+import warnings
 from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
@@ -625,12 +626,20 @@ class AsyncDistributor(HttpServerBase):
                  watchdog_interval: float = 0.05,
                  keep_alive: bool = False,
                  project_name: str = "project",
-                 queue=None):
+                 queue=None, tracer=None):
         super().__init__()
         # queue may be shared: a federation passes one ShardedTicketQueue
         # (duck-type compatible) to every member distributor
         self.queue = queue if queue is not None else TicketQueue(
-            timeout=timeout, redistribute_min=redistribute_min, clock=clock)
+            timeout=timeout, redistribute_min=redistribute_min, clock=clock,
+            tracer=tracer)
+        # a shared queue brings its own tracer; in-process clients, the
+        # transport server and the round engine all look it up here
+        self.tracer = (tracer if tracer is not None
+                       else getattr(self.queue, "tracer", None))
+        #: structured diagnosis of the last run_until_done give-up (the
+        #: queue snapshot + outstanding leases at expiry), None if none
+        self.last_stall_report: Optional[dict] = None
         self.sizer = sizer if sizer is not None else AdaptiveSizer()
         self.grace = grace
         # keep_alive: clients/watchdog survive a drained queue and wait for
@@ -814,8 +823,26 @@ class AsyncDistributor(HttpServerBase):
             wall_cap = max(timeout, 60.0)
         wall_deadline = time.monotonic() + wall_cap
         while not self.queue.all_done():
-            if (self.queue.clock() > deadline
-                    or time.monotonic() > wall_deadline):
+            vnow = self.queue.clock()
+            if vnow > deadline or time.monotonic() > wall_deadline:
+                # never silently: a stall here is a scheduling bug or a
+                # wedged virtual clock, and the state that explains it is
+                # about to be torn down — snapshot it first
+                reason = ("timeout" if vnow > deadline else "wall_cap")
+                report = self._stall_report(reason, vnow)
+                self.last_stall_report = report
+                if self.tracer is not None:
+                    self.tracer.instant("distributor.stall", track="queue",
+                                        cat="warning", ts=vnow, args=report)
+                warnings.warn(
+                    "run_until_done gave up (%s expired): %d ticket(s) "
+                    "incomplete, %d outstanding lease(s); full queue "
+                    "snapshot in .last_stall_report" % (
+                        reason,
+                        report["snapshot"]["tickets"]
+                        - report["snapshot"]["executed"],
+                        len(report["outstanding_leases"])),
+                    RuntimeWarning, stacklevel=2)
                 await self.shutdown()
                 return False
             # event-driven: every submit/release notifies; the timeout is
@@ -826,6 +853,25 @@ class AsyncDistributor(HttpServerBase):
             await self._wait_on(wake, 0.05)
         await self.shutdown()
         return True
+
+    def _stall_report(self, reason: str, vnow: float) -> dict:
+        """JSON-safe diagnosis of a wedged run: the control-console
+        snapshot (which carries every client's EWMA rate), plus each
+        outstanding lease with its age against its ETA — the two things
+        needed to tell a straggler from a lost wake-up."""
+        return {
+            "reason": reason,
+            "virtual_clock": vnow,
+            "snapshot": self.queue.snapshot(),
+            "client_rates": self.client_rates(),
+            "outstanding_leases": [
+                {"lease": b.lease_id, "client": b.client,
+                 "tickets": [t.ticket_id for t in b.tickets],
+                 "issued_at": b.issued_at,
+                 "age_s": vnow - b.issued_at,
+                 "expected_duration": b.expected_duration}
+                for b in self.queue.outstanding_leases()],
+        }
 
     async def shutdown(self):
         """Cancel client + watchdog tasks and wait for them to unwind."""
@@ -883,33 +929,24 @@ class AsyncBrowserClient(BrowserNodeBase):
                     break
                 results: dict[int, Any] = {}
                 failed = False
-                for ticket in batch.tickets:
-                    try:
-                        # the ticket's pinned version drives revalidation:
-                        # a pin newer than the cached entry forces a
-                        # conditional refetch, so post-re-register tickets
-                        # can never execute stale code or data
-                        task = self._get_task(ticket.task_name,
-                                              ticket.task_version)
-                        static = self._get_static(task, ticket.task_version)
-                        if (self.profile.fail_prob
-                                and self._rand() < self.profile.fail_prob):
-                            raise RuntimeError(
-                                "simulated browser crash in "
-                                f"{ticket.task_name}")
-                        if self.profile.speed > 0:
-                            await asyncio.sleep(
-                                ticket.work / self.profile.speed)
-                        results[ticket.ticket_id] = task.run(ticket.args,
-                                                             static)
-                        self.executed += 1
-                    except Exception:
-                        self.errors += 1
-                        self.dist.queue.report_error(
-                            ticket.ticket_id, traceback.format_exc(),
-                            self.profile.name)
-                        self._reload()
-                        failed = True
+                tr = self.dist.tracer
+                exec_span = None
+                if tr is not None:
+                    exec_span = tr.begin(
+                        "client.execute", lane=True, cat="client",
+                        track=f"client:{self.profile.name}",
+                        ts=self.dist.queue.clock(),
+                        args={"lease": batch.lease_id,
+                              "tickets": len(batch.tickets)})
+                try:
+                    await self._run_tickets(batch, results)
+                except Exception:
+                    failed = True
+                finally:
+                    if tr is not None:
+                        tr.end(exec_span, ts=self.dist.queue.clock(),
+                               args={"executed": len(results),
+                                     "failed": failed})
                 await self.dist.submit_batch(batch, results)
                 if failed:
                     # drop the lease bookkeeping for the errored tickets
@@ -919,6 +956,42 @@ class AsyncBrowserClient(BrowserNodeBase):
                     await self.dist.release_lease(batch, reset_vct=False)
         finally:
             self.done = True
+
+    async def _run_tickets(self, batch: LeaseBatch, results: dict):
+        """Execute a lease's tickets into ``results``; raises after the
+        loop if any ticket errored (the caller releases the lease with the
+        cool-down kept)."""
+        failed = False
+        for ticket in batch.tickets:
+            try:
+                # the ticket's pinned version drives revalidation:
+                # a pin newer than the cached entry forces a
+                # conditional refetch, so post-re-register tickets
+                # can never execute stale code or data
+                task = self._get_task(ticket.task_name,
+                                      ticket.task_version)
+                static = self._get_static(task, ticket.task_version)
+                if (self.profile.fail_prob
+                        and self._rand() < self.profile.fail_prob):
+                    raise RuntimeError(
+                        "simulated browser crash in "
+                        f"{ticket.task_name}")
+                if self.profile.speed > 0:
+                    await asyncio.sleep(
+                        ticket.work / self.profile.speed)
+                results[ticket.ticket_id] = task.run(ticket.args,
+                                                     static)
+                self.executed += 1
+            except Exception:
+                self.errors += 1
+                self.dist.queue.report_error(
+                    ticket.ticket_id, traceback.format_exc(),
+                    self.profile.name)
+                self._reload()
+                failed = True
+        if failed:
+            raise RuntimeError("ticket(s) errored in lease "
+                               f"{batch.lease_id}")
 
 
 # ---------------------------------------------------------------------------

@@ -245,6 +245,12 @@ class FederationMember(AsyncDistributor):
             if batch is not None and grant_has_foreign_tickets(
                     batch, self.home_shards):
                 self.steals += 1
+                if self.tracer is not None:
+                    self.tracer.instant(
+                        "federation.steal", track=f"member{self.index}",
+                        cat="federation", ts=self.queue.clock(),
+                        args={"member": self.index, "lease": batch.lease_id,
+                              "client": client_name})
         return batch
 
     def task_version(self, name: str) -> int:
@@ -296,7 +302,8 @@ class FederatedDistributor(HttpServerBase):
                  watchdog_interval: float = 0.05,
                  edge_capacity: int = 64,
                  keep_alive: bool = False,
-                 project_name: str = "federation"):
+                 project_name: str = "federation",
+                 tracer=None):
         super().__init__()
         if n_members < 1:
             raise ValueError(f"n_members must be >= 1, got {n_members}")
@@ -309,7 +316,13 @@ class FederatedDistributor(HttpServerBase):
         self.project_name = project_name
         self.queue = ShardedTicketQueue(
             n_shards if n_shards is not None else max(n_members, 2),
-            timeout=timeout, redistribute_min=redistribute_min, clock=clock)
+            timeout=timeout, redistribute_min=redistribute_min, clock=clock,
+            tracer=tracer)
+        # members inherit the tracer through the shared queue (see
+        # AsyncDistributor.__init__); the façade keeps it for its own
+        # run_until_done stall events and federation-level instants
+        self.tracer = tracer
+        self.last_stall_report: Optional[dict] = None
         sizer = sizer if sizer is not None else AdaptiveSizer()
         self.members: list[FederationMember] = []
         for i in range(n_members):
@@ -434,6 +447,12 @@ class FederatedDistributor(HttpServerBase):
         donor.home_shards.remove(sh)
         target.home_shards.append(sh)
         self.migrations += 1
+        if self.tracer is not None:
+            self.tracer.instant(
+                "federation.migrate", track="federation", cat="federation",
+                ts=self.queue.clock(),
+                args={"shard": shard_index, "from": donor.index,
+                      "to": to_member})
         self._notify_all()          # the new owner's idle clients wake up
         return True
 
@@ -447,13 +466,19 @@ class FederatedDistributor(HttpServerBase):
         m.alive = False
         n = len(m._client_tasks)
         await m.shutdown()
+        if self.tracer is not None:
+            self.tracer.instant(
+                "federation.kill", track="federation", cat="federation",
+                ts=self.queue.clock(), args={"member": index, "clients": n})
         self._notify_all()
         return n
 
-    # drive-until-drained loop reused verbatim: the façade exposes the same
-    # _wake_event/_wait_on/queue/shutdown surface the loop needs, and one
-    # copy means a fix to its lost-wakeup handling reaches both classes
+    # drive-until-drained loop (and its stall-report diagnosis) reused
+    # verbatim: the façade exposes the same _wake_event/_wait_on/queue/
+    # shutdown/client_rates surface the loop needs, and one copy means a
+    # fix to its lost-wakeup or silent-expiry handling reaches both classes
     run_until_done = AsyncDistributor.run_until_done
+    _stall_report = AsyncDistributor._stall_report
 
     async def shutdown(self):
         """Shut down every member (dead ones are a no-op)."""

@@ -74,16 +74,22 @@ class ShardedTicketQueue:
 
     def __init__(self, n_shards: int = 4, *, timeout: float = 300.0,
                  redistribute_min: float = 10.0,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 tracer=None):
         if n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {n_shards}")
         self.n_shards = n_shards
         self.timeout = timeout
         self.redistribute_min = redistribute_min
         self.clock = clock
+        # shards share the store's tracer for per-ticket lifecycle spans;
+        # cross-shard leases are traced once here (shards are checked out
+        # with observe=False, which also skips their per-shard lease span)
+        self.tracer = tracer
+        self._lease_spans: dict[int, int] = {}    # guarded by _meta_lock
         self.shards: list[TicketQueue] = [
             TicketQueue(timeout=timeout, redistribute_min=redistribute_min,
-                        clock=clock)
+                        clock=clock, tracer=tracer)
             for _ in range(n_shards)]
         # one id stream across shards: globally unique, arrival-ordered
         # (itertools.count.__next__ is atomic under the GIL)
@@ -129,6 +135,12 @@ class ShardedTicketQueue:
         tid = sh.add(task_name, args, work=work, task_version=task_version)
         with self._meta_lock:
             self._ticket_shard[tid] = sh
+        if self.tracer is not None:
+            self.tracer.instant(
+                "ticket.route", track="queue", cat="ticket",
+                ts=self.clock(),
+                args={"shard": self.shards.index(sh), "tickets": 1,
+                      "task": task_name})
         return tid
 
     def add_many(self, task_name: str, args_list, *, work=1.0,
@@ -151,6 +163,12 @@ class ShardedTicketQueue:
         with self._meta_lock:
             for tid in tids:
                 self._ticket_shard[tid] = sh
+        if self.tracer is not None and tids:
+            self.tracer.instant(
+                "ticket.route", track="queue", cat="ticket",
+                ts=self.clock(),
+                args={"shard": self.shards.index(sh), "tickets": len(tids),
+                      "task": task_name})
         return tids
 
     # -- client side: batched leases ------------------------------------------
@@ -198,6 +216,11 @@ class ShardedTicketQueue:
                            shards=touched)
         with self._meta_lock:
             self._leases[lease_id] = (batch, touched)
+            if self.tracer is not None:
+                self._lease_spans[lease_id] = self.tracer.begin(
+                    "lease", track="queue", cat="lease", ts=now,
+                    args={"lease": lease_id, "client": client,
+                          "tickets": len(copies), "shards": len(touched)})
         with self._stats_lock:
             self.stats.setdefault(client, ClientStats(client)).leases += 1
         return batch
@@ -223,6 +246,14 @@ class ShardedTicketQueue:
                 self.stats.setdefault(client, ClientStats(client)).observe(
                     accepted_work, now - batch.issued_at, tickets=accepted)
         self._gc_lease(lease_id)
+        # a redistributed ticket can sit in several leases: this submit
+        # may have drained OTHER leases' last outstanding tickets at the
+        # shard level — sweep them too, so their store records don't
+        # linger for the watchdog (the per-shard GC already ran)
+        with self._meta_lock:
+            others = [lid for lid in self._leases if lid != lease_id]
+        for lid in others:
+            self._gc_lease(lid)
         return accepted
 
     def _gc_lease(self, lease_id: int):
@@ -236,6 +267,10 @@ class ShardedTicketQueue:
             batch, touched = entry
             if not any(sh.lease_is_outstanding(lease_id) for sh in touched):
                 del self._leases[lease_id]
+                if self.tracer is not None:
+                    self.tracer.end(self._lease_spans.pop(lease_id, None),
+                                    ts=self.clock(),
+                                    args={"status": "drained"})
 
     def release(self, lease_id: int, *, client_failed: bool = False,
                 reset_vct: bool = True) -> int:
@@ -252,6 +287,12 @@ class ShardedTicketQueue:
                 self._released_leases[lease_id] = entry[0]
                 while len(self._released_leases) > 256:
                     self._released_leases.popitem(last=False)
+                if self.tracer is not None:
+                    self.tracer.end(self._lease_spans.pop(lease_id, None),
+                                    ts=self.clock(),
+                                    args={"status": "released",
+                                          "client_failed": client_failed,
+                                          "reset_vct": reset_vct})
         if entry is None:
             return 0
         batch, touched = entry
@@ -367,6 +408,10 @@ class ShardedTicketQueue:
                                for sh in touched)]
                 for lid in drained:
                     del self._leases[lid]
+                    if self.tracer is not None:
+                        self.tracer.end(self._lease_spans.pop(lid, None),
+                                        ts=self.clock(),
+                                        args={"status": "drained"})
         return n
 
     def completed_results(self, ticket_ids) -> dict:

@@ -238,10 +238,16 @@ class TicketQueue:
 
     def __init__(self, *, timeout: float = 300.0,
                  redistribute_min: float = 10.0,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 tracer=None):
         self.timeout = timeout
         self.redistribute_min = redistribute_min
         self.clock = clock
+        # optional repro.obs Tracer; every site below guards on
+        # ``is not None`` so the disabled path costs one attribute check
+        self.tracer = tracer
+        self._ticket_spans: dict[int, int] = {}   # ticket_id -> span id
+        self._lease_spans: dict[int, int] = {}    # lease_id -> span id
         self._lock = threading.Lock()
         self._tickets: dict[int, Ticket] = {}
         self._ids = itertools.count()
@@ -267,11 +273,16 @@ class TicketQueue:
         registry coherence version the ticket was created against (0 when
         the queue is used without a registry)."""
         with self._lock:
+            now = self.clock()
             tid = next(self._ids)
-            self._tickets[tid] = Ticket(tid, task_name, args, self.clock(),
+            self._tickets[tid] = Ticket(tid, task_name, args, now,
                                         work=work, task_version=task_version)
             self._incomplete += 1
             self._done.clear()
+            if self.tracer is not None:
+                self._ticket_spans[tid] = self.tracer.begin(
+                    "ticket", track="queue", cat="ticket", ts=now,
+                    args={"ticket": tid, "task": task_name})
             return tid
 
     def add_many(self, task_name: str, args_list, *,
@@ -295,6 +306,11 @@ class TicketQueue:
                 self._tickets[tid] = Ticket(tid, task_name, a, now, work=w,
                                             task_version=task_version)
                 tids.append(tid)
+            if self.tracer is not None:
+                self._ticket_spans.update(zip(tids, self.tracer.begin_many(
+                    "ticket", [{"ticket": t, "task": task_name}
+                               for t in tids],
+                    track="queue", cat="ticket", ts=now)))
             self._incomplete += len(tids)
             self._done.clear()
             return tids
@@ -366,6 +382,7 @@ class TicketQueue:
         # makes this O(leases holding THIS ticket), almost always 1); GC
         # drained leases so the watchdog never "releases" a lease of
         # completed tickets.
+        drained = []
         for lid in self._ticket_leases.pop(ticket_id, ()):
             outstanding = self._lease_outstanding.get(lid)
             if outstanding is None:
@@ -374,9 +391,20 @@ class TicketQueue:
             if not outstanding:
                 self._lease_outstanding.pop(lid, None)
                 self._leases.pop(lid, None)
+                drained.append(lid)
         self._incomplete -= 1      # O(1) done check (no full-queue scan)
         if self._incomplete == 0:
             self._done.set()
+        if self.tracer is not None:
+            now = self.clock()
+            self.tracer.end(
+                self._ticket_spans.pop(ticket_id, None), ts=now,
+                args={"status": ("cancelled" if result is CANCELLED
+                                 else "ok"),
+                      "client": client})
+            for lid in drained:
+                self.tracer.end(self._lease_spans.pop(lid, None), ts=now,
+                                args={"status": "drained"})
         return True
 
     # -- distributor side, v2 batched-lease API ------------------------------
@@ -415,6 +443,13 @@ class TicketQueue:
         self._lease_outstanding[lease_id] = {t.ticket_id for t in picked}
         if observe:
             self.stats.setdefault(client, ClientStats(client)).leases += 1
+            # the sharded store (observe=False per member shard) traces
+            # its cross-shard lease once at store level instead
+            if self.tracer is not None:
+                self._lease_spans[lease_id] = self.tracer.begin(
+                    "lease", track="queue", cat="lease", ts=now,
+                    args={"lease": lease_id, "client": client,
+                          "tickets": len(picked)})
         return batch
 
     def lease_tickets(self, client: str, ticket_ids, *, lease_id: int,
@@ -510,6 +545,12 @@ class TicketQueue:
                 released += 1
             if released:
                 self.releases += 1
+            if self.tracer is not None and batch is not None:
+                self.tracer.end(
+                    self._lease_spans.pop(lease_id, None), ts=self.clock(),
+                    args={"status": "released", "released": released,
+                          "client_failed": client_failed,
+                          "reset_vct": reset_vct})
             if batch is not None:
                 self._released_leases[lease_id] = batch
                 while len(self._released_leases) > 256:

@@ -63,6 +63,7 @@ import itertools
 import json
 import pickle
 import struct
+import time
 import traceback
 from typing import Any, Callable, Optional
 
@@ -72,7 +73,8 @@ from repro.core.distributor import (BrowserNodeBase, ClientProfile, Fetched,
 from repro.core.tickets import LeaseBatch
 # ProtocolError lives in the leaf module repro.core.wire (the registry's
 # codecs raise it too); re-exported here where it historically lived.
-from repro.core.wire import ProtocolError, decode_binary, encode_binary
+from repro.core.wire import (ProtocolError, decode_binary, encode_binary,
+                             make_trace_context, parse_trace_context)
 
 #: Highest protocol version this build speaks.  ``hello`` negotiates: the
 #: client sends ``proto`` (its floor, 1 for compatibility) and
@@ -354,6 +356,7 @@ class _Connection:
             await self.writer.drain()
         self.server.frames_out += 1
         self.server.bytes_out += len(frame)
+        self.server._count_out(msg.get("type", "?"), 1, len(frame))
 
     async def send_blob(self, msg: dict, buffer: bytes):
         """Write one chunked message (header + binary chunk frames) under
@@ -370,6 +373,8 @@ class _Connection:
         self.server.frames_out += len(frames)
         self.server.chunks_out += len(frames) - 1
         self.server.bytes_out += sum(len(f) for f in frames)
+        self.server._count_out(msg.get("type", "?"), len(frames),
+                               sum(len(f) for f in frames))
 
     async def send_error(self, seq, err: ProtocolError):
         """Best-effort ``error`` frame (swallowed if the peer is gone)."""
@@ -411,8 +416,14 @@ class TransportServer:
                  port: int = 0, max_frame_bytes: int = MAX_FRAME_BYTES,
                  max_proto: int = PROTOCOL_VERSION,
                  chunk_bytes: int = DEFAULT_CHUNK_BYTES,
-                 max_blob_bytes: int = MAX_BLOB_BYTES):
+                 max_blob_bytes: int = MAX_BLOB_BYTES,
+                 tracer=None):
         self.distributor = distributor
+        # default to the distributor's tracer, so wiring one tracer into
+        # the fabric lights up the transport lanes with no extra plumbing
+        self.tracer = (tracer if tracer is not None
+                       else getattr(distributor, "tracer", None))
+        self._wire_spans: dict[int, int] = {}     # lease_id -> span id
         self.host = host
         self.port = port
         self.max_frame_bytes = max_frame_bytes
@@ -429,6 +440,12 @@ class TransportServer:
         self.chunks_in = 0
         self.chunks_out = 0
         self.protocol_errors = 0
+        # per-message-type wire accounting (frames include chunk frames;
+        # feeds the obs MetricsRegistry via repro.obs.collect)
+        self.msg_frames_in: collections.Counter = collections.Counter()
+        self.msg_frames_out: collections.Counter = collections.Counter()
+        self.msg_bytes_in: collections.Counter = collections.Counter()
+        self.msg_bytes_out: collections.Counter = collections.Counter()
         self._server: Optional[asyncio.AbstractServer] = None
         self._loop: Optional[asyncio.AbstractEventLoop] = None
         self._conns: set[_Connection] = set()
@@ -469,6 +486,13 @@ class TransportServer:
             await asyncio.gather(*tasks, return_exceptions=True)
         self._conns.clear()
         self._handler_tasks.clear()
+        if self.tracer is not None:
+            # leases granted but never submitted back (client died, lease
+            # watchdog-released): close their wire spans so a stopped
+            # server always leaves a balanced trace
+            for lid in list(self._wire_spans):
+                self.tracer.end(self._wire_spans.pop(lid, None),
+                                args={"status": "orphaned"})
 
     def drop_connections(self) -> int:
         """Hard-close every live connection WITHOUT stopping the listener —
@@ -494,13 +518,27 @@ class TransportServer:
                 n += 1
         return n
 
+    def _count_out(self, kind: str, frames: int, nbytes: int):
+        self.msg_frames_out[kind] += frames
+        self.msg_bytes_out[kind] += nbytes
+
+    def _count_in(self, kind: str, frames: int, nbytes: int):
+        self.msg_frames_in[kind] += frames
+        self.msg_bytes_in[kind] += nbytes
+
     def stats(self) -> dict:
-        """Console counters: live connections and wire traffic totals."""
+        """Console counters: live connections, wire traffic totals, and
+        the per-message-type frame/byte breakdown."""
         return {"connections": len(self._conns),
                 "frames_in": self.frames_in, "frames_out": self.frames_out,
                 "bytes_in": self.bytes_in, "bytes_out": self.bytes_out,
                 "chunks_in": self.chunks_in, "chunks_out": self.chunks_out,
-                "protocol_errors": self.protocol_errors}
+                "protocol_errors": self.protocol_errors,
+                "by_type": {
+                    "frames_in": dict(self.msg_frames_in),
+                    "frames_out": dict(self.msg_frames_out),
+                    "bytes_in": dict(self.msg_bytes_in),
+                    "bytes_out": dict(self.msg_bytes_out)}}
 
     # -- invalidation push ----------------------------------------------------
 
@@ -562,6 +600,7 @@ class TransportServer:
             return
         self.frames_in += 1
         self.bytes_in += n
+        self._count_in(msg.get("type", "?"), 1, n)
         seq = msg.get("seq")
         if msg["type"] != "hello":
             self.protocol_errors += 1
@@ -618,6 +657,7 @@ class TransportServer:
             self.frames_in += 1 + msg.get("chunks", 0)
             self.chunks_in += msg.get("chunks", 0)
             self.bytes_in += n
+            self._count_in(msg.get("type", "?"), 1 + msg.get("chunks", 0), n)
             await self._dispatch(conn, msg)
 
     async def _dispatch(self, conn: _Connection, msg: dict):
@@ -651,6 +691,16 @@ class TransportServer:
                     accepted = conn.endpoint.queue.submit_batch(
                         msg["lease_id"], results, conn.client)
                     conn.endpoint._notify_waiters()
+                if self.tracer is not None:
+                    # the span covers grant -> submit; the client's echoed
+                    # trace context (its measured execute time) lands in
+                    # the span args so the wire/compute split is visible
+                    echo = parse_trace_context(msg.get("trace")) or {}
+                    self.tracer.end(
+                        self._wire_spans.pop(msg["lease_id"], None),
+                        ts=conn.endpoint.queue.clock(),
+                        args={"status": "submitted", "accepted": accepted,
+                              **echo})
                 await conn.send({"type": "submit_ok", "seq": seq,
                                  "accepted": accepted})
             elif kind == "release":
@@ -701,13 +751,29 @@ class TransportServer:
                              "done": True})
             return
         conn.leases[batch.lease_id] = batch
+        grant = {"type": "lease_grant", "seq": seq, "done": False,
+                 **batch.to_wire(encode_payload)}
+        if self.tracer is not None and conn.proto >= 2:
+            # trace context rides the v2 wire only when a tracer is
+            # installed, so untraced traffic stays byte-identical; v1
+            # peers never see the field (see docs/PROTOCOL.md)
+            grant["trace"] = make_trace_context(lease=batch.lease_id,
+                                                client=conn.client)
+            self._wire_spans[batch.lease_id] = self.tracer.begin(
+                "wire.lease", lane=True, cat="wire",
+                track=f"client:{conn.client}",
+                ts=conn.endpoint.queue.clock(),
+                args={"lease": batch.lease_id, "client": conn.client,
+                      "tickets": len(batch.tickets)})
         try:
-            await conn.send({"type": "lease_grant", "seq": seq,
-                             "done": False,
-                             **batch.to_wire(encode_payload)})
+            await conn.send(grant)
         except (ConnectionError, RuntimeError):
             # granted but undeliverable: hand the tickets straight back
             conn.leases.pop(batch.lease_id, None)
+            if self.tracer is not None:
+                self.tracer.end(self._wire_spans.pop(batch.lease_id, None),
+                                ts=conn.endpoint.queue.clock(),
+                                args={"status": "undeliverable"})
             await conn.endpoint.release_lease(batch, client_failed=True)
             raise
 
@@ -723,6 +789,11 @@ class TransportServer:
                 msg["lease_id"], client_failed=client_failed,
                 reset_vct=reset_vct)
             conn.endpoint._notify_waiters()
+        if self.tracer is not None:
+            self.tracer.end(self._wire_spans.pop(msg["lease_id"], None),
+                            ts=conn.endpoint.queue.clock(),
+                            args={"status": "released",
+                                  "released": released})
         await conn.send({"type": "release_ok", "seq": seq,
                          "released": released})
 
@@ -759,10 +830,15 @@ class RemoteBrowserClient(BrowserNodeBase):
                  max_frame_bytes: int = MAX_FRAME_BYTES,
                  max_proto: int = PROTOCOL_VERSION,
                  chunk_bytes: int = DEFAULT_CHUNK_BYTES,
-                 max_blob_bytes: int = MAX_BLOB_BYTES):
+                 max_blob_bytes: int = MAX_BLOB_BYTES,
+                 tracer=None):
         # cache/counters/failure-RNG come from the shared browser base;
         # there is no distributor object on this side of the wire
         self._init_browser(None, profile)
+        # optional client-side tracer (in-process tests may share the
+        # server's): records client.execute lanes; independent of the
+        # trace-context echo, which only needs the server to be tracing
+        self.tracer = tracer
         self.host = host
         self.port = port
         self.max_reconnects = max_reconnects
@@ -778,6 +854,10 @@ class RemoteBrowserClient(BrowserNodeBase):
         self.reconnects = 0
         self.leases_taken = 0
         self.deltas_applied = 0            # v2 delta fetches spliced in
+        self.trace_contexts = 0            # grants that carried trace ctx
+        # lease_id -> trace echo to attach to the submit (survives a
+        # reconnect so a resumed submit still closes the server's span)
+        self._trace_echo: dict[int, dict] = {}
         self.bytes_in = 0
         self.bytes_out = 0
         self.member: Optional[int] = None  # endpoint index from hello_ok
@@ -977,15 +1057,27 @@ class RemoteBrowserClient(BrowserNodeBase):
         per-ticket pickled-base64 form.  ``results`` maps str(ticket_id)
         to the RAW result object either way, so a reconnect that
         renegotiates the protocol re-encodes correctly on resume."""
+        # echo trace context only when the grant carried it (server is
+        # tracing, v2): untraced and v1 submits stay byte-identical.
+        # Kept until the submit actually lands, so a resumed re-submit
+        # after a reconnect still closes the server's wire span.
+        extra = {}
+        echo = self._trace_echo.get(lease_id)
+        if echo is not None:
+            extra["trace"] = echo
         if self.proto >= 2:
             manifest, buffer = encode_binary(results)
-            return await self._request(
+            reply = await self._request(
                 {"type": "submit", "lease_id": lease_id,
-                 "encoding": "bin", "manifest": manifest}, blob=buffer)
-        return await self._request(
-            {"type": "submit", "lease_id": lease_id,
-             "results": {tid: encode_payload(r)
-                         for tid, r in results.items()}})
+                 "encoding": "bin", "manifest": manifest, **extra},
+                blob=buffer)
+        else:
+            reply = await self._request(
+                {"type": "submit", "lease_id": lease_id,
+                 "results": {tid: encode_payload(r)
+                             for tid, r in results.items()}, **extra})
+        self._trace_echo.pop(lease_id, None)
+        return reply
 
     async def _one_lease(self) -> bool:
         """One lease round; returns False when the server says the work is
@@ -999,6 +1091,9 @@ class RemoteBrowserClient(BrowserNodeBase):
         if reply.get("done"):
             return False
         batch = LeaseBatch.from_wire(reply, decode_payload)
+        ctx = parse_trace_context(reply.get("trace"))
+        if ctx is not None:
+            self.trace_contexts += 1
         self.leases_taken += 1
         if self.profile.latency:
             await asyncio.sleep(self.profile.latency)
@@ -1012,38 +1107,57 @@ class RemoteBrowserClient(BrowserNodeBase):
             return False
         results: dict[str, Any] = {}       # str(tid) -> raw result object
         failed = False
-        for ticket in batch.tickets:
-            try:
-                task = await self._get_task(ticket.task_name,
-                                            ticket.task_version)
-                static = await self._get_static(task, ticket.task_version)
-                if (self.profile.fail_prob
-                        and self._rand() < self.profile.fail_prob):
-                    raise RuntimeError("simulated browser crash in "
-                                       f"{ticket.task_name}")
-                if self.profile.speed > 0:
-                    await asyncio.sleep(ticket.work / self.profile.speed)
-                results[str(ticket.ticket_id)] = task.run(ticket.args,
-                                                          static)
-                self.executed += 1
-            except (ConnectionError, asyncio.IncompleteReadError, OSError,
-                    ProtocolError):
-                # transport failure mid-lease: park what we finished so
-                # the reconnect path can resume-submit it
-                self._pending = (batch.lease_id, results)
-                raise
-            except Exception:
-                self.errors += 1
-                # park BEFORE the report round-trip: if the connection
-                # drops during it, the finished results must still ride
-                # the reconnect-resume path
-                self._pending = (batch.lease_id, results)
-                await self._request({"type": "error_report",
-                                     "ticket_id": ticket.ticket_id,
-                                     "error": traceback.format_exc()})
-                self._pending = None
-                self._reload()             # paper: reload browser
-                failed = True
+        tr = self.tracer
+        exec_span = None
+        t0 = time.monotonic() if (ctx is not None or tr is not None) else 0.0
+        if tr is not None:
+            exec_span = tr.begin("client.execute", lane=True, cat="client",
+                                 track=f"client:{self.profile.name}",
+                                 args={"lease": batch.lease_id,
+                                       "tickets": len(batch.tickets)})
+        try:
+            for ticket in batch.tickets:
+                try:
+                    task = await self._get_task(ticket.task_name,
+                                                ticket.task_version)
+                    static = await self._get_static(task,
+                                                    ticket.task_version)
+                    if (self.profile.fail_prob
+                            and self._rand() < self.profile.fail_prob):
+                        raise RuntimeError("simulated browser crash in "
+                                           f"{ticket.task_name}")
+                    if self.profile.speed > 0:
+                        await asyncio.sleep(ticket.work
+                                            / self.profile.speed)
+                    results[str(ticket.ticket_id)] = task.run(ticket.args,
+                                                              static)
+                    self.executed += 1
+                except (ConnectionError, asyncio.IncompleteReadError,
+                        OSError, ProtocolError):
+                    # transport failure mid-lease: park what we finished
+                    # so the reconnect path can resume-submit it
+                    self._pending = (batch.lease_id, results)
+                    raise
+                except Exception:
+                    self.errors += 1
+                    # park BEFORE the report round-trip: if the connection
+                    # drops during it, the finished results must still
+                    # ride the reconnect-resume path
+                    self._pending = (batch.lease_id, results)
+                    await self._request({"type": "error_report",
+                                         "ticket_id": ticket.ticket_id,
+                                         "error": traceback.format_exc()})
+                    self._pending = None
+                    self._reload()         # paper: reload browser
+                    failed = True
+        finally:
+            if tr is not None:
+                tr.end(exec_span, args={"executed": len(results),
+                                        "failed": failed})
+        if ctx is not None:
+            self._trace_echo[batch.lease_id] = make_trace_context(
+                lease=batch.lease_id, client=self.profile.name,
+                exec_s=time.monotonic() - t0)
         self._pending = (batch.lease_id, results)
         await self._submit_results(batch.lease_id, results)
         self._pending = None

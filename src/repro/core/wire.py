@@ -44,7 +44,50 @@ __all__ = [
     "ProtocolError", "DeltaApplyError",
     "encode_binary", "decode_binary",
     "flatten_tree", "leaf_equal", "apply_delta",
+    "TRACE_CONTEXT_FIELDS", "make_trace_context", "parse_trace_context",
 ]
+
+#: The optional ``trace`` object carried by ``lease_grant`` and ``submit``
+#: frames (protocol v2, emitted only when the sender has a tracer; spec in
+#: docs/PROTOCOL.md §Trace context).  Field -> accepted wire types.  v1
+#: peers never see the field; tolerant parsers on both sides ignore it.
+TRACE_CONTEXT_FIELDS: Dict[str, tuple] = {
+    "lease": (int,),          # lease id the context rides on
+    "client": (str,),         # client name (echoed on submit)
+    "round": (int, str),      # training-round tag, when a trainer set one
+    "exec_s": (int, float),   # client-measured execute time (submit echo)
+}
+
+
+def make_trace_context(**fields) -> Dict[str, Any]:
+    """Build a wire ``trace`` object from the known fields (None values
+    are dropped).  Unknown field names are a programming error and raise —
+    the *parser* is the tolerant side, not the builder."""
+    out: Dict[str, Any] = {}
+    for k, v in fields.items():
+        if k not in TRACE_CONTEXT_FIELDS:
+            raise ValueError(f"unknown trace-context field {k!r}")
+        if v is None:
+            continue
+        out[k] = v
+    return out
+
+
+def parse_trace_context(obj: Any) -> Optional[Dict[str, Any]]:
+    """Tolerantly parse a peer's ``trace`` object: returns the recognised,
+    correctly-typed fields, or None when ``obj`` is absent or not an
+    object.  Never raises — trace context is observability metadata from
+    an untrusted peer and must not be able to poison a connection (the
+    fuzz tests drive junk through here)."""
+    if not isinstance(obj, dict):
+        return None
+    out: Dict[str, Any] = {}
+    for k, types in TRACE_CONTEXT_FIELDS.items():
+        v = obj.get(k)
+        if isinstance(v, types) and not isinstance(v, bool):
+            out[k] = v
+    return out
+
 
 #: hard ceiling on manifest array count (a manifest is decoded before its
 #: buffer, so the count must be bounded independently of the data).

@@ -1,0 +1,33 @@
+"""Fabric observability: causal ticket tracing + unified metrics.
+
+Two halves, both zero-cost when unused:
+
+  * :mod:`repro.obs.trace` — :class:`Tracer`, a virtual-clock-friendly
+    span recorder for the full ticket lifecycle (enqueue → shard-route →
+    lease → wire transfer → client execute → submit → barrier fold),
+    exporting Chrome trace-event JSON that Perfetto / ``chrome://tracing``
+    loads directly.  Every instrumented constructor takes ``tracer=None``
+    and every call site is guarded by a single ``is not None`` check —
+    the disabled path costs one attribute test.
+  * :mod:`repro.obs.metrics` — :class:`MetricsRegistry` with labelled
+    counters/gauges/histograms under the linted ``subsystem.noun_unit``
+    naming convention, and :mod:`repro.obs.collect` collectors that
+    absorb the fabric's legacy telemetry into it at snapshot time.
+
+See ``docs/ARCHITECTURE.md`` §Observability for the span taxonomy and
+metric catalog.
+"""
+from repro.obs.collect import (collect_edge, collect_fabric,
+                               collect_federation, collect_origin,
+                               collect_queue, collect_transport)
+from repro.obs.metrics import (METRIC_NAME_RE, UNITS, Counter, Gauge,
+                               Histogram, MetricsRegistry,
+                               valid_metric_name)
+from repro.obs.trace import Tracer
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "METRIC_NAME_RE", "MetricsRegistry",
+    "Tracer", "UNITS", "collect_edge", "collect_fabric",
+    "collect_federation", "collect_origin", "collect_queue",
+    "collect_transport", "valid_metric_name",
+]

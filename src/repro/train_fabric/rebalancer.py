@@ -45,13 +45,19 @@ class Rebalancer:
     members that keep having to steal (and off dead members)."""
 
     def __init__(self, federation, *, steal_threshold: int = 4,
-                 cooldown: int = 2):
+                 cooldown: int = 2, metrics=None):
         self.fed = federation
         self.steal_threshold = steal_threshold
         self.cooldown = cooldown
         self._last_steals = {m.index: m.steals for m in federation.members}
         self._since_migration = cooldown       # first window may migrate
         self.history: list[Migration] = []
+        self.metrics = metrics
+        if metrics is not None:
+            self._m_migrations = metrics.counter(
+                "rebalancer.migrations_total",
+                "Home-shard migrations performed by the rebalancer",
+                labels=("reason",))
 
     # -- helpers --------------------------------------------------------------
 
@@ -78,6 +84,8 @@ class Rebalancer:
             return None
         mig = Migration(shard_index, donor, to_member, reason)
         self.history.append(mig)
+        if self.metrics is not None:
+            self._m_migrations.inc(reason=reason)
         return mig
 
     # -- the per-round hook ----------------------------------------------------

@@ -103,7 +103,9 @@ class RoundResult:
     work_arrived: float = 0.0
     work_total: float = 0.0
     duration: float = 0.0           # on the queue's (injectable) clock
+    barrier_wait: float = 0.0       # clock time between K-of-N and close
     migrations: int = 0             # rebalancer moves at this boundary
+    metrics: Optional[dict] = None  # registry snapshot, when trainer has one
     publish_deltas: dict = field(default_factory=dict)
     # per published static: the origin registry's delta view at publish
     # time ({"version", "leaves", "changed", "window"}) — ``changed``
@@ -132,7 +134,7 @@ class FederatedTrainer(RoundDriverLifetime):
 
     def __init__(self, distributor, *, task_name: str = "backbone_shard",
                  barrier_k=None, straggler_policy: str = "wait",
-                 timeout: float = 60.0, rebalancer=None):
+                 timeout: float = 60.0, rebalancer=None, metrics=None):
         if straggler_policy not in STRAGGLER_POLICIES:
             raise KeyError(f"straggler_policy must be one of "
                            f"{STRAGGLER_POLICIES}, got {straggler_policy!r}")
@@ -145,6 +147,23 @@ class FederatedTrainer(RoundDriverLifetime):
         self.rounds = 0
         self.reticketed_total = 0
         self.folded_total = 0
+        self.tracer = getattr(distributor, "tracer", None)
+        self.metrics = metrics
+        if metrics is not None:
+            self._m_duration = metrics.histogram(
+                "round.duration_seconds",
+                "Virtual-clock duration of each closed training round")
+            self._m_barrier = metrics.histogram(
+                "round.barrier_wait_seconds",
+                "Clock time spent waiting between K-of-N and round close")
+            self._m_reticketed = metrics.counter(
+                "round.reticketed_total",
+                "Laggard leases force-released by the reticket policy")
+            self._m_folded = metrics.counter(
+                "round.folded_total",
+                "Straggler shards folded (cancelled) at round close")
+            self._m_timeouts = metrics.counter(
+                "round.timeouts_total", "Training rounds abandoned on timeout")
 
     # -- shard planning --------------------------------------------------------
 
@@ -251,37 +270,79 @@ class FederatedTrainer(RoundDriverLifetime):
         reticketed = 0
         did_reticket = False
         folded: list[int] = []
-        while True:
-            # capture the wake epoch before probing: a submit can only
-            # land at an await point, so a notification can't be missed
-            wake = self.dist._wake_event()
-            done = self.dist.queue.completed_results(tids)
-            if len(done) >= n:
-                break
-            if len(done) >= k and self.straggler_policy != "wait":
-                laggards = [tid for tid in tids if tid not in done]
-                if self.straggler_policy == "fold":
-                    self.dist.queue.cancel(laggards)
-                    self._notify()
-                    done = self.dist.queue.completed_results(tids)
+        tr = self.tracer
+        round_span = None
+        span_status = "ok"
+        if tr is not None:
+            round_span = tr.begin(
+                "round", track="trainer", cat="round", lane=True, ts=t0,
+                args={"round": self.rounds, "shards": n, "barrier_k": k,
+                      "policy": self.straggler_policy})
+        barrier_open: Optional[float] = None   # clock when K-of-N reached
+        try:
+            while True:
+                # capture the wake epoch before probing: a submit can only
+                # land at an await point, so a notification can't be missed
+                wake = self.dist._wake_event()
+                done = self.dist.queue.completed_results(tids)
+                if len(done) >= k and barrier_open is None:
+                    barrier_open = self.dist.queue.clock()
+                    if tr is not None:
+                        tr.instant("round.barrier_open", track="trainer",
+                                   cat="round", ts=barrier_open,
+                                   args={"round": self.rounds,
+                                         "arrived": len(done), "k": k})
+                if len(done) >= n:
                     break
-                if not did_reticket:          # once per round: no thrash
-                    did_reticket = True
-                    reticketed = self._reticket_stragglers(laggards)
-            if (self.dist.queue.clock() > deadline
-                    or time.monotonic() > wall_deadline):
-                # abandon the round cleanly: cancel the stragglers and
-                # prune everything so the queue doesn't keep zombie
-                # tickets leasable (and all_done() poisoned) after the
-                # caller handles the timeout
-                self.dist.queue.cancel(
-                    [tid for tid in tids if tid not in done])
-                self._notify()
-                self.dist.queue.prune(tids)
-                raise TimeoutError(
-                    f"training round {self.rounds} unfinished: "
-                    f"{self.dist.console()}")
-            await self.dist._wait_on(wake, 0.05)
+                if len(done) >= k and self.straggler_policy != "wait":
+                    laggards = [tid for tid in tids if tid not in done]
+                    if self.straggler_policy == "fold":
+                        self.dist.queue.cancel(laggards)
+                        self._notify()
+                        done = self.dist.queue.completed_results(tids)
+                        if tr is not None:
+                            tr.instant(
+                                "round.fold", track="trainer", cat="round",
+                                ts=self.dist.queue.clock(),
+                                args={"round": self.rounds,
+                                      "folded": len(laggards)})
+                        break
+                    if not did_reticket:      # once per round: no thrash
+                        did_reticket = True
+                        reticketed = self._reticket_stragglers(laggards)
+                        if tr is not None:
+                            tr.instant(
+                                "round.reticket", track="trainer",
+                                cat="round", ts=self.dist.queue.clock(),
+                                args={"round": self.rounds,
+                                      "laggards": len(laggards),
+                                      "released": reticketed})
+                if (self.dist.queue.clock() > deadline
+                        or time.monotonic() > wall_deadline):
+                    # abandon the round cleanly: cancel the stragglers and
+                    # prune everything so the queue doesn't keep zombie
+                    # tickets leasable (and all_done() poisoned) after the
+                    # caller handles the timeout
+                    span_status = "timeout"
+                    if self.metrics is not None:
+                        self._m_timeouts.inc()
+                    if tr is not None:
+                        tr.instant("round.timeout", track="trainer",
+                                   cat="round", ts=self.dist.queue.clock(),
+                                   args={"round": self.rounds,
+                                         "arrived": len(done), "n": n})
+                    self.dist.queue.cancel(
+                        [tid for tid in tids if tid not in done])
+                    self._notify()
+                    self.dist.queue.prune(tids)
+                    raise TimeoutError(
+                        f"training round {self.rounds} unfinished: "
+                        f"{self.dist.console()}")
+                await self.dist._wait_on(wake, 0.05)
+        finally:
+            if tr is not None:
+                tr.end(round_span, ts=self.dist.queue.clock(),
+                       args={"status": span_status})
         # forget the finished round so queue scans stay O(one round)
         self.dist.queue.prune(tids)
         results, arrived, stragglers = [], [], []
@@ -296,16 +357,27 @@ class FederatedTrainer(RoundDriverLifetime):
         migrations = 0
         if self.rebalancer is not None:
             migrations = len(self.rebalancer.observe_round())
+        t_close = self.dist.queue.clock()
+        barrier_wait = (t_close - barrier_open
+                        if barrier_open is not None else 0.0)
         out = RoundResult(
             index=self.rounds, results=results, ticket_ids=tids,
             arrived=arrived, stragglers=stragglers, reticketed=reticketed,
             work_arrived=sum(shard_work[p] for p in arrived),
             work_total=float(sum(shard_work)),
-            duration=self.dist.queue.clock() - t0, migrations=migrations,
-            publish_deltas=publish_deltas)
+            duration=t_close - t0, barrier_wait=barrier_wait,
+            migrations=migrations, publish_deltas=publish_deltas)
         self.rounds += 1
         self.reticketed_total += reticketed
         self.folded_total += len(stragglers)
+        if self.metrics is not None:
+            self._m_duration.observe(out.duration)
+            self._m_barrier.observe(barrier_wait)
+            if reticketed:
+                self._m_reticketed.inc(reticketed)
+            if stragglers:
+                self._m_folded.inc(len(stragglers))
+            out.metrics = self.metrics.snapshot()
         return out
 
 

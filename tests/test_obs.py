@@ -1,0 +1,512 @@
+"""Observability-layer tests: tracer span balance (property-tested over
+random queue op sequences), Chrome/Perfetto export format, same-seed
+trace determinism, the metrics registry and its naming convention, the
+metrics-vs-legacy differential checks, trace-context propagation over
+the v2 wire, and the run_until_done stall warning."""
+import asyncio
+import json
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.distributor import (AdaptiveSizer, AsyncDistributor,
+                                    ClientProfile, FixedSizer, TaskDef)
+from repro.core.federation import FederatedDistributor
+from repro.core.tickets import TicketQueue
+from repro.core.transport import (TransportServer, spawn_remote_clients)
+from repro.core.wire import make_trace_context, parse_trace_context
+from repro.obs import (MetricsRegistry, Tracer, collect_fabric,
+                       valid_metric_name)
+from repro.train_fabric import FederatedTrainer
+
+
+def _run(coro):
+    return asyncio.run(coro)
+
+
+class SimClock:
+    """Settable virtual clock (docs/ARCHITECTURE.md §Injectable clock)."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+# module-level so it pickles across the wire
+def _square(x, static):
+    return x * x
+
+
+def make_fed(n_members=2, **kw):
+    kw.setdefault("timeout", 5.0)
+    kw.setdefault("redistribute_min", 0.02)
+    kw.setdefault("sizer", AdaptiveSizer(target_lease_time=0.02, max_size=8))
+    kw.setdefault("watchdog_interval", 0.005)
+    kw.setdefault("grace", 2.0)
+    return FederatedDistributor(n_members, **kw)
+
+
+def _grad_task():
+    def run(args, static):
+        return {"grad": {"w": np.full(2, float(args), np.float32)},
+                "loss": float(args),
+                "round": static["weights"]["round"]}
+    return TaskDef("backbone_shard", run, static_files=("weights",))
+
+
+# ---------------------------------------------------------------------------
+# Tracer core
+# ---------------------------------------------------------------------------
+
+
+def test_tracer_span_schemas_async_lane_instant():
+    clock = SimClock()
+    tr = Tracer(clock=clock)
+    a = tr.begin("lease", track="queue", cat="lease", args={"lease": 1})
+    clock.t = 0.25
+    x = tr.begin("client.execute", track="client:c0", cat="client",
+                 lane=True)
+    clock.t = 1.0
+    tr.end(x, args={"executed": 2})
+    tr.instant("ticket.route", track="queue", cat="ticket",
+               args={"shard": 3})
+    tr.end(a, args={"status": "drained"})
+    assert tr.balanced()
+    evs = tr.events()
+    assert tr.event_count() == len(evs) == 4     # async pair counts twice
+    lane = next(e for e in evs if e["ph"] == "X")
+    assert lane["ts"] == 0.25 and lane["dur"] == 0.75
+    assert lane["args"] == {"executed": 2}
+    b = next(e for e in evs if e["ph"] == "b")
+    e = next(e for e in evs if e["ph"] == "e")
+    assert b["id"] == e["id"]
+    # end-args merge over begin-args on the async begin event
+    assert b["args"] == {"lease": 1, "status": "drained"}
+    inst = next(e for e in evs if e["ph"] == "i")
+    assert inst["args"] == {"shard": 3} and inst["ts"] == 1.0
+
+
+def test_tracer_end_is_exactly_once_and_none_tolerant():
+    tr = Tracer(clock=SimClock())
+    tr.end(None)                                 # pop(key, None) idiom
+    assert tr.balanced()                         # vacuously
+    s = tr.begin("ticket")
+    assert not tr.balanced() and tr.open_spans()[0]["name"] == "ticket"
+    tr.end(s)
+    assert tr.balanced()
+    tr.end(s)                                    # double close
+    assert tr.end_errors == 1 and not tr.balanced()
+
+
+def test_tracer_begin_many_bulk_matches_begin():
+    clock = SimClock()
+    tr = Tracer(clock=clock)
+    sids = tr.begin_many("ticket", [{"ticket": i} for i in range(5)],
+                         track="queue", cat="ticket")
+    assert len(set(sids)) == 5 and tr.spans_opened == 5
+    # bulk ids interleave safely with singles
+    s = tr.begin("lease")
+    assert s not in sids
+    clock.t = 1.0
+    for sid in sids:
+        tr.end(sid)
+    tr.end(s)
+    assert tr.balanced()
+    begins = [e for e in tr.events() if e["ph"] == "b"
+              and e["name"] == "ticket"]
+    assert [e["args"]["ticket"] for e in begins] == list(range(5))
+
+
+def test_chrome_trace_format_is_perfetto_loadable():
+    clock = SimClock()
+    tr = Tracer(clock=clock)
+    s = tr.begin("lease", track="queue", cat="lease")
+    clock.t = 0.5
+    x = tr.begin("client.execute", track="client:c0", cat="client",
+                 lane=True)
+    clock.t = 2.0
+    tr.end(x)
+    tr.instant("federation.steal", track="member0", cat="federation")
+    tr.end(s)
+    trace = tr.chrome_trace()
+    assert trace["displayTimeUnit"] == "ms"
+    evs = trace["traceEvents"]
+    json.dumps(trace)                            # JSON-safe throughout
+    # one thread_name + thread_sort_index metadata pair per track
+    meta = [e for e in evs if e["ph"] == "M"]
+    named = {e["args"]["name"] for e in meta if e["name"] == "thread_name"}
+    assert named == {"queue", "client:c0", "member0"}
+    assert any(e["name"] == "process_name" for e in meta)
+    # timestamps are microseconds; instants carry thread scope
+    lane = next(e for e in evs if e["ph"] == "X")
+    assert lane["ts"] == 500000.0 and lane["dur"] == 1500000.0
+    inst = next(e for e in evs if e["ph"] == "i")
+    assert inst["s"] == "t"
+    # every event lands on a declared track's tid of the single process
+    tids = {e["args"]["name"]: e["tid"] for e in meta
+            if e["name"] == "thread_name"}
+    for e in evs:
+        assert e.get("pid", 1) == 1
+        if e["ph"] != "M":
+            assert e["tid"] in set(tids.values())
+
+
+def test_same_ops_same_virtual_clock_serialize_identically():
+    def run_once() -> str:
+        clock = SimClock()
+        tr = Tracer(clock=clock)
+        q = TicketQueue(timeout=30.0, redistribute_min=0.5, clock=clock,
+                        tracer=tr)
+        tids = q.add_many("t", list(range(8)))
+        b1 = q.lease("a", 3)
+        clock.t = 1.0
+        q.submit_batch(b1.lease_id, {t: t for t in b1.ticket_ids}, "a")
+        b2 = q.lease("b", 4)
+        clock.t = 2.5
+        q.release(b2.lease_id, client_failed=True)
+        clock.t = 3.1
+        b3 = q.lease("a", 8)
+        q.submit_batch(b3.lease_id, {t: -t for t in b3.ticket_ids}, "a")
+        q.cancel(tids)
+        assert q.all_done() and tr.balanced()
+        return tr.to_json()
+
+    assert run_once() == run_once()
+
+
+# ---------------------------------------------------------------------------
+# Property: every queue-lifecycle span closes exactly once
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30)
+@given(st.lists(st.tuples(
+    st.sampled_from(["add", "lease", "submit", "release", "cancel",
+                     "tick"]),
+    st.integers(min_value=0, max_value=5)), min_size=1, max_size=40))
+def test_property_spans_balance_over_random_op_sequences(ops):
+    """Random interleavings of add/lease/submit/release/cancel (with
+    redistribute_min=0, so one ticket can sit in several overlapping
+    leases) must leave the trace balanced once the queue drains: every
+    ticket and lease span closed exactly once, no end on a dead id."""
+    clock = SimClock()
+    tr = Tracer(clock=clock)
+    q = TicketQueue(timeout=30.0, redistribute_min=0.0, clock=clock,
+                    tracer=tr)
+    leases = []
+    for op, k in ops:
+        if op == "add":
+            q.add_many("t", list(range(k + 1)))
+        elif op == "lease":
+            b = q.lease(f"c{k % 3}", k + 1)
+            if b is not None:
+                leases.append(b)
+        elif op == "submit" and leases:
+            b = leases[k % len(leases)]
+            q.submit_batch(b.lease_id,
+                           {t: t for t in b.ticket_ids[:k + 1]}, b.client)
+        elif op == "release" and leases:
+            q.release(leases[k % len(leases)].lease_id,
+                      client_failed=bool(k % 2))
+        elif op == "cancel":
+            q.cancel(list(q._tickets)[:k + 1])
+        elif op == "tick":
+            clock.t += 0.5 * (k + 1)
+    # drain whatever the random walk left behind, as a fold would
+    q.cancel([tid for tid, t in q._tickets.items() if not t.completed])
+    for b in leases:
+        q.release(b.lease_id)
+    assert q.all_done()
+    assert tr.balanced(), (tr.open_spans(), tr.end_errors)
+    assert tr.spans_opened == tr.spans_closed
+    if any(op == "add" for op, _ in ops):
+        assert tr.spans_closed > 0
+
+
+# ---------------------------------------------------------------------------
+# Round engine: traced reticket / fold rounds stay balanced
+# ---------------------------------------------------------------------------
+
+
+async def _traced_round(policy, barrier_k, profiles, metrics=None):
+    tr = Tracer()
+    fed = make_fed(2, n_shards=4, sizer=FixedSizer(1), tracer=tr)
+    tr.clock = fed.queue.clock
+    fed.register_task(_grad_task())
+    fed.spawn_clients(profiles)
+    async with FederatedTrainer(fed, barrier_k=barrier_k,
+                                straggler_policy=policy,
+                                timeout=20.0, metrics=metrics) as t:
+        res = await t.run_round(
+            list(range(6)), shard_work=[1.0] * 6,
+            statics={"weights": {"round": 0}})
+    await fed.shutdown()
+    return res, tr, fed
+
+
+def _names(tr):
+    return {e["name"] for e in tr.events()}
+
+
+def test_traced_reticket_round_balances_and_records_policy_instants():
+    res, tr, _ = _run(_traced_round(
+        "reticket", 5,
+        [ClientProfile(name="fast0", speed=500.0),
+         ClientProfile(name="fast1", speed=500.0),
+         ClientProfile(name="dead-slow", speed=0.5)]))
+    assert res.complete
+    assert tr.balanced(), tr.open_spans()
+    names = _names(tr)
+    assert {"ticket", "lease", "client.execute", "round",
+            "ticket.route", "round.barrier_open",
+            "round.reticket"} <= names
+    # the round lane span closed ok and covers the whole round
+    round_ev = next(e for e in tr.events()
+                    if e["name"] == "round" and e["ph"] == "X")
+    assert round_ev["args"]["status"] == "ok"
+    assert round_ev["dur"] >= res.barrier_wait >= 0.0
+
+
+def test_traced_fold_round_balances_and_cancel_closes_ticket_spans():
+    res, tr, _ = _run(_traced_round(
+        "fold", 5,
+        [ClientProfile(name="fast0", speed=500.0),
+         ClientProfile(name="fast1", speed=500.0),
+         ClientProfile(name="dead-slow", speed=0.5)]))
+    assert len(res.arrived) >= 5
+    assert tr.balanced(), tr.open_spans()
+    if res.stragglers:                  # straggler lost the race: folded
+        assert "round.fold" in _names(tr)
+        cancelled = [e for e in tr.events()
+                     if e["name"] == "ticket" and e["ph"] == "b"
+                     and e["args"].get("status") == "cancelled"]
+        assert len(cancelled) == len(res.stragglers)
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_enforces_naming_and_idempotent_registration():
+    reg = MetricsRegistry()
+    for bad in ("no_subsystem_total", "cache.hits", "cache.hits_pct",
+                "Cache.hits_total", "cache.", "queue.Rate_total"):
+        assert not valid_metric_name(bad)
+        with pytest.raises(ValueError):
+            reg.counter(bad)
+    c = reg.counter("cache.hits_total", labels=("cache",))
+    assert reg.counter("cache.hits_total", labels=("cache",)) is c
+    with pytest.raises(ValueError):                 # kind clash
+        reg.gauge("cache.hits_total", labels=("cache",))
+    with pytest.raises(ValueError):                 # label-set clash
+        reg.counter("cache.hits_total", labels=("other",))
+    with pytest.raises(ValueError):                 # wrong labels at use
+        c.inc(other="x")
+    c.inc(cache="edge0")
+    c.inc(2.0, cache="edge0")
+    assert c.value(cache="edge0") == 3.0
+    c.set_total(7, cache="edge1")
+    c.set_total(7, cache="edge1")                   # collector idempotence
+    assert c.total() == 10.0
+
+
+def test_histogram_buckets_snapshot_and_export():
+    reg = MetricsRegistry()
+    h = reg.histogram("round.duration_seconds", buckets=(0.1, 1.0))
+    h.observe(0.05)
+    h.observe(0.5)
+    h.observe(99.0)
+    assert h.count() == 3 and h.sum() == pytest.approx(99.55)
+    row = reg.snapshot()["round.duration_seconds"]["values"][0]
+    assert row["buckets"] == {"0.1": 1, "1.0": 2, "inf": 3}
+    assert row["count"] == 3
+    rows = reg.export()
+    assert [r["name"] for r in rows] == ["round.duration_seconds"]
+    json.dumps(rows)                                 # BENCH-json safe
+
+
+def test_metrics_registry_values_match_legacy_counters():
+    """Differential check: after a real federated round, the registry's
+    view (via collect_fabric) equals every legacy counter it absorbs —
+    origin download ledger, per-member steals, edge-cache hits, queue
+    lifecycle counts — and re-collection doesn't double-count."""
+    async def go():
+        reg = MetricsRegistry()
+        fed = make_fed(2, n_shards=4)
+        fed.register_task(_grad_task())
+        fed.spawn_clients([ClientProfile(name=f"c{i}", speed=500.0)
+                           for i in range(3)])
+        async with FederatedTrainer(fed, metrics=reg, timeout=20.0) as t:
+            res = await t.run_round(
+                list(range(6)), shard_work=[1.0] * 6,
+                statics={"weights": {"round": 0}})
+        await fed.shutdown()
+        collect_fabric(reg, distributor=fed)
+        return reg, fed, res
+
+    reg, fed, res = _run(go())
+    assert res.complete
+    # trainer-owned histograms landed in the RoundResult snapshot
+    assert res.metrics["round.duration_seconds"]["values"][0]["count"] == 1
+    # the trainer prunes the round's tickets, so the queue counters are
+    # small — the differential contract is equality, whatever the value
+    snap = fed.queue.snapshot()
+    assert reg.get("queue.executed_total").value() == snap["executed"]
+    assert (reg.get("queue.redistributions_total").value()
+            == snap["redistributions"])
+    rate = reg.get("queue.client_rate")
+    assert snap["clients"], "no client ever reported"
+    for client, cs in snap["clients"].items():
+        assert rate.value(client=client) == (cs["rate"] or 0.0) > 0
+    dl = reg.get("origin.downloads_total")
+    assert fed.download_count, "origin ledger unexpectedly empty"
+    for key, n in fed.download_count.items():
+        assert dl.value(key=key) == n
+    steals = reg.get("federation.steals_total")
+    hits = reg.get("cache.hits_total")
+    for m in fed.members:
+        assert steals.value(member=m.index) == m.steals
+        s = m.edge.stats()
+        assert hits.value(cache=s["name"]) == s["hits"]
+    assert reg.get("federation.alive_count").value() == 2
+    # collectors are re-runnable views: same values, not doubled
+    before = reg.snapshot()
+    collect_fabric(reg, distributor=fed)
+    assert reg.snapshot() == before
+
+
+# ---------------------------------------------------------------------------
+# Trace context on the v2 wire
+# ---------------------------------------------------------------------------
+
+
+def test_trace_context_builder_strict_parser_tolerant():
+    assert make_trace_context(lease=3, client="c", round=None) == \
+        {"lease": 3, "client": "c"}
+    with pytest.raises(ValueError):
+        make_trace_context(bogus=1)                  # builder is strict
+    # parser never raises on junk from an untrusted peer
+    assert parse_trace_context(None) is None
+    assert parse_trace_context([1, 2]) is None
+    assert parse_trace_context("x") is None
+    assert parse_trace_context({"lease": True, "client": 7,
+                                "exec_s": "fast", "extra": ()}) == {}
+    assert parse_trace_context(
+        {"lease": 3, "client": "c", "exec_s": 0.25, "round": 2,
+         "junk": 1}) == \
+        {"lease": 3, "client": "c", "exec_s": 0.25, "round": 2}
+
+
+def test_wire_trace_context_rides_v2_and_closes_server_spans():
+    async def go():
+        tr = Tracer()
+        d = AsyncDistributor(
+            timeout=10.0, redistribute_min=0.02,
+            sizer=AdaptiveSizer(target_lease_time=0.05, max_size=8),
+            watchdog_interval=0.01, tracer=tr)
+        tr.clock = d.queue.clock
+        d.register_task(TaskDef("sq", _square))
+        d.add_work("sq", list(range(12)))
+        server = TransportServer(d)
+        addr = await server.start()
+        clients, tasks = spawn_remote_clients(
+            addr, [ClientProfile(name="r0", speed=500.0)])
+        ok = await d.run_until_done(timeout=30.0)
+        await asyncio.gather(*tasks)
+        await server.stop()
+        return ok, tr, clients[0]
+
+    ok, tr, c = _run(go())
+    assert ok
+    # every grant carried trace context; the submit echo closed the
+    # server's wire span with the client-measured execute time
+    assert c.trace_contexts == c.leases_taken > 0
+    assert tr.balanced(), tr.open_spans()
+    wire = [e for e in tr.events()
+            if e["name"] == "wire.lease" and e["ph"] == "X"]
+    assert wire
+    assert all(e["args"]["status"] == "submitted" for e in wire)
+    assert all(e["args"]["exec_s"] >= 0 for e in wire)
+
+
+def test_wire_untraced_grants_carry_no_trace_context():
+    async def go():
+        d = AsyncDistributor(
+            timeout=10.0, redistribute_min=0.02,
+            sizer=AdaptiveSizer(target_lease_time=0.05, max_size=8),
+            watchdog_interval=0.01)
+        d.register_task(TaskDef("sq", _square))
+        d.add_work("sq", list(range(8)))
+        server = TransportServer(d)
+        addr = await server.start()
+        clients, tasks = spawn_remote_clients(
+            addr, [ClientProfile(name="r0", speed=500.0)])
+        ok = await d.run_until_done(timeout=30.0)
+        await asyncio.gather(*tasks)
+        await server.stop()
+        return ok, clients[0]
+
+    ok, c = _run(go())
+    assert ok
+    assert c.trace_contexts == 0 and c.leases_taken > 0
+
+
+# ---------------------------------------------------------------------------
+# run_until_done stall diagnostics (the silent wall-cap fix)
+# ---------------------------------------------------------------------------
+
+
+def test_run_until_done_wall_cap_warns_with_stall_report():
+    clock = SimClock()                    # a wedged virtual clock
+
+    async def go():
+        tr = Tracer(clock=clock)
+        d = AsyncDistributor(timeout=5.0, redistribute_min=0.02,
+                             clock=clock, tracer=tr)
+        d.register_task(TaskDef("sq", _square))
+        d.add_work("sq", [1, 2, 3])
+        d.queue.lease("ghost", 2)         # an in-flight lease to report
+        with pytest.warns(RuntimeWarning,
+                          match="run_until_done gave up"):
+            ok = await d.run_until_done(timeout=100.0, wall_cap=0.2)
+        return ok, d.last_stall_report, tr
+
+    ok, report, tr = _run(go())
+    assert ok is False
+    assert report["reason"] == "wall_cap"
+    assert report["snapshot"]["tickets"] == 3
+    assert report["snapshot"]["executed"] == 0
+    assert [ls["client"] for ls in report["outstanding_leases"]] == ["ghost"]
+    assert "ghost" in report["client_rates"]
+    json.dumps(report)                    # structured, log-shippable
+    # the give-up is also on the trace, where the timeline shows context
+    stall = [e for e in tr.events() if e["name"] == "distributor.stall"]
+    assert len(stall) == 1 and stall[0]["args"]["reason"] == "wall_cap"
+
+
+def test_run_until_done_virtual_timeout_warns_with_timeout_reason():
+    class SteppingClock:
+        def __init__(self):
+            self.t = 0.0
+
+        def __call__(self):
+            self.t += 1.0
+            return self.t
+
+    async def go():
+        d = AsyncDistributor(timeout=5.0, redistribute_min=0.02,
+                             clock=SteppingClock())
+        d.register_task(TaskDef("sq", _square))
+        d.add_work("sq", [1])
+        with pytest.warns(RuntimeWarning, match="timeout expired"):
+            ok = await d.run_until_done(timeout=5.0)
+        return ok, d.last_stall_report
+
+    ok, report = _run(go())
+    assert ok is False and report["reason"] == "timeout"
+    assert report["virtual_clock"] > 5.0

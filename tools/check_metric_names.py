@@ -1,0 +1,100 @@
+#!/usr/bin/env python
+"""Lint metric names registered anywhere under ``src/``.
+
+Every ``registry.counter("...")`` / ``.gauge("...")`` / ``.histogram
+("...")`` registration (and the ``reg.counter(f"cache.{field}_total")``
+style in collectors) must follow the fabric's naming convention::
+
+    subsystem.noun_unit        e.g.  cache.hits_total
+                                     round.barrier_wait_seconds
+
+The authoritative pattern lives in ``repro.obs.metrics.METRIC_NAME_RE``
+(and is also enforced at runtime, at registration) — this lint imports
+it rather than re-stating it, so the two can't drift.  The lint exists
+because runtime enforcement only fires on code paths a test actually
+runs; the lint reads the source, so a metric registered on a rare error
+path is still checked in CI.
+
+Usage:
+  python tools/check_metric_names.py [src_root]    # default: src
+
+Exit status is nonzero if any registration violates the convention;
+each is reported as ``file:line: name — reason``.  f-string
+registrations are checked with their ``{...}`` placeholders substituted
+by a representative token (placeholders may not span the subsystem dot
+or the unit suffix).
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.obs.metrics import METRIC_NAME_RE, UNITS  # noqa: E402
+
+# .counter("name" / .gauge('name' / .histogram("name", plus f-string forms
+_REG = re.compile(
+    r"\.(counter|gauge|histogram)\(\s*(f?)([\"'])([^\"']+)\3")
+_PLACEHOLDER = re.compile(r"\{[^{}]*\}")
+
+
+def check_name(raw: str, is_fstring: bool) -> str | None:
+    """None if ``raw`` is a valid metric name, else the reason."""
+    name = raw
+    if is_fstring:
+        # substitute each placeholder with a representative token; a
+        # placeholder may not *be* the subsystem or the unit, so "x"
+        # keeps the static skeleton checkable
+        name = _PLACEHOLDER.sub("x", raw)
+    if METRIC_NAME_RE.match(name):
+        return None
+    if "." not in name:
+        return "missing 'subsystem.' prefix"
+    tail = name.rsplit("_", 1)[-1]
+    if tail not in UNITS:
+        return (f"unit suffix {tail!r} not one of {'/'.join(UNITS)}")
+    return "does not match subsystem.noun_unit"
+
+
+def check_file(path: str) -> list[str]:
+    problems = []
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            for m in _REG.finditer(line):
+                reason = check_name(m.group(4), m.group(2) == "f")
+                if reason:
+                    problems.append(
+                        f"{path}:{lineno}: {m.group(4)} — {reason}")
+    return problems
+
+
+def find_sources(root: str) -> list[str]:
+    out = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames
+                       if not d.startswith(".") and d != "__pycache__"]
+        out.extend(os.path.join(dirpath, f) for f in filenames
+                   if f.endswith(".py"))
+    return sorted(out)
+
+
+def main() -> int:
+    root = sys.argv[1] if len(sys.argv) > 1 else "src"
+    files = find_sources(root)
+    problems = []
+    registrations = 0
+    for path in files:
+        with open(path, encoding="utf-8") as f:
+            registrations += sum(1 for line in f for _ in _REG.finditer(line))
+        problems.extend(check_file(path))
+    for p in problems:
+        print(p)
+    print(f"checked {len(files)} source files, {registrations} metric "
+          f"registration(s): {len(problems)} violation(s)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
