@@ -1,6 +1,6 @@
 """Training-fabric benchmark: federation-scale §4.1 rounds end to end.
 
-Four cells, mirroring the acceptance bars:
+Five cells, mirroring the acceptance bars:
 
   * ``throughput`` — discrete-event simulation (virtual clock, fully
     deterministic) of round-based data-parallel SGD over the REAL
@@ -19,6 +19,11 @@ Four cells, mirroring the acceptance bars:
     complete every round with exact math (trajectory still matches
     in-process) and ``fold`` must close every round at the K-of-N
     barrier; zero stale-weight executions in both.
+  * ``paper_cnn`` — the paper's CNN as the round workload: each ticket
+    computes a real conv→pool→softmax gradient shard (``CnnGradShard``
+    on the FABRIC_CNN config) and the server aggregates through the
+    fused Pallas server step; the fused trajectory must match the
+    tree_map reference's and the loss must actually fall.
   * ``resume`` — kill-and-resume from a round-boundary checkpoint
     (paper JSON+base64 format) reproduces the unkilled federated loss
     trajectory.
@@ -39,17 +44,22 @@ import tempfile
 
 sys.path.insert(0, "src")
 
+import jax
 import numpy as np
 
+from repro.configs.paper_cnn import FABRIC_CNN
 from repro.core.distributor import (AdaptiveSizer, BrowserNodeBase,
                                     ClientProfile, FixedSizer, TaskDef)
 from repro.core.federation import FederatedDistributor
 from repro.core.split_parallel import TrainState, weighted_grad_mean
 from repro.core.tickets import CANCELLED
+from repro.models.cnn import CnnGradShard, init_cnn
 from repro.optim import adagrad
+from repro.sharding.spec import values_tree
 from repro.train_fabric import (FederatedTrainer, FederatedTrainingLoop,
-                                Rebalancer, affinity_placement,
-                                checkpoint_path, load_round_checkpoint)
+                                FusedServerStep, Rebalancer, TreeServerStep,
+                                affinity_placement, checkpoint_path,
+                                load_round_checkpoint, param_count)
 
 # -- the workload: data-parallel linear regression --------------------------
 # Tiny on purpose: the benchmark measures the FABRIC (rounds, barriers,
@@ -424,6 +434,76 @@ def cell_faults(rounds: int) -> dict:
     return out
 
 
+# ---------------------------------------------------------------------------
+# Cell 5: the paper's CNN as the round workload (real model on the fabric)
+# ---------------------------------------------------------------------------
+
+CNN_ROWS = 128     # synthetic clustered-images rows sharded per round
+CNN_LR = 0.05
+
+
+async def train_cnn_async(*, rounds: int, server_step: str,
+                          n_members: int = 2, n_shards_round: int = 4
+                          ) -> dict:
+    """Federated rounds whose ticket work is the paper CNN's actual
+    conv→pool→softmax gradient (``CnnGradShard``), aggregated through a
+    selectable :class:`ServerStep` implementation."""
+    fed = FederatedDistributor(
+        n_members, n_shards=2 * n_members, timeout=20.0,
+        redistribute_min=0.02, sizer=FixedSizer(1),
+        watchdog_interval=0.01, grace=2.0, project_name="FabricCNN")
+    fed.register_task(TaskDef(
+        "cnn_grad_shard", CnnGradShard(FABRIC_CNN, n_rows=CNN_ROWS),
+        static_files=("weights",)))
+    fed.spawn_clients(_bimodal_profiles(n_members, n_members))
+    opt = adagrad(CNN_LR)
+    params = jax.device_get(
+        values_tree(init_cnn(jax.random.PRNGKey(0), FABRIC_CNN)))
+    state = TrainState(params=params, head={}, head_stale={},
+                       opt_state=opt.init(params), head_opt_state={},
+                       prev_features=(), prev_labels=(), prev_mask=(),
+                       step=np.zeros((), np.int32))
+    step_impl = (FusedServerStep(opt, lr=CNN_LR)
+                 if server_step == "fused" else TreeServerStep(opt))
+    bounds = np.linspace(0, CNN_ROWS, n_shards_round + 1).astype(int)
+    args = [(int(lo), int(hi)) for lo, hi in zip(bounds[:-1], bounds[1:])]
+    work = [float(hi - lo) for lo, hi in args]
+    trainer = FederatedTrainer(fed, task_name="cnn_grad_shard",
+                               timeout=30.0)
+    loop = FederatedTrainingLoop(trainer, opt, state,
+                                 server_step=step_impl)
+    try:
+        async with trainer:
+            for _ in range(rounds):
+                await loop.run_round(args, work)
+    finally:
+        await trainer.aclose()
+        await fed.shutdown()
+    return {"losses": loop.losses,
+            "completed_rounds": loop.round_index,
+            "stale_executions": loop.stale_executions,
+            "model_params": param_count(loop.state.params)}
+
+
+def cell_paper_cnn(rounds: int) -> dict:
+    """Real paper-CNN rounds through the asyncio fabric: the fused
+    server step's trajectory vs the tree_map reference's (bit-equal
+    aggregation → identical losses), and actual convergence."""
+    fused = asyncio.run(train_cnn_async(rounds=rounds,
+                                        server_step="fused"))
+    tree = asyncio.run(train_cnn_async(rounds=rounds, server_step="tree"))
+    delta = max(abs(a - b) for a, b in zip(fused["losses"],
+                                           tree["losses"]))
+    return {"rounds": rounds, "model": FABRIC_CNN.name,
+            "model_params": fused["model_params"],
+            "loss_first": fused["losses"][0],
+            "loss_final": fused["losses"][-1],
+            "max_loss_delta_fused_vs_tree": float(delta),
+            "stale_executions": (fused["stale_executions"]
+                                 + tree["stale_executions"]),
+            "completed_rounds": fused["completed_rounds"]}
+
+
 def cell_resume(rounds: int, kill_at: int) -> dict:
     with tempfile.TemporaryDirectory() as ckdir:
         baseline = asyncio.run(train_async(
@@ -454,6 +534,7 @@ def run_sweep(*, smoke: bool = False) -> dict:
         "throughput": cell_throughput(rounds),
         "equivalence": cell_equivalence(rounds),
         "faults": cell_faults(rounds),
+        "paper_cnn": cell_paper_cnn(4 if smoke else 6),
         "resume": cell_resume(rounds, kill_at=rounds // 2),
         "workload": {"rows": N_ROWS, "d_in": D_IN, "lr": LR,
                      "sim_clients": N_SIM_CLIENTS,
@@ -492,6 +573,14 @@ def check(results: dict) -> None:
     assert fo["folded"] > 0, \
         f"the fold policy must actually fold the straggler: {fo}"
 
+    pc = results["paper_cnn"]
+    assert pc["completed_rounds"] == pc["rounds"], pc
+    assert pc["stale_executions"] == 0, pc
+    assert pc["max_loss_delta_fused_vs_tree"] < 1e-6, \
+        f"fused server step must track the tree_map reference: {pc}"
+    assert pc["loss_final"] < pc["loss_first"], \
+        f"the paper CNN must actually converge through the fabric: {pc}"
+
     rs = results["resume"]
     assert rs["max_loss_delta"] < 1e-6, \
         f"resume must reproduce the unkilled trajectory: {rs}"
@@ -528,6 +617,11 @@ def main():
     print(f"faults/fold: {fo['completed_rounds']} rounds, "
           f"{fo['folded']} straggler shards folded at the K-of-N barrier, "
           f"{fo['stale_executions']} stale")
+    pc = results["paper_cnn"]
+    print(f"paper-cnn: {pc['completed_rounds']} rounds of "
+          f"{pc['model']} ({pc['model_params']} params), loss "
+          f"{pc['loss_first']:.4f} -> {pc['loss_final']:.4f}, fused vs "
+          f"tree_map max |Δloss| {pc['max_loss_delta_fused_vs_tree']:.2e}")
     rs = results["resume"]
     print(f"resume: from round {rs['resumed_from_round']} checkpoint, "
           f"max |Δloss| vs unkilled = {rs['max_loss_delta']:.2e}")

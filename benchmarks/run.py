@@ -5,13 +5,14 @@ Prints ``name,us_per_call,derived`` CSV rows (plus the detailed records) so
 results are machine-comparable across runs.  Scaled-down sizes run inside a
 CPU budget; pass --full for paper-scale settings.
 
-The ``scheduler``, ``federation``, ``cache``, ``transport`` and
-``training`` entries additionally write machine-readable
-``BENCH_scheduler.json`` / ``BENCH_federation.json`` /
+The ``scheduler``, ``federation``, ``cache``, ``transport``,
+``training`` and ``server_step`` entries additionally write
+machine-readable ``BENCH_scheduler.json`` / ``BENCH_federation.json`` /
 ``BENCH_cache.json`` / ``BENCH_transport.json`` / ``BENCH_training.json``
-(throughput, speedup, stale-serve, egress and loss-equivalence numbers)
-so the perf trajectory is tracked across PRs — CI uploads them as
-artifacts.  ``--out-dir`` relocates them.
+/ ``BENCH_server_step.json`` (throughput, speedup, stale-serve, egress,
+loss-equivalence and kernel-fusion numbers) so the perf trajectory is
+tracked across PRs — CI uploads them as artifacts.  ``--out-dir``
+relocates them.
 
 A benchmark that raises is reported with its full traceback and the run
 exits nonzero; JSON files are written atomically (temp file + rename)
@@ -80,11 +81,15 @@ def bench_fig3(full: bool):
 
     t0 = time.perf_counter()
     rows = fig3_convergence.run(batches=200 if full else 40)
+    fabric = fig3_convergence.run_fabric(rounds=8 if full else 5)
     us = (time.perf_counter() - t0) * 1e6
     last = {r["optimizer"]: r["error_rate"] for r in rows}
     for r in rows:
         print(f"  {r}")
-    _csv("fig3_convergence", us, f"final_err={last}")
+    print(f"  fabric: {fabric}")
+    _csv("fig3_convergence", us,
+         f"final_err={last}|"
+         f"fabric_delta={fabric['max_loss_delta_vs_in_process']:.1e}")
     return rows
 
 
@@ -220,6 +225,27 @@ def bench_training(full: bool):
     return results
 
 
+def bench_server_step(full: bool):
+    """Fused server-step kernel vs the seed's unfused tree_map pipeline
+    (wall clock); writes BENCH_server_step.json with the three medians
+    and the fused/baseline ratio, gated against the checked-in
+    benchmarks/baselines/server_step_baseline.json with x1.2 headroom
+    (plus the interpret-mode bit-equivalence bar)."""
+    from benchmarks import server_step_fusion
+
+    t0 = time.perf_counter()
+    results = server_step_fusion.run(trials=50 if full else 20)
+    us = (time.perf_counter() - t0) * 1e6
+    # acceptance bars BEFORE writing (a regressed ratio must not leave a
+    # fresh-looking BENCH_server_step.json behind)
+    server_step_fusion.check(results)
+    _write_json("server_step", results)
+    _csv("server_step_fusion", us,
+         f"fused_over_tree={results['fused_over_tree_ratio']}|"
+         f"mode={results['fused_mode']}")
+    return results
+
+
 def bench_obs(full: bool):
     """Observability layer: trace determinism, span balance, and the
     tracing-overhead gate; writes BENCH_obs.json with the overhead ratio
@@ -279,6 +305,7 @@ BENCHES = {
     "cache": bench_cache,
     "transport": bench_transport,
     "training": bench_training,
+    "server_step": bench_server_step,
     "obs": bench_obs,
 }
 

@@ -332,14 +332,15 @@ async def demo_training(checkpoint_dir, trace_path=None):
     from repro.obs import MetricsRegistry, Tracer, collect_fabric
     from repro.optim import adagrad
     from repro.train_fabric import (FederatedTrainer, FederatedTrainingLoop,
-                                    Rebalancer, checkpoint_path,
-                                    load_round_checkpoint)
+                                    FusedServerStep, Rebalancer,
+                                    checkpoint_path, load_round_checkpoint)
 
     rng = np.random.default_rng(3)
     X = rng.normal(size=(96, 6)).astype(np.float32)
     w_true = rng.normal(size=(6,)).astype(np.float32)
     y = (X @ w_true).astype(np.float32)
-    opt = adagrad(0.3)
+    lr = 0.3
+    opt = adagrad(lr)
 
     async def run(rounds, resume_from=None, kill_at=None, tracer=None,
                   metrics=None):
@@ -374,9 +375,12 @@ async def demo_training(checkpoint_dir, trace_path=None):
             rebalancer=Rebalancer(fed, steal_threshold=3, cooldown=1,
                                   metrics=metrics),
             metrics=metrics)
-        loop = FederatedTrainingLoop(trainer, opt, state,
-                                     round_index=start,
-                                     checkpoint_dir=checkpoint_dir)
+        loop = FederatedTrainingLoop(
+            trainer, opt, state, round_index=start,
+            checkpoint_dir=checkpoint_dir,
+            # the fused server step: clip + weighted mean + modified
+            # AdaGrad in one pass (bit-equal to the tree_map reference)
+            server_step=FusedServerStep(opt, lr=lr))
         shard_plans = []
         async with trainer:
             for _ in range(start, rounds):
@@ -427,11 +431,17 @@ async def demo_training(checkpoint_dir, trace_path=None):
         print(f"  trace: {tracer.event_count()} events "
               f"({tracer.spans_closed} spans, all balanced) -> {trace_path} "
               f"(open in ui.perfetto.dev)")
+        step_h = metrics.get("round.server_step_seconds")
         print(f"  metrics: {len(metrics.names())} series — e.g. "
               f"federation.steals_total={steals:.0f} "
               f"rebalancer.migrations_total={migs:.0f} "
               f"round.barrier_wait_seconds count="
               f"{metrics.get('round.barrier_wait_seconds').count()}")
+        print(f"  fused server step: "
+              f"{metrics.get('round.model_params_count').value():.0f} "
+              f"params updated {step_h.count()}x, "
+              f"{1e3 * step_h.sum() / max(step_h.count(), 1):.2f} ms/round "
+              f"(round.server_step_seconds)")
 
     # kill-and-resume: a fresh federation continues from the round-4
     # checkpoint and lands on the identical loss trajectory

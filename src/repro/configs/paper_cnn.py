@@ -46,6 +46,14 @@ FIG4_CNN = CNNConfig(
     fc_hidden=(512,),   # heavier server-side classifier (distributed bench)
 )
 
+# Fabric cell net (benchmarks/federated_training.py, tests): the Fig-2
+# family scaled down so a real conv→pool→softmax gradient shard runs in
+# a CI-sized federated round — still every layer kind of the paper net.
+FABRIC_CNN = CNNConfig(
+    name="paper-cnn-fabric", image_size=16,
+    convs=(ConvSpec(8), ConvSpec(8)), batch_size=32,
+)
+
 
 def smoke_config() -> CNNConfig:
     return CNNConfig(name="paper-cnn-smoke", image_size=16,

@@ -1,15 +1,16 @@
-"""Pure-jnp oracle for the fused modified-AdaGrad kernel."""
+"""Pure-jnp oracle for the fused modified-AdaGrad kernel.
+
+The oracle IS the optimizer's own per-leaf update
+(``repro.optim.adagrad_math.adagrad_leaf_update``) — one shared pure
+function, so the kernel reference and ``repro.optim.optimizers.adagrad``
+cannot drift.
+"""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+from repro.optim.adagrad_math import adagrad_leaf_update
 
 
 def adagrad_ref(p, g, acc, *, lr: float, beta: float = 1.0,
                 weight_decay: float = 0.0):
-    gf = g.astype(jnp.float32)
-    if weight_decay:
-        gf = gf + weight_decay * p.astype(jnp.float32)
-    a = acc + jnp.square(gf)
-    step = lr * gf * jax.lax.rsqrt(beta + a)
-    return (p.astype(jnp.float32) - step).astype(p.dtype), a
+    return adagrad_leaf_update(p, g, acc, lr=lr, beta=beta,
+                               weight_decay=weight_decay)

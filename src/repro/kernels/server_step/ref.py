@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the fused federated server-step kernel.
+
+The oracle composes the two pieces the kernel fuses, in the exact
+operation order the kernel uses: a left-to-right f32 accumulation of
+``coeff_m · g_m`` (per-member clip scale × work weight), then the shared
+modified-AdaGrad per-leaf update
+(``repro.optim.adagrad_math.adagrad_leaf_update`` — the same function
+the pure-pytree optimizer runs).  Interpret-mode kernel output is
+bit-equal to this oracle; it also doubles as the jit-fused XLA fallback
+on hosts without a TPU (see ``ops.server_step_update``).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.optim.adagrad_math import adagrad_leaf_update
+
+
+def weighted_member_sum(g_stack, coeffs):
+    """Σ_m coeffs[m] · g_stack[m] in f32, accumulated left to right —
+    the kernel's (and the tree_map reference's) exact order."""
+    g = coeffs[0] * g_stack[0].astype(jnp.float32)
+    for m in range(1, g_stack.shape[0]):
+        g = g + coeffs[m] * g_stack[m].astype(jnp.float32)
+    return g
+
+
+def server_step_ref(p, g_stack, acc, coeffs, *, lr: float, beta: float = 1.0,
+                    weight_decay: float = 0.0):
+    """``p``/``acc``: any shape; ``g_stack``: (M, *p.shape); ``coeffs``:
+    (M,).  Returns (p', acc') — p' in p.dtype, acc' f32."""
+    g = weighted_member_sum(g_stack, jnp.asarray(coeffs, jnp.float32))
+    return adagrad_leaf_update(p, g, acc, lr=lr, beta=beta,
+                               weight_decay=weight_decay)

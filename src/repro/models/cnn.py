@@ -4,14 +4,25 @@ a fully-connected softmax classifier (Figures 2/4 of the paper).
 Exposed as two halves — ``conv_features`` (the "client" part under the
 paper's distribution algorithm) and ``fc_logits`` (the "server" part) — so
 ``core/split_parallel.py`` can train them with the paper's concurrency.
+
+Also exposed as **fabric ticket work**: :class:`CnnGradShard` is a
+picklable task callable (registrable under a ``TaskDef``, shippable to
+remote browser clients over the wire protocol) that computes the CNN's
+loss + gradients for one row slice of a deterministic synthetic dataset
+against the round's served weights — the payload that makes
+``FederatedTrainingLoop`` rounds train the *paper's model* rather than a
+toy regression (see ``benchmarks/federated_training.py``).
 """
 from __future__ import annotations
 
+import functools
 import math
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 
+from repro.configs.paper_cnn import CNNConfig
 from repro.sharding.spec import Param, param, shard_act
 
 
@@ -77,3 +88,65 @@ def nll_loss(logits, labels):
 
 def error_rate(logits, labels):
     return jnp.mean((jnp.argmax(logits, -1) != labels).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# The CNN as fabric ticket work
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def loss_and_grads(ccfg: CNNConfig):
+    """Jitted ``(params, images, labels) -> (mean NLL, grad pytree)`` for
+    plain (unboxed) params, cached per config so every shard of a round
+    — and every round — reuses one compiled executable."""
+
+    @jax.jit
+    def f(params, images, labels):
+        def loss_fn(p):
+            return nll_loss(forward(p, ccfg, images), labels)
+        return jax.value_and_grad(loss_fn)(params)
+
+    return f
+
+
+@functools.lru_cache(maxsize=None)
+def shard_dataset(ccfg: CNNConfig, n_rows: int, seed: int):
+    """The deterministic synthetic classification set the fabric shards
+    by row slice (``repro.data.clustered_images`` — learnable, so the
+    round loss actually converges).  Cached: every shard of every round
+    slices the same arrays."""
+    from repro.data import clustered_images
+    return clustered_images(n_rows, image_size=ccfg.image_size,
+                            channels=ccfg.in_channels, seed=seed)
+
+
+@dataclass(frozen=True)
+class CnnGradShard:
+    """Picklable fabric task: paper-CNN loss + gradients of one row slice.
+
+    ``args`` is a ``(lo, hi)`` row slice of :func:`shard_dataset`;
+    ``static[weights_key]`` is the round's versioned weight publish
+    ``{"round": t, "params": ...}``.  Returns the training-loop contract
+    ``{"grad", "loss", "round"}`` with gradients device_get'ed to plain
+    numpy so the result pickles over the v2 wire protocol.
+
+    A frozen dataclass of hashable config rather than a closure: remote
+    clients receive the task by pickle, and the jitted grad function is
+    looked up per-process from the :func:`loss_and_grads` cache.
+    """
+
+    ccfg: CNNConfig
+    n_rows: int = 512
+    seed: int = 0
+    weights_key: str = "weights"
+
+    def __call__(self, args, static):
+        lo, hi = args
+        images, labels = shard_dataset(self.ccfg, self.n_rows, self.seed)
+        served = static[self.weights_key]
+        loss, grads = loss_and_grads(self.ccfg)(
+            served["params"], jnp.asarray(images[lo:hi]),
+            jnp.asarray(labels[lo:hi]))
+        return {"grad": jax.device_get(grads), "loss": float(loss),
+                "round": served.get("round", -1)}

@@ -1,3 +1,4 @@
+from repro.optim.adagrad_math import adagrad_leaf_update
 from repro.optim.optimizers import (
     Optimizer,
     adagrad,
@@ -6,4 +7,5 @@ from repro.optim.optimizers import (
     sgd,
 )
 
-__all__ = ["Optimizer", "adagrad", "adamw", "get_optimizer", "sgd"]
+__all__ = ["Optimizer", "adagrad", "adagrad_leaf_update", "adamw",
+           "get_optimizer", "sgd"]

@@ -1,0 +1,39 @@
+"""The paper's modified-AdaGrad update as ONE pure per-leaf function.
+
+    acc' = acc + g²;   θ' = θ − α · g / sqrt(β + acc')
+
+Both the pure-pytree optimizer (``repro.optim.optimizers.adagrad``) and
+the Pallas kernel oracle (``repro.kernels.adagrad.ref``) import this —
+the kernel reference and the optimizer are the same math by
+construction and cannot drift.  The fused server-step kernel
+(``repro.kernels.server_step``) mirrors the identical operation order so
+its interpret-mode output is bit-equal to this function applied after
+the work-weighted gradient mean.
+
+All arithmetic is float32 regardless of the parameter dtype (the
+accumulator is always f32 state); the returned parameter is cast back
+to the input parameter's dtype as the final operation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adagrad_leaf_update(p, g, acc, *, lr: float, beta: float = 1.0,
+                        weight_decay: float = 0.0):
+    """One leaf's modified-AdaGrad step: ``(p, g, acc) -> (p', acc')``.
+
+    ``p``/``g`` may be any float dtype; ``acc`` must be f32.  The exact
+    f32 operation order here is the contract the fused kernels are
+    bit-equal to — change it only together with them.
+    """
+    gf = g.astype(jnp.float32)
+    if weight_decay:
+        gf = gf + weight_decay * p.astype(jnp.float32)
+    a = acc + jnp.square(gf)
+    step = lr * gf * jax.lax.rsqrt(beta + a)
+    return (p.astype(jnp.float32) - step).astype(p.dtype), a
+
+
+__all__ = ["adagrad_leaf_update"]

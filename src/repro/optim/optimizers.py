@@ -16,6 +16,8 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.optim.adagrad_math import adagrad_leaf_update
+
 
 @dataclass(frozen=True)
 class Optimizer:
@@ -52,12 +54,8 @@ def adagrad(lr: float, beta: float = 1.0, weight_decay: float = 0.0,
                     {"acc": jax.tree_util.tree_unflatten(tdef, new_acc)})
 
         def one(p, g, a):
-            gf = g.astype(jnp.float32)
-            if weight_decay:
-                gf = gf + weight_decay * p.astype(jnp.float32)
-            a = a + jnp.square(gf)
-            step = lr * gf * jax.lax.rsqrt(beta + a)
-            return (p.astype(jnp.float32) - step).astype(p.dtype), a
+            return adagrad_leaf_update(p, g, a, lr=lr, beta=beta,
+                                       weight_decay=weight_decay)
 
         out = _tmap(one, params, grads, state["acc"])
         new_params = _tmap(lambda o: o[0], out,

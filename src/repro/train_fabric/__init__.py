@@ -18,16 +18,22 @@ from repro.train_fabric.checkpointing import (CHECKPOINT_FORMAT,
                                               state_from_tree, state_to_tree)
 from repro.train_fabric.rebalancer import Migration, Rebalancer
 from repro.train_fabric.round_engine import (STRAGGLER_POLICIES,
+                                             EmptyRoundError,
                                              FederatedTrainer,
                                              FederatedTrainingLoop,
                                              RoundResult,
                                              affinity_placement,
                                              resolve_barrier_k)
+from repro.train_fabric.server_step import (FusedServerStep, ServerStep,
+                                            TreeServerStep, member_coeffs,
+                                            member_grad_norms, param_count)
 
 __all__ = [
-    "CHECKPOINT_FORMAT", "FederatedTrainer", "FederatedTrainingLoop",
-    "Migration", "Rebalancer", "RoundResult", "STRAGGLER_POLICIES",
+    "CHECKPOINT_FORMAT", "EmptyRoundError", "FederatedTrainer",
+    "FederatedTrainingLoop", "FusedServerStep", "Migration", "Rebalancer",
+    "RoundResult", "STRAGGLER_POLICIES", "ServerStep", "TreeServerStep",
     "affinity_placement", "checkpoint_path", "latest_checkpoint",
-    "load_round_checkpoint", "resolve_barrier_k", "save_round_checkpoint",
+    "load_round_checkpoint", "member_coeffs", "member_grad_norms",
+    "param_count", "resolve_barrier_k", "save_round_checkpoint",
     "state_from_tree", "state_to_tree",
 ]

@@ -45,13 +45,33 @@ from typing import Any, Optional
 import jax.numpy as jnp
 
 from repro.core.split_parallel import (RoundDriverLifetime, TrainState,
-                                       adaptive_shard_sizes,
-                                       weighted_grad_mean)
+                                       adaptive_shard_sizes)
 from repro.core.tickets import CANCELLED
 from repro.train_fabric.checkpointing import (checkpoint_path,
                                               save_round_checkpoint)
+from repro.train_fabric.server_step import (ServerStep, TreeServerStep,
+                                            param_count)
 
 STRAGGLER_POLICIES = ("wait", "reticket", "fold")
+
+
+class EmptyRoundError(RuntimeError):
+    """A round closed with ZERO arrived gradients (every shard folded or
+    timed out), so there is nothing to aggregate: applying an optimizer
+    step here would silently train on garbage (a 0/0 weighted mean).
+    Carries the offending :class:`RoundResult` so callers can inspect
+    which shards straggled and decide whether to retry the round or
+    abort; the loop leaves its state untouched (same ``round_index``,
+    same params), so a retry is just calling ``run_round`` again."""
+
+    def __init__(self, round_index: int, result: "RoundResult"):
+        super().__init__(
+            f"training round {round_index} closed with 0 of "
+            f"{len(result.ticket_ids)} shard gradients arrived "
+            f"({len(result.stragglers)} straggler(s) folded) — nothing "
+            f"to aggregate")
+        self.round_index = round_index
+        self.result = result
 
 
 def resolve_barrier_k(n: int, barrier_k) -> int:
@@ -404,7 +424,8 @@ class FederatedTrainingLoop:
                  loss_key: str = "loss", round_index: int = 0,
                  checkpoint_dir: Optional[str] = None,
                  checkpoint_every: int = 1,
-                 extra: Optional[dict] = None):
+                 extra: Optional[dict] = None,
+                 server_step: Optional[ServerStep] = None):
         self.trainer = trainer
         self.opt = opt
         self.state = state
@@ -417,6 +438,17 @@ class FederatedTrainingLoop:
         self.extra = dict(extra or {})
         self.losses: list[float] = []
         self.stale_executions = 0
+        self.server_step = (server_step if server_step is not None
+                            else TreeServerStep(opt))
+        self._m_step_s = self._m_params = None
+        if trainer.metrics is not None:
+            self._m_step_s = trainer.metrics.histogram(
+                "round.server_step_seconds",
+                "Wall time of the server-side aggregate+update step")
+            self._m_params = trainer.metrics.gauge(
+                "round.model_params_count",
+                "Scalar parameters in the model being trained")
+            self._m_params.set(param_count(state.params))
 
     async def run_round(self, shard_args, shard_work) -> RoundResult:
         """One SGD round: publish → fan out → aggregate → update →
@@ -427,13 +459,24 @@ class FederatedTrainingLoop:
             statics={self.weights_key: {"round": t,
                                         "params": self.state.params}})
         got = [res.results[p] for p in res.arrived]
+        if not got:
+            tr = self.trainer.tracer
+            if tr is not None:
+                tr.instant("round.empty_fold", track="trainer", cat="round",
+                           ts=self.trainer.dist.queue.clock(),
+                           args={"round": t,
+                                 "stragglers": len(res.stragglers)})
+            raise EmptyRoundError(t, res)
         for g in got:
             if isinstance(g, dict) and g.get("round", t) != t:
                 self.stale_executions += 1
         works = [shard_work[p] for p in res.arrived]
-        grads = weighted_grad_mean([g[self.grad_key] for g in got], works)
-        new_params, new_opt = self.opt.update(grads, self.state.opt_state,
-                                              self.state.params)
+        t_step = time.perf_counter()
+        new_params, new_opt = self.server_step.step(
+            [g[self.grad_key] for g in got], works,
+            self.state.params, self.state.opt_state)
+        if self._m_step_s is not None:
+            self._m_step_s.observe(time.perf_counter() - t_step)
         self.state = replace(
             self.state, params=new_params, opt_state=new_opt,
             step=jnp.asarray(self.state.step) + 1)
@@ -457,5 +500,6 @@ class FederatedTrainingLoop:
             self.state, round_index=self.round_index, extra=extra)
 
 
-__all__ = ["FederatedTrainer", "FederatedTrainingLoop", "RoundResult",
-           "STRAGGLER_POLICIES", "affinity_placement", "resolve_barrier_k"]
+__all__ = ["EmptyRoundError", "FederatedTrainer", "FederatedTrainingLoop",
+           "RoundResult", "STRAGGLER_POLICIES", "affinity_placement",
+           "resolve_barrier_k"]

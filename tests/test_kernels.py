@@ -13,6 +13,8 @@ from repro.kernels.mamba.ops import mamba_scan
 from repro.kernels.mamba.ref import mamba_scan_ref
 from repro.kernels.rwkv6.ops import wkv
 from repro.kernels.rwkv6.ref import wkv_ref
+from repro.kernels.server_step.ops import server_step_update
+from repro.kernels.server_step.ref import server_step_ref
 
 RNG = np.random.default_rng(42)
 
@@ -110,6 +112,40 @@ def test_adagrad_kernel_sweep(shape, dtype, wd):
                                np.asarray(p2, np.float32), **_tol(dtype))
     np.testing.assert_allclose(np.asarray(a1), np.asarray(a2),
                                atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [
+    (1,),        # pads to a single block
+    (127,),      # sub-tile remainder
+    (8192,),     # exactly BLOCK_ROWS x BLOCK_COLS, zero padding
+    (33, 77),    # odd 2-d leaf
+    (3, 5, 7),   # 3-d leaf
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("members,wd", [(1, 0.0), (5, 0.01)])
+def test_server_step_kernel_sweep(shape, dtype, members, wd):
+    """The interpret-mode fused server-step kernel is BIT-equal — not
+    allclose — to the XLA-jitted oracle over the same padded program
+    (``mode="xla"``): the federated loop's fused and reference paths
+    must be interchangeable without drifting the trajectory.  A plain
+    allclose against the unpadded oracle guards the math itself (the
+    bit comparison can't see a shared bug in the padded pipeline)."""
+    import functools
+    p = jnp.asarray(RNG.normal(size=shape), dtype)
+    acc = jnp.asarray(np.abs(RNG.normal(size=shape)), jnp.float32)
+    g = jnp.asarray(RNG.normal(size=(members,) + shape), dtype)
+    coeffs = jnp.asarray(RNG.uniform(0.1, 1.0, size=members), jnp.float32)
+    kw = dict(lr=0.05, beta=1.5, weight_decay=wd)
+    p1, a1 = server_step_update(p, g, acc, coeffs, mode="interpret", **kw)
+    p2, a2 = server_step_update(p, g, acc, coeffs, mode="xla", **kw)
+    assert np.array_equal(np.asarray(p1), np.asarray(p2))
+    assert np.array_equal(np.asarray(a1), np.asarray(a2))
+    p3, a3 = jax.jit(functools.partial(server_step_ref, **kw))(
+        p, g, acc, coeffs)
+    np.testing.assert_allclose(np.asarray(p1, np.float32),
+                               np.asarray(p3, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a3),
+                               atol=1e-5, rtol=1e-5)
 
 
 def test_flash_attention_matches_model_attention_layer():

@@ -14,9 +14,11 @@ from repro.core.split_parallel import (SplitConcurrentDispatcher,
                                        TrainState, weighted_grad_mean)
 from repro.core.tickets import CANCELLED, TicketQueue
 from repro.optim import adagrad
-from repro.train_fabric import (FederatedTrainer, FederatedTrainingLoop,
-                                Rebalancer, checkpoint_path,
-                                latest_checkpoint, load_round_checkpoint,
+from repro.train_fabric import (EmptyRoundError, FederatedTrainer,
+                                FederatedTrainingLoop, FusedServerStep,
+                                Rebalancer, RoundResult, TreeServerStep,
+                                checkpoint_path, latest_checkpoint,
+                                load_round_checkpoint, member_coeffs,
                                 resolve_barrier_k, save_round_checkpoint,
                                 state_from_tree, state_to_tree)
 
@@ -421,7 +423,7 @@ def _lin_grad_task():
     return TaskDef("backbone_shard", run, static_files=("weights",))
 
 
-async def _train(rounds, ckdir, resume_from=None):
+async def _train(rounds, ckdir, resume_from=None, server_step_factory=None):
     fed = make_fed(2, n_shards=4, sizer=FixedSizer(1))
     fed.register_task(_lin_grad_task())
     fed.spawn_clients([ClientProfile(name=f"c{i}", speed=500.0)
@@ -438,7 +440,10 @@ async def _train(rounds, ckdir, resume_from=None):
         state, start, _ = load_round_checkpoint(resume_from)
     trainer = FederatedTrainer(fed, timeout=20.0)
     loop = FederatedTrainingLoop(trainer, opt, state, round_index=start,
-                                 checkpoint_dir=ckdir)
+                                 checkpoint_dir=ckdir,
+                                 server_step=(None if server_step_factory
+                                              is None
+                                              else server_step_factory(opt)))
     args = [(i, i + 12) for i in range(0, 48, 12)]
     async with trainer:
         for _ in range(start, rounds):
@@ -515,3 +520,145 @@ def test_kill_and_resume_at_round_boundary_reproduces_trajectory(tmp_path):
     assert resumed.round_index == 5 and len(resumed.losses) == 3
     np.testing.assert_allclose(resumed.losses, full.losses[2:],
                                rtol=0, atol=1e-7)
+
+
+# --- the server step --------------------------------------------------------
+
+
+def _ragged_tree(rng, dtype, scale=1.0):
+    """A deliberately ragged multi-leaf pytree: 2-d, 1-d, nested 3-d and
+    tiny leaves — exercises the fused path's flatten/concat bookkeeping
+    and the leafwise path's tree_map alike.  The smallest leaf is 3
+    elements: XLA scalarises 1-2-element leaves with FMA contraction the
+    explicit kernel doesn't replay, so the bit-equivalence contract
+    starts at 3 (see the ServerStep module docstring)."""
+    import jax.numpy as jnp
+    mk = lambda *s: jnp.asarray(rng.normal(size=s).astype(np.float32)
+                                * scale, dtype)
+    return {"w": mk(33, 7), "b": mk(5),
+            "deep": {"k": mk(3, 5, 7), "tiny": mk(3)}}
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("clip", [None, 1.0])
+def test_fused_server_step_bit_equal_to_tree_reference(dtype, clip):
+    """FusedServerStep (interpret-mode Pallas kernel AND the leafwise
+    XLA fusion) is BIT-equal to the TreeServerStep reference on ragged
+    multi-leaf trees — params and accumulator both, across dtypes and
+    with clipping on or off.  This is the contract that lets the
+    federated loop swap implementations without moving the trajectory."""
+    import jax
+    import jax.numpy as jnp
+    dt = jnp.dtype(dtype)
+    rng = np.random.default_rng(5)
+    params = _ragged_tree(rng, dt)
+    grads = [_ragged_tree(rng, dt, scale=0.5) for _ in range(4)]
+    works = [1.0, 2.0, 0.5, 1.5]
+    opt = adagrad(0.05, beta=1.5)
+    state = opt.init(params)
+    p1, s1 = TreeServerStep(opt, clip_norm=clip).step(
+        grads, works, params, state)
+    for mode in ("interpret", "xla"):
+        p2, s2 = FusedServerStep(opt, lr=0.05, beta=1.5, clip_norm=clip,
+                                 mode=mode).step(grads, works, params, state)
+        for a, b in zip(jax.tree_util.tree_leaves((p1, s1["acc"])),
+                        jax.tree_util.tree_leaves((p2, s2["acc"]))):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), \
+                f"mode={mode} diverged from the tree reference"
+
+
+def test_member_coeffs_clip_disabled_is_pure_work_weighting():
+    """With clipping off the coefficients are exactly the normalised
+    work weights, and a clip bound no member reaches is a bitwise
+    identity (min(1, big/norm) == 1.0 exactly) — so enabling the clip
+    argument 'just in case' costs nothing when it never binds."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(9)
+    grads = [_ragged_tree(rng, jnp.float32) for _ in range(3)]
+    works = [3.0, 1.0, 2.0]
+    c_off = member_coeffs(grads, works)
+    np.testing.assert_array_equal(
+        np.asarray(c_off), np.asarray(works, np.float32) / 6.0)
+    c_huge = member_coeffs(grads, works, clip_norm=1e9)
+    np.testing.assert_array_equal(np.asarray(c_off), np.asarray(c_huge))
+    # a binding clip really rescales: member norms here are >> 0.01
+    c_tight = member_coeffs(grads, works, clip_norm=0.01)
+    assert (np.asarray(c_tight) < np.asarray(c_off)).all()
+
+
+def test_training_rounds_through_custom_and_fused_server_step(tmp_path):
+    """The loop delegates every round's aggregate+update to the injected
+    ServerStep, and swapping the reference for the fused implementation
+    reproduces the identical loss trajectory through real fabric rounds."""
+    calls = []
+
+    class CountingStep(TreeServerStep):
+        def step(self, grads, works, params, opt_state):
+            calls.append(len(grads))
+            return super().step(grads, works, params, opt_state)
+
+    base = _run(_train(3, str(tmp_path / "a")))
+    custom = _run(_train(3, str(tmp_path / "b"),
+                         server_step_factory=CountingStep))
+    assert calls == [4, 4, 4]            # one call per round, 4 shards
+    np.testing.assert_allclose(custom.losses, base.losses, rtol=0, atol=0)
+    fused = _run(_train(
+        3, str(tmp_path / "c"),
+        server_step_factory=lambda opt: FusedServerStep(opt, lr=0.2)))
+    np.testing.assert_allclose(fused.losses, base.losses, rtol=0, atol=0)
+
+
+def test_fused_server_step_rejects_non_adagrad():
+    from repro.optim import sgd
+
+    with pytest.raises(ValueError, match="AdaGrad"):
+        FusedServerStep(sgd(0.1), lr=0.1)
+
+
+def test_empty_round_raises_structured_error_and_traces():
+    """A round that closes with zero arrived gradients must NOT step the
+    optimizer on a 0/0 mean: the loop raises EmptyRoundError carrying
+    the offending RoundResult, leaves its state untouched (retry = call
+    run_round again), and drops a round.empty_fold instant on the
+    trace so the gap is visible on the timeline."""
+    from repro.obs import Tracer
+
+    async def body():
+        tr = Tracer()
+        fed = make_fed(2, n_shards=4, sizer=FixedSizer(1), tracer=tr)
+        tr.clock = fed.queue.clock
+        fed.register_task(_lin_grad_task())
+        fed.spawn_clients([ClientProfile(name="c0", speed=500.0)])
+        opt = adagrad(0.2)
+        params = {"w": np.zeros(4, np.float32)}
+        state = TrainState(params=params, head={}, head_stale={},
+                           opt_state=opt.init(params), head_opt_state={},
+                           prev_features=(), prev_labels=(), prev_mask=(),
+                           step=np.zeros((), np.int32))
+        trainer = FederatedTrainer(fed, timeout=20.0)
+        loop = FederatedTrainingLoop(trainer, opt, state)
+
+        async def all_straggled(shard_args, *, shard_work=None,
+                                statics=None, timeout=None):
+            n = len(shard_args)
+            return RoundResult(index=0, results=[None] * n,
+                               ticket_ids=list(range(n)), arrived=[],
+                               stragglers=list(range(n)))
+
+        trainer.run_round = all_straggled
+        async with trainer:
+            with pytest.raises(EmptyRoundError) as ei:
+                await loop.run_round([(0, 12), (12, 24)], [12.0] * 2)
+        await fed.shutdown()
+        err = ei.value
+        assert err.round_index == 0
+        assert err.result.stragglers == [0, 1] and not err.result.arrived
+        assert "0 of 2" in str(err)
+        # the loop's state is untouched: same round, no loss recorded
+        assert loop.round_index == 0 and loop.losses == []
+        assert np.array_equal(np.asarray(loop.state.params["w"]),
+                              np.zeros(4, np.float32))
+        ev = [e for e in tr.events() if e["name"] == "round.empty_fold"]
+        assert len(ev) == 1 and ev[0]["args"]["stragglers"] == 2
+
+    _run(body())
