@@ -1,0 +1,371 @@
+"""Browser-scale churn benchmark: 10k remote clients, 20%/round churn.
+
+Discrete-event simulation (virtual clock — deterministic, runs in
+seconds) of the transport's browser-scale machinery at populations no
+socket test can reach.  The population comes from
+:mod:`repro.core.profiles` (GPU/CPU tiers, heavy-tailed latencies,
+per-round tab-close hazards scaled to the target churn); ticket
+accounting is the REAL :class:`repro.core.shards.ShardedTicketQueue`
+behind per-member serialized service stations, exactly as in
+``federation_throughput.py``.  On top of that base the sim models the
+three churn mechanisms of `docs/PROTOCOL.md`:
+
+  * **admission control** — at most ``CONNS_PER_MEMBER`` connected
+    clients per member; everyone else is refused (``busy``) and re-dials
+    with the client's real capped-exponential jittered backoff
+    (:func:`repro.core.transport.reconnect_backoff` — the sim imports
+    the production schedule, not a copy);
+  * **heartbeat eviction** — a tab that closes mid-lease goes silent;
+    the server notices after ``HEARTBEAT_TIMEOUT`` virtual seconds and
+    force-releases its leases (the watchdog is parked at a prohibitive
+    grace so eviction is the only recovery path);
+  * **round churn** — every round, each client dies with its profile's
+    tab-close hazard (population mean = the target churn rate) and is
+    replaced by a fresh device, like new visitors opening the page.
+
+Rounds are driven to completion and audited for the acceptance bars:
+**zero stalled rounds** (no open round goes ``STALL_AFTER`` virtual
+seconds without a completion), **zero lost tickets**, **zero duplicate
+completions** (exactly-once accepts), churned 4-member throughput
+**>= 0.9x** the no-churn ceiling, and 4-member-over-1-member speedup.
+``benchmarks/run.py --only churn`` re-runs this and writes
+``BENCH_churn.json``; assertions run BEFORE the file is written.
+
+Usage:
+  PYTHONPATH=src python benchmarks/churn_scale.py [--json out.json]
+                                                  [--smoke] [--seed N]
+"""
+from __future__ import annotations
+
+import argparse
+import heapq
+import itertools
+import json
+import random
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core.distributor import AdaptiveSizer
+from repro.core.federation import grant_has_foreign_tickets
+from repro.core.profiles import draw_fleet, fleet_summary, scale_hazard
+from repro.core.shards import ShardedTicketQueue
+from repro.core.transport import reconnect_backoff
+
+RTT = 0.05               # client <-> member round-trip (virtual s)
+SERVICE = 0.02           # member service time per lease/submit request
+POPULATION = 10_000
+SMOKE_POPULATION = 1_000
+CHURN_PER_ROUND = 0.2    # mean tab-close probability per round
+ROUNDS = 2
+TICKETS_PER_MEMBER_ROUND = 1500   # sized to capacity, not population:
+#                                   admission caps the working set, so
+#                                   throughput is station-bound and a
+#                                   round should run long enough (~30
+#                                   virtual s) to amortize its tail
+CONNS_PER_MEMBER = 64    # admission cap
+HEARTBEAT_TIMEOUT = 0.5  # silence -> eviction (virtual s)
+STALL_AFTER = 5.0        # no completion this long while open = stall
+ROUND_HARD_CAP = 300.0   # virtual s; a round this long is lost, not hung
+RECONNECT_DELAY = 0.5    # backoff base for refused/failed dials
+BACKOFF_CAP = 8.0
+GRACE = 1000.0           # watchdog effectively off: eviction must do it
+REDISTRIBUTE_MIN = 3.0   # straggler re-lease (> heartbeat timeout)
+MAX_LATENCY = 1.0        # cap the Pareto tail: browsers time out too
+
+
+class SimClock:
+    """Injectable virtual clock (docs/ARCHITECTURE.md §Injectable clock)."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+class _Client:
+    __slots__ = ("name", "speed", "latency", "hazard", "alive", "member",
+                 "attempts", "leases")
+
+    def __init__(self, draw):
+        self.name = draw.name
+        self.speed = draw.speed
+        self.latency = min(draw.latency, MAX_LATENCY)
+        self.hazard = draw.tab_close_hazard
+        self.alive = True
+        self.member = None       # admitted endpoint, or None (parked)
+        self.attempts = 0        # consecutive refused/failed dials
+        self.leases = {}         # lease_id -> batch (granted, unsubmitted)
+
+
+def simulate(population: int, n_members: int, *, rounds: int = ROUNDS,
+             tickets_per_round: int | None = None,
+             churn: float = CHURN_PER_ROUND, seed: int = 0) -> dict:
+    """One cell: ``rounds`` rounds of ``tickets_per_round`` tickets over a
+    churning population.  Returns throughput + the audit counters."""
+    if tickets_per_round is None:
+        tickets_per_round = TICKETS_PER_MEMBER_ROUND * n_members
+    clock = SimClock()
+    n_shards = max(2 * n_members, 2)
+    q = ShardedTicketQueue(n_shards, timeout=1e6,
+                           redistribute_min=REDISTRIBUTE_MIN, clock=clock)
+    sizer = AdaptiveSizer(target_lease_time=0.5, max_size=8)
+    home = {m: [q.shards[j] for j in range(n_shards) if j % n_members == m]
+            for m in range(n_members)}
+
+    rng = random.Random(seed ^ 0xC0FFEE)
+    fleet = scale_hazard(draw_fleet(population, seed=seed), churn)
+    clients = {d.name: _Client(d) for d in fleet}
+    joined = itertools.count(population)   # names for replacement devices
+
+    conns = [0] * n_members
+    busy = [0.0] * n_members
+    seq = itertools.count()
+    events: list = []
+
+    stats = {"busy_refusals": 0, "evictions": 0, "evicted_leases": 0,
+             "deaths": 0, "steals": 0, "accepted_total": 0,
+             "dup_submits_dropped": 0}
+
+    def service(member: int, t: float) -> float:
+        start = max(t, busy[member])
+        busy[member] = start + SERVICE
+        return busy[member]
+
+    def push(t, kind, name, payload=None):
+        heapq.heappush(events, (t, next(seq), kind, name, payload))
+
+    for name in clients:
+        push(rng.random() * 2.0, "join", name)
+
+    def apply_churn(t0: float, span: float):
+        """Each client dies with its own hazard at a uniform time inside
+        the round's opening ``span``; a fresh device replaces it."""
+        for name in list(clients):
+            c = clients[name]
+            if not c.alive or rng.random() >= c.hazard:
+                continue
+            died_at = t0 + rng.random() * span
+            push(died_at, "death", name)
+            new = draw_fleet(1, seed=seed + next(joined))[0]
+            replacement = _Client(new)
+            replacement.name = f"j{next(joined)}-{new.name}"
+            clients[replacement.name] = replacement
+            push(died_at + rng.random(), "join", replacement.name)
+
+    executed_before = 0
+    round_records = []
+    stalled_rounds = 0
+    lost = 0
+    total_added = 0
+
+    for r in range(rounds):
+        t0 = clock.t
+        tids = q.add_many(f"round{r}", list(range(tickets_per_round)),
+                          work=1.0)
+        total_added += len(tids)
+        apply_churn(t0, span=2.0)
+        target = executed_before + tickets_per_round
+        last_progress = t0
+        stalled = False
+
+        while events:
+            t, _, kind, name, payload = heapq.heappop(events)
+            clock.t = t
+            # accepted_total == executed: the queue accepts each ticket's
+            # result exactly once (audited at the end via snapshot())
+            done = stats["accepted_total"]
+            if done >= target:
+                break
+            if done > executed_before:
+                executed_before = done
+                last_progress = t
+            elif not stalled and t - last_progress > STALL_AFTER:
+                stalled = True
+                stalled_rounds += 1
+            if t - t0 > ROUND_HARD_CAP:
+                break
+
+            c = clients.get(name) if name else None
+
+            if kind == "death":
+                stats["deaths"] += 1
+                c.alive = False
+                if c.member is not None:
+                    # silent tab: the server notices at the heartbeat
+                    # deadline and evicts (slot freed, leases released)
+                    push(t + HEARTBEAT_TIMEOUT, "evict", name)
+                continue
+            if kind == "evict":
+                stats["evictions"] += 1
+                conns[c.member] -= 1
+                c.member = None
+                for lease_id in list(c.leases):
+                    del c.leases[lease_id]
+                    stats["evicted_leases"] += q.release(
+                        lease_id, client_failed=True)
+                continue
+            if c is None or not c.alive:
+                continue                    # event for a dead client
+
+            if kind == "join":
+                m = min(range(n_members), key=lambda i: conns[i])
+                if conns[m] >= CONNS_PER_MEMBER:
+                    stats["busy_refusals"] += 1
+                    c.attempts += 1
+                    push(t + reconnect_backoff(
+                        c.attempts, base=RECONNECT_DELAY, cap=BACKOFF_CAP,
+                        rand=rng.random), "join", name)
+                    continue
+                conns[m] += 1
+                c.member = m
+                c.attempts = 0
+                push(service(m, t), "lease", name)
+            elif kind == "lease":
+                if c.member is None:
+                    continue                # evicted while parked in heap
+                m = c.member
+                n = sizer.lease_size(q.stats.get(name))
+                batch = q.lease(name, n, shards=home[m])
+                if batch is None and len(home[m]) < n_shards:
+                    batch = q.lease(name, n)
+                    if batch is not None and grant_has_foreign_tickets(
+                            batch, home[m]):
+                        stats["steals"] += 1
+                if batch is None:
+                    # dry: the real server parks the request; poll cheaply
+                    push(t + 0.25, "lease", name)
+                    continue
+                c.leases[batch.lease_id] = batch
+                finish = t + RTT + c.latency + batch.work / c.speed
+                push(finish, "finish", name, batch)
+            elif kind == "finish":
+                if c.member is None or payload.lease_id not in c.leases:
+                    continue                # evicted mid-compute
+                push(service(c.member, t), "submitted", name, payload)
+            elif kind == "submitted":
+                batch = payload
+                if c.member is None or batch.lease_id not in c.leases:
+                    continue                # evicted while submit in flight
+                del c.leases[batch.lease_id]
+                accepted = q.submit_batch(
+                    batch.lease_id,
+                    {tid: tid for tid in batch.ticket_ids}, name)
+                stats["accepted_total"] += accepted
+                stats["dup_submits_dropped"] += \
+                    len(batch.ticket_ids) - accepted
+                push(t, "lease", name)
+
+        snap = q.snapshot()
+        executed_before = snap["executed"]
+        round_lost = target - executed_before
+        if round_lost > 0:
+            lost += round_lost
+        round_records.append({
+            "round": r, "duration_s": round(clock.t - t0, 3),
+            "completed": tickets_per_round - max(round_lost, 0),
+            "stalled": stalled,
+        })
+
+    snap = q.snapshot()
+    makespan = max(clock.t, 1e-9)
+    duplicate_completions = stats["accepted_total"] - snap["executed"]
+    return {
+        "population": population,
+        "members": n_members,
+        "rounds": rounds,
+        "tickets_per_round": tickets_per_round,
+        "churn_per_round": churn,
+        "makespan_s": round(makespan, 3),
+        "throughput_tps": round(snap["executed"] / makespan, 2),
+        "completed": snap["executed"],
+        "total": total_added,
+        "lost_tickets": lost,
+        "duplicate_completions": duplicate_completions,
+        "stalled_rounds": stalled_rounds,
+        "round_records": round_records,
+        **stats,
+        "redistributions": snap["redistributions"],
+        "lease_releases": snap["lease_releases"],
+    }
+
+
+def run_sweep(*, population: int = POPULATION, seed: int = 0) -> dict:
+    """The benchmark cells: the churned 10k run, its no-churn ceiling,
+    and a 1-member cell for the scaling headline."""
+    churned = simulate(population, 4, churn=CHURN_PER_ROUND, seed=seed)
+    ceiling = simulate(population, 4, churn=0.0, seed=seed)
+    single = simulate(population, 1, rounds=1, churn=CHURN_PER_ROUND,
+                      seed=seed)
+    ratio = round(churned["throughput_tps"]
+                  / max(ceiling["throughput_tps"], 1e-9), 3)
+    speedup = round(churned["throughput_tps"]
+                    / max(single["throughput_tps"], 1e-9), 2)
+    return {
+        "churned": churned,
+        "ceiling": ceiling,
+        "single_member": single,
+        "throughput_ratio_vs_ceiling": ratio,
+        "speedup_4v1": speedup,
+        "fleet": fleet_summary(scale_hazard(
+            draw_fleet(population, seed=seed), CHURN_PER_ROUND)),
+        "model": {"rtt_s": RTT, "service_s": SERVICE,
+                  "conns_per_member": CONNS_PER_MEMBER,
+                  "heartbeat_timeout_s": HEARTBEAT_TIMEOUT,
+                  "stall_after_s": STALL_AFTER, "grace": GRACE,
+                  "redistribute_min_s": REDISTRIBUTE_MIN,
+                  "seed": seed},
+    }
+
+
+def check(results: dict) -> None:
+    """The acceptance bars (run BEFORE any JSON is written)."""
+    for cell in ("churned", "ceiling", "single_member"):
+        m = results[cell]
+        assert m["stalled_rounds"] == 0, (cell, m["round_records"])
+        assert m["lost_tickets"] == 0, (cell, m)
+        assert m["completed"] == m["total"], (cell, m)
+        assert m["duplicate_completions"] == 0, (cell, m)
+    ch = results["churned"]
+    assert ch["evictions"] > 0, \
+        "churn must exercise the eviction path (watchdog is parked)"
+    assert ch["busy_refusals"] > 0, \
+        "the population must exceed the admission cap"
+    assert results["throughput_ratio_vs_ceiling"] >= 0.9, results
+    assert results["speedup_4v1"] >= 2.0, results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, help="write results here")
+    ap.add_argument("--smoke", action="store_true",
+                    help=f"reduced population ({SMOKE_POPULATION}) for CI")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    population = SMOKE_POPULATION if args.smoke else POPULATION
+    results = run_sweep(population=population, seed=args.seed)
+
+    hdr = f"{'cell':<15}{'pop':>7}{'mem':>4}{'tput(t/s)':>11}" \
+          f"{'stalls':>7}{'lost':>6}{'dup':>5}{'evict':>7}{'busy':>7}"
+    print(hdr)
+    print("-" * len(hdr))
+    for cell in ("churned", "ceiling", "single_member"):
+        m = results[cell]
+        print(f"{cell:<15}{m['population']:>7}{m['members']:>4}"
+              f"{m['throughput_tps']:>11.1f}{m['stalled_rounds']:>7}"
+              f"{m['lost_tickets']:>6}{m['duplicate_completions']:>5}"
+              f"{m['evictions']:>7}{m['busy_refusals']:>7}")
+    print(f"\nchurned throughput holds "
+          f"{results['throughput_ratio_vs_ceiling']:.3f}x the no-churn "
+          f"ceiling; 4-member speedup {results['speedup_4v1']:.2f}x")
+    check(results)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

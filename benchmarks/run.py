@@ -6,11 +6,10 @@ results are machine-comparable across runs.  Scaled-down sizes run inside a
 CPU budget; pass --full for paper-scale settings.
 
 The ``scheduler``, ``federation``, ``cache``, ``transport``,
-``training`` and ``server_step`` entries additionally write
-machine-readable ``BENCH_scheduler.json`` / ``BENCH_federation.json`` /
-``BENCH_cache.json`` / ``BENCH_transport.json`` / ``BENCH_training.json``
-/ ``BENCH_server_step.json`` (throughput, speedup, stale-serve, egress,
-loss-equivalence and kernel-fusion numbers) so the perf trajectory is
+``training``, ``server_step``, ``obs`` and ``churn`` entries
+additionally write machine-readable ``BENCH_<name>.json`` files
+(throughput, speedup, stale-serve, egress, loss-equivalence,
+kernel-fusion and churn-resilience numbers) so the perf trajectory is
 tracked across PRs — CI uploads them as artifacts.  ``--out-dir``
 relocates them.
 
@@ -294,6 +293,32 @@ def bench_obs(full: bool):
     return payload
 
 
+def bench_churn(full: bool):
+    """Browser-scale churn sim (virtual clock, deterministic): 10k
+    clients (1k without --full) at 20%/round churn under admission
+    control + heartbeat eviction; writes BENCH_churn.json gated on zero
+    stalled rounds, zero lost/duplicated tickets, and churned throughput
+    >= 0.9x the no-churn ceiling."""
+    from benchmarks import churn_scale
+
+    t0 = time.perf_counter()
+    results = churn_scale.run_sweep(
+        population=churn_scale.POPULATION if full
+        else churn_scale.SMOKE_POPULATION)
+    us = (time.perf_counter() - t0) * 1e6
+    # acceptance bars BEFORE writing (a stalled or lossy run must not
+    # leave a fresh-looking BENCH_churn.json behind)
+    churn_scale.check(results)
+    _write_json("churn", results)
+    ch = results["churned"]
+    _csv("churn_scale", us,
+         f"ratio_vs_ceiling={results['throughput_ratio_vs_ceiling']}|"
+         f"stalled={ch['stalled_rounds']}|lost={ch['lost_tickets']}|"
+         f"dup={ch['duplicate_completions']}|"
+         f"speedup_4v1={results['speedup_4v1']}x")
+    return results
+
+
 BENCHES = {
     "table2": bench_table2,
     "table4": bench_table4,
@@ -307,6 +332,7 @@ BENCHES = {
     "training": bench_training,
     "server_step": bench_server_step,
     "obs": bench_obs,
+    "churn": bench_churn,
 }
 
 

@@ -765,6 +765,22 @@ class AsyncDistributor(HttpServerBase):
             self._notify_waiters()
         return n
 
+    async def evict_client_leases(self, client: str) -> int:
+        """Force-release EVERY outstanding lease checked out by
+        ``client`` — the distributor half of heartbeat eviction (see
+        ``core/transport.py``): when a browser tab is declared gone, its
+        stranded work goes back into circulation immediately instead of
+        waiting out the watchdog's ``grace x ETA`` deadline.  Also the
+        chaos harness's server-side tab-close lever.  Returns the number
+        of tickets released."""
+        n = 0
+        for batch in self.queue.outstanding_leases():
+            if batch.client == client:
+                n += self.queue.release(batch.lease_id, client_failed=True)
+        if n:
+            self._notify_waiters()
+        return n
+
     async def _watchdog(self):
         """Proactive redistribution: release leases overrunning their ETA."""
         while not self._terminal():

@@ -456,6 +456,25 @@ class FederatedDistributor(HttpServerBase):
         self._notify_all()          # the new owner's idle clients wake up
         return True
 
+    async def evict_client_leases(self, client: str) -> int:
+        """Force-release every lease ``client`` holds anywhere in the
+        shared store — the federation-wide half of heartbeat eviction
+        (the transport's per-connection path covers only one member; a
+        client that reconnected across members may have stranded leases
+        on several).  Returns the number of tickets released."""
+        n = 0
+        for batch in self.queue.outstanding_leases():
+            if batch.client == client:
+                n += self.queue.release(batch.lease_id, client_failed=True)
+        if n:
+            if self.tracer is not None:
+                self.tracer.instant(
+                    "federation.evict", track="federation",
+                    cat="federation", ts=self.queue.clock(),
+                    args={"client": client, "released": n})
+            self._notify_all()
+        return n
+
     async def kill_member(self, index: int) -> int:
         """Fault injection: member ``index`` dies — its clients and
         watchdog are cancelled mid-flight, WITHOUT releasing its leases.

@@ -25,13 +25,24 @@ client ⇄ distributor surface becomes a real **message protocol**:
     ``DELTA_HISTORY`` staleness horizon), and the client splices them in
     via the same ``merge_versioned_fetch`` helper the in-process path
     uses.
-  * **Messages** — ``hello``/``hello_ok``, ``lease_request``/
-    ``lease_grant``, ``submit``/``submit_ok``, ``release``/``release_ok``,
+  * **Messages** — ``hello`` answered by ``hello_ok`` or a ``busy``
+    refusal (admission control), ``lease_request``/``lease_grant``,
+    ``submit``/``submit_ok``, ``release``/``release_ok``,
     ``fetch_task``/``fetch_static`` answered by ``task_data``/
-    ``static_data``/``not_modified``, ``error_report``/``error_report_ok``,
-    server-pushed ``invalidate``, and ``error``.  The full spec with frame
-    layout, JSON examples, and the reconnect state machine is
-    **docs/PROTOCOL.md** — keep the two in sync.
+    ``static_data``/``not_modified``, ``heartbeat``/``heartbeat_ok``
+    (liveness while holding a lease), ``error_report``/
+    ``error_report_ok``, server-pushed ``invalidate``, and ``error``.
+    The full spec with frame layout, JSON examples, and the reconnect
+    state machine is **docs/PROTOCOL.md** — keep the two in sync.
+  * **Browser-scale churn machinery** (see docs/PROTOCOL.md §Admission
+    control and §Heartbeat and eviction): the server may cap accepted
+    connections per endpoint (``max_conns_per_member``) and refuse the
+    overflow at ``hello`` with ``busy`` + a ``retry_after`` hint; a
+    connection holding leases that goes silent past
+    ``heartbeat_timeout`` is **evicted** — its leases are force-released
+    immediately instead of waiting out the watchdog's ``grace x ETA``
+    deadline, so 10^4-client fleets with tab-close churn redistribute
+    stranded work in one heartbeat interval.
   * :class:`TransportServer` — wraps an ``AsyncDistributor`` or
     ``FederatedDistributor`` behind a loopback (or any TCP) socket.  Each
     connection is bound at ``hello`` time to one endpoint
@@ -62,6 +73,7 @@ import collections
 import itertools
 import json
 import pickle
+import random
 import struct
 import time
 import traceback
@@ -74,7 +86,8 @@ from repro.core.tickets import LeaseBatch
 # ProtocolError lives in the leaf module repro.core.wire (the registry's
 # codecs raise it too); re-exported here where it historically lived.
 from repro.core.wire import (ProtocolError, decode_binary, encode_binary,
-                             make_trace_context, parse_trace_context)
+                             make_trace_context, parse_retry_after,
+                             parse_trace_context)
 
 #: Highest protocol version this build speaks.  ``hello`` negotiates: the
 #: client sends ``proto`` (its floor, 1 for compatibility) and
@@ -346,6 +359,11 @@ class _Connection:
         self.leases: dict[int, LeaseBatch] = {}
         self.ready = False                 # hello completed
         self.proto = MIN_PROTOCOL_VERSION  # negotiated at hello time
+        # liveness mark on the server's (injectable) wall clock: stamped
+        # at hello and refreshed by EVERY inbound frame — a heartbeat is
+        # just the cheapest frame a busy client can send
+        self.last_seen = server._clock()
+        self.evicted = False               # eviction happened exactly once
         self._wlock = asyncio.Lock()
 
     async def send(self, msg: dict):
@@ -405,11 +423,26 @@ class TransportServer:
 
     Lifecycle: ``await start()`` binds the socket (default loopback,
     ephemeral port — ``address`` holds the result) and arms the
-    endpoints' watchdogs; ``await stop()`` closes every connection.  A
-    connection that dies with open leases is deliberately NOT cleaned up
-    here: the existing watchdog releases its overdue leases at
-    ``grace x ETA``, which is the single redistribution path for dead
-    in-process clients, dead members, and dead transports alike.
+    endpoints' watchdogs; ``await stop()`` closes every connection.
+
+    **Admission control** (``max_conns_per_member``): with the cap set,
+    a ``hello`` that would push every endpoint past its cap is refused
+    with a ``busy`` frame carrying a ``retry_after`` hint, and the
+    connection is closed — backpressure happens at the door, before the
+    connection consumes a handler task or a lease.  Unset (the default),
+    admission is unlimited, as before.
+
+    **Heartbeat/eviction** (``heartbeat_timeout``): with the timeout
+    set, a sweeper evicts any connection that holds open leases but has
+    been silent (no frame of any kind) longer than the timeout — its
+    leases are force-released (``client_failed=True``) *immediately*,
+    instead of waiting out the watchdog's ``grace x ETA`` deadline, and
+    the socket is closed.  Clients signal liveness mid-execution with
+    ``heartbeat`` frames.  Idle connections (no open leases — e.g.
+    parked in ``lease_request``) are never evicted: they hold no work,
+    and a parked request cannot frame heartbeats anyway.  Unset (the
+    default), dead connections fall back to the watchdog path alone,
+    exactly the pre-eviction behaviour.
     """
 
     def __init__(self, distributor, *, host: str = "127.0.0.1",
@@ -417,6 +450,11 @@ class TransportServer:
                  max_proto: int = PROTOCOL_VERSION,
                  chunk_bytes: int = DEFAULT_CHUNK_BYTES,
                  max_blob_bytes: int = MAX_BLOB_BYTES,
+                 max_conns_per_member: Optional[int] = None,
+                 retry_after: float = 0.5,
+                 heartbeat_timeout: Optional[float] = None,
+                 eviction_interval: Optional[float] = None,
+                 clock: Callable[[], float] = time.monotonic,
                  tracer=None):
         self.distributor = distributor
         # default to the distributor's tracer, so wiring one tracer into
@@ -432,6 +470,20 @@ class TransportServer:
         self.max_proto = max_proto
         self.chunk_bytes = chunk_bytes
         self.max_blob_bytes = max_blob_bytes
+        #: accepted-connection cap per endpoint (None = unlimited)
+        self.max_conns_per_member = max_conns_per_member
+        #: seconds hinted in a ``busy`` refusal's ``retry_after``
+        self.retry_after = retry_after
+        #: silence (on ``clock``) after which a lease-holding connection
+        #: is evicted; None disables eviction entirely
+        self.heartbeat_timeout = heartbeat_timeout
+        # sweep cadence: a fraction of the timeout, so detection latency
+        # is at most ~1.25x the timeout itself
+        self.eviction_interval = (
+            eviction_interval if eviction_interval is not None
+            else (heartbeat_timeout / 4.0
+                  if heartbeat_timeout is not None else 1.0))
+        self._clock = clock                # liveness clock (injectable)
         self.address: Optional[tuple[str, int]] = None
         self.frames_in = 0
         self.frames_out = 0
@@ -440,6 +492,10 @@ class TransportServer:
         self.chunks_in = 0
         self.chunks_out = 0
         self.protocol_errors = 0
+        self.busy_refusals = 0             # hellos refused at the door
+        self.heartbeats = 0                # heartbeat frames answered
+        self.evictions = 0                 # connections evicted
+        self.evicted_leases = 0            # leases force-released by those
         # per-message-type wire accounting (frames include chunk frames;
         # feeds the obs MetricsRegistry via repro.obs.collect)
         self.msg_frames_in: collections.Counter = collections.Counter()
@@ -450,6 +506,7 @@ class TransportServer:
         self._loop: Optional[asyncio.AbstractEventLoop] = None
         self._conns: set[_Connection] = set()
         self._handler_tasks: set[asyncio.Task] = set()
+        self._eviction_task: Optional[asyncio.Task] = None
         self._subscribed = False
 
     # -- lifecycle ------------------------------------------------------------
@@ -468,11 +525,22 @@ class TransportServer:
         self._server = await asyncio.start_server(
             self._handle, self.host, self.port)
         self.address = self._server.sockets[0].getsockname()[:2]
+        if (self.heartbeat_timeout is not None
+                and self._eviction_task is None):
+            self._eviction_task = self._loop.create_task(
+                self._eviction_loop())
         return self.address
 
     async def stop(self):
         """Close the listener and every live connection, and wait for the
         per-connection handler tasks to unwind."""
+        if self._eviction_task is not None:
+            self._eviction_task.cancel()
+            try:
+                await self._eviction_task
+            except asyncio.CancelledError:
+                pass
+            self._eviction_task = None
         if self._server is not None:
             self._server.close()
             await self._server.wait_closed()
@@ -518,6 +586,65 @@ class TransportServer:
                 n += 1
         return n
 
+    # -- heartbeat / eviction -------------------------------------------------
+
+    async def _eviction_loop(self):
+        """Sweep for lease-holding connections silent past the heartbeat
+        timeout, forcing their leases back into circulation immediately.
+        Runs only when ``heartbeat_timeout`` is set (armed by start())."""
+        while True:
+            await asyncio.sleep(self.eviction_interval)
+            now = self._clock()
+            for conn in list(self._conns):
+                if (conn.ready and conn.leases and not conn.evicted
+                        and now - conn.last_seen > self.heartbeat_timeout):
+                    await self._evict(conn, reason="silent")
+
+    async def _evict(self, conn: _Connection, *, reason: str) -> int:
+        """Evict one connection: drain its lease bookkeeping FIRST (so a
+        submit frame racing this eviction takes the late-submit path,
+        where the queue's first-result-wins rule drops duplicates — a
+        ticket can never double-complete), force-release every drained
+        lease, close its wire spans, then close the socket.  Returns the
+        number of leases force-released.  Idempotent per connection."""
+        if conn.evicted:
+            return 0
+        conn.evicted = True
+        self.evictions += 1
+        batches = list(conn.leases.values())
+        conn.leases.clear()
+        released = 0
+        for batch in batches:
+            if self.tracer is not None:
+                self.tracer.end(
+                    self._wire_spans.pop(batch.lease_id, None),
+                    ts=conn.endpoint.queue.clock(),
+                    args={"status": "evicted", "reason": reason})
+            released += await conn.endpoint.release_lease(
+                batch, client_failed=True)
+        self.evicted_leases += len(batches)
+        if self.tracer is not None:
+            self.tracer.instant(
+                "transport.evict", track="wire", cat="wire",
+                ts=conn.endpoint.queue.clock(),
+                args={"client": conn.client, "reason": reason,
+                      "leases": len(batches), "released": released})
+        conn.close()
+        return released
+
+    async def evict_client(self, client: str, *,
+                           reason: str = "forced") -> int:
+        """Evict every ready connection announcing ``client`` in its
+        hello — the server-side tab-close lever (chaos harness, admin
+        tooling).  Unlike the silent-sweep path this also evicts
+        connections holding no leases (they are just closed).  Returns
+        the total leases force-released."""
+        released = 0
+        for conn in list(self._conns):
+            if conn.ready and conn.client == client:
+                released += await self._evict(conn, reason=reason)
+        return released
+
     def _count_out(self, kind: str, frames: int, nbytes: int):
         self.msg_frames_out[kind] += frames
         self.msg_bytes_out[kind] += nbytes
@@ -534,6 +661,10 @@ class TransportServer:
                 "bytes_in": self.bytes_in, "bytes_out": self.bytes_out,
                 "chunks_in": self.chunks_in, "chunks_out": self.chunks_out,
                 "protocol_errors": self.protocol_errors,
+                "busy_refusals": self.busy_refusals,
+                "heartbeats": self.heartbeats,
+                "evictions": self.evictions,
+                "evicted_leases": self.evicted_leases,
                 "by_type": {
                     "frames_in": dict(self.msg_frames_in),
                     "frames_out": dict(self.msg_frames_out),
@@ -586,6 +717,13 @@ class TransportServer:
             self._conns.discard(conn)
             self._handler_tasks.discard(asyncio.current_task())
             conn.close()
+            if (self.heartbeat_timeout is not None and conn.leases
+                    and not conn.evicted):
+                # eviction mode: a DETECTED death (EOF/reset) is treated
+                # like heartbeat silence — the leases come back now, not
+                # at the watchdog's grace x ETA.  Without eviction mode
+                # the watchdog stays the single recovery path (legacy).
+                await self._evict(conn, reason="disconnect")
 
     async def _serve(self, conn: _Connection):
         # -- handshake: first frame must be a protocol-compatible hello --
@@ -633,8 +771,30 @@ class TransportServer:
             self.protocol_errors += 1
             await conn.send_error(seq, e)
             return
+        if self.max_conns_per_member is not None:
+            # admission control: _pick_endpoint chose the least-loaded
+            # endpoint, so if even that one is at its cap the fabric is
+            # full — refuse with ``busy`` (retryable backpressure, not an
+            # error) and close.  Only ready connections count: a flood of
+            # half-open hellos must not starve out accepted clients.
+            load = sum(1 for c in self._conns
+                       if c is not conn and c.ready
+                       and c.endpoint is conn.endpoint)
+            if load >= self.max_conns_per_member:
+                self.busy_refusals += 1
+                if self.tracer is not None:
+                    self.tracer.instant(
+                        "transport.busy", track="wire", cat="wire",
+                        ts=conn.endpoint.queue.clock(),
+                        args={"client": str(msg.get("client", "remote")),
+                              "retry_after": self.retry_after})
+                conn.endpoint = None
+                await conn.send({"type": "busy", "seq": seq,
+                                 "retry_after": self.retry_after})
+                return
         conn.endpoint.ensure_watchdog()    # re-arm after a drained round
         conn.ready = True
+        conn.last_seen = self._clock()
         await conn.send({"type": "hello_ok", "seq": seq,
                          "proto": conn.proto,
                          "project": conn.endpoint.project_name,
@@ -654,6 +814,7 @@ class TransportServer:
                 return
             if msg is None:
                 return                     # clean close
+            conn.last_seen = self._clock() # any frame proves liveness
             self.frames_in += 1 + msg.get("chunks", 0)
             self.chunks_in += msg.get("chunks", 0)
             self.bytes_in += n
@@ -721,6 +882,15 @@ class TransportServer:
                     await conn.send_blob(header, buffer)
                 else:
                     await conn.send(_fetch_reply("static_data", seq, got))
+            elif kind == "heartbeat":
+                # liveness already refreshed by the read loop (any frame
+                # counts); the reply just completes the round-trip.  The
+                # optional lease_id is advisory — a replayed heartbeat
+                # naming a lease this connection no longer holds (post-
+                # eviction reconnect) is harmless and stays tolerated,
+                # mirroring parse_trace_context's posture on peer junk.
+                self.heartbeats += 1
+                await conn.send({"type": "heartbeat_ok", "seq": seq})
             elif kind == "error_report":
                 conn.endpoint.queue.report_error(
                     int(msg["ticket_id"]), str(msg.get("error", "")),
@@ -803,6 +973,32 @@ class TransportServer:
 # ---------------------------------------------------------------------------
 
 
+class ServerBusy(ConnectionError):
+    """The server refused our ``hello`` with a ``busy`` frame (admission
+    control).  A ConnectionError subclass so the reconnect loop treats it
+    as retryable, never fatal; ``retry_after`` carries the server's
+    (already-sanitised) backoff hint in seconds."""
+
+    def __init__(self, retry_after: float):
+        super().__init__(f"server busy, retry after ~{retry_after:.3g}s")
+        self.retry_after = retry_after
+
+
+def reconnect_backoff(attempt: int, *, base: float, cap: float,
+                      rand: Callable[[], float]) -> float:
+    """Delay before reconnect ``attempt`` (1-based): capped exponential
+    backoff with jitter.
+
+    The undecorated span doubles per attempt from ``base`` up to ``cap``;
+    the returned delay is drawn uniformly from the span's upper half
+    (``[span/2, span]``), so simultaneous victims of one server drop
+    decorrelate (no thundering herd at 10^4 clients) while a positive
+    floor still prevents a tight dial loop.  Pure — ``rand`` is injected
+    (callers pass a seeded generator; tests pass constants)."""
+    span = min(cap, base * (2.0 ** max(0, attempt - 1)))
+    return span * (0.5 + 0.5 * rand())
+
+
 class RemoteBrowserClient(BrowserNodeBase):
     """A simulated browser node that speaks ONLY the wire protocol.
 
@@ -816,17 +1012,29 @@ class RemoteBrowserClient(BrowserNodeBase):
     across the serialization boundary by construction.
 
     **Reconnect with resume** (see docs/PROTOCOL.md §Reconnect): on a
-    connection error the client re-dials with linear backoff, re-submits
-    any finished-but-unsubmitted results under the old lease id (the
-    queue accepts late results; duplicates are dropped), and goes back to
+    connection error the client re-dials with capped **exponential
+    backoff with jitter** (:func:`reconnect_backoff` — at browser scale,
+    a member death drops thousands of connections at once and a linear
+    retry schedule re-dials them in lockstep), re-submits any
+    finished-but-unsubmitted results under the old lease id (the queue
+    accepts late results; duplicates are dropped), and goes back to
     leasing.  Tickets stranded in the dead connection's lease return to
-    the queue through the server watchdog — the same path that recovers
-    dead in-process clients — so a dropped connection delays work but
-    never loses it.
+    the queue through heartbeat eviction (when the server runs it) or
+    the watchdog — so a dropped connection delays work but never loses
+    it.  A ``busy`` refusal (admission control) is retryable the same
+    way, honouring the server's jittered ``retry_after`` hint.
+
+    **Heartbeats**: executes longer than ``heartbeat_interval`` are
+    chunked, with a ``heartbeat`` round-trip between chunks, so a
+    slow-but-alive device holding a lease is never mistaken for a closed
+    tab (``None`` disables; the mid-lease fetch round-trips also count
+    as liveness server-side).
     """
 
     def __init__(self, host: str, port: int, profile: ClientProfile, *,
                  max_reconnects: int = 8, reconnect_delay: float = 0.05,
+                 backoff_cap: float = 2.0,
+                 heartbeat_interval: Optional[float] = 1.0,
                  max_frame_bytes: int = MAX_FRAME_BYTES,
                  max_proto: int = PROTOCOL_VERSION,
                  chunk_bytes: int = DEFAULT_CHUNK_BYTES,
@@ -843,6 +1051,14 @@ class RemoteBrowserClient(BrowserNodeBase):
         self.port = port
         self.max_reconnects = max_reconnects
         self.reconnect_delay = reconnect_delay
+        self.backoff_cap = backoff_cap
+        self.heartbeat_interval = heartbeat_interval
+        # backoff jitter draws come from a dedicated per-client RNG (NOT
+        # the failure-simulation LCG, whose draw sequence tests pin) and
+        # the sleep is injectable, so a backoff schedule is unit-testable
+        # against a fake clock
+        self._backoff_rand = random.Random(profile.name)
+        self._sleep = asyncio.sleep
         self.max_frame_bytes = max_frame_bytes
         #: highest protocol version this client offers in ``hello``; set
         #: to 1 to behave exactly like a pre-v2 (JSON-only) client
@@ -852,6 +1068,8 @@ class RemoteBrowserClient(BrowserNodeBase):
         self.proto = MIN_PROTOCOL_VERSION  # negotiated at hello time
         self.push_invalidations = 0        # server pushes that hit our cache
         self.reconnects = 0
+        self.busy_refusals = 0             # hellos refused with ``busy``
+        self.heartbeats_sent = 0
         self.leases_taken = 0
         self.deltas_applied = 0            # v2 delta fetches spliced in
         self.trace_contexts = 0            # grants that carried trace ctx
@@ -882,6 +1100,14 @@ class RemoteBrowserClient(BrowserNodeBase):
                                      "client": self.profile.name,
                                      "proto": MIN_PROTOCOL_VERSION,
                                      "max_proto": self.max_proto})
+        if reply["type"] == "busy":
+            # admission refusal: retryable backpressure, not an error —
+            # close our half and surface the (sanitised) retry hint to
+            # the reconnect loop
+            self.busy_refusals += 1
+            self._disconnect()
+            raise ServerBusy(parse_retry_after(
+                reply.get("retry_after"), self.reconnect_delay))
         proto = reply.get("proto", MIN_PROTOCOL_VERSION)
         if (not isinstance(proto, int) or isinstance(proto, bool)
                 or not (MIN_PROTOCOL_VERSION <= proto <= self.max_proto)):
@@ -1046,7 +1272,18 @@ class RemoteBrowserClient(BrowserNodeBase):
                             f"{self.profile.name}: gave up after "
                             f"{self.max_reconnects} reconnects") from e
                     self.reconnects += 1
-                    await asyncio.sleep(self.reconnect_delay * failures)
+                    delay = reconnect_backoff(
+                        failures, base=self.reconnect_delay,
+                        cap=self.backoff_cap,
+                        rand=self._backoff_rand.random)
+                    if isinstance(e, ServerBusy):
+                        # a busy server set the floor: honour its hint,
+                        # jittered so refused clients don't re-dial as
+                        # one synchronized wave
+                        delay = max(delay, e.retry_after
+                                    * (0.5 + 0.5
+                                       * self._backoff_rand.random()))
+                    await self._sleep(delay)
         finally:
             self.done = True
             self._disconnect()
@@ -1079,6 +1316,29 @@ class RemoteBrowserClient(BrowserNodeBase):
         self._trace_echo.pop(lease_id, None)
         return reply
 
+    async def _heartbeat(self, lease_id: Optional[int] = None):
+        """One liveness round-trip; any frame refreshes the server's
+        silence clock, this one just carries nothing else."""
+        msg: dict[str, Any] = {"type": "heartbeat"}
+        if lease_id is not None:
+            msg["lease_id"] = lease_id     # advisory, for log correlation
+        await self._request(msg)
+        self.heartbeats_sent += 1
+
+    async def _paced_sleep(self, seconds: float,
+                           lease_id: Optional[int] = None):
+        """Sleep (simulated compute / network latency) while holding a
+        lease: stretches longer than ``heartbeat_interval`` are chunked
+        with a heartbeat between chunks, so the eviction sweeper can tell
+        *slow* from *gone*."""
+        hb = self.heartbeat_interval
+        while hb is not None and seconds > hb:
+            await asyncio.sleep(hb)
+            seconds -= hb
+            await self._heartbeat(lease_id)
+        if seconds > 0:
+            await asyncio.sleep(seconds)
+
     async def _one_lease(self) -> bool:
         """One lease round; returns False when the server says the work is
         done (client exits).  Finished-but-unsubmitted results are parked
@@ -1096,7 +1356,7 @@ class RemoteBrowserClient(BrowserNodeBase):
             self.trace_contexts += 1
         self.leases_taken += 1
         if self.profile.latency:
-            await asyncio.sleep(self.profile.latency)
+            await self._paced_sleep(self.profile.latency, batch.lease_id)
         if (self.profile.die_after is not None
                 and self.leases_taken > self.profile.die_after):
             # tab closed mid-lease: hand the tickets straight back
@@ -1127,8 +1387,9 @@ class RemoteBrowserClient(BrowserNodeBase):
                         raise RuntimeError("simulated browser crash in "
                                            f"{ticket.task_name}")
                     if self.profile.speed > 0:
-                        await asyncio.sleep(ticket.work
-                                            / self.profile.speed)
+                        await self._paced_sleep(
+                            ticket.work / self.profile.speed,
+                            batch.lease_id)
                     results[str(ticket.ticket_id)] = task.run(ticket.args,
                                                               static)
                     self.executed += 1

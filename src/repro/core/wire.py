@@ -45,6 +45,7 @@ __all__ = [
     "encode_binary", "decode_binary",
     "flatten_tree", "leaf_equal", "apply_delta",
     "TRACE_CONTEXT_FIELDS", "make_trace_context", "parse_trace_context",
+    "MAX_RETRY_AFTER_S", "parse_retry_after",
 ]
 
 #: The optional ``trace`` object carried by ``lease_grant`` and ``submit``
@@ -87,6 +88,29 @@ def parse_trace_context(obj: Any) -> Optional[Dict[str, Any]]:
         if isinstance(v, types) and not isinstance(v, bool):
             out[k] = v
     return out
+
+
+#: Ceiling on the ``retry_after`` hint a peer may impose via a ``busy``
+#: refusal — an adversarial (or buggy) server must not be able to park a
+#: client for an hour with one frame.
+MAX_RETRY_AFTER_S = 60.0
+
+
+def parse_retry_after(value: Any, default: float,
+                      *, cap: float = MAX_RETRY_AFTER_S) -> float:
+    """Tolerantly parse a ``busy`` refusal's ``retry_after`` hint (seconds).
+
+    Same adversarial-input posture as :func:`parse_trace_context`: the
+    hint comes from an untrusted peer, so anything that is not a finite
+    non-negative real — missing, a bool, a string, NaN, negative —
+    falls back to ``default``, and a sane value is clamped to ``cap``.
+    Never raises."""
+    if isinstance(value, bool) or not isinstance(value, (int, float)):
+        return default
+    v = float(value)
+    if v != v or v < 0.0:                  # NaN or negative
+        return default
+    return min(v, cap)
 
 
 #: hard ceiling on manifest array count (a manifest is decoded before its

@@ -119,6 +119,18 @@ def collect_transport(reg: MetricsRegistry, server) -> None:
               "Live client connections").set(s["connections"])
     reg.counter("transport.errors_total",
                 "Protocol errors raised").set_total(s["protocol_errors"])
+    reg.counter("transport.busy_refusals_total",
+                "Hellos refused at admission (busy frames sent)"
+                ).set_total(s.get("busy_refusals", 0))
+    reg.counter("transport.heartbeats_total",
+                "Heartbeat frames answered").set_total(
+                    s.get("heartbeats", 0))
+    reg.counter("transport.evictions_total",
+                "Connections evicted for heartbeat silence").set_total(
+                    s.get("evictions", 0))
+    reg.counter("transport.evicted_leases_total",
+                "Leases force-released by eviction").set_total(
+                    s.get("evicted_leases", 0))
     frames = reg.counter("transport.frames_total",
                          "Wire frames (chunk frames included)",
                          labels=("direction", "type"))

@@ -154,7 +154,8 @@ class FederatedTrainer(RoundDriverLifetime):
 
     def __init__(self, distributor, *, task_name: str = "backbone_shard",
                  barrier_k=None, straggler_policy: str = "wait",
-                 timeout: float = 60.0, rebalancer=None, metrics=None):
+                 timeout: float = 60.0, stall_after: Optional[float] = None,
+                 rebalancer=None, metrics=None):
         if straggler_policy not in STRAGGLER_POLICIES:
             raise KeyError(f"straggler_policy must be one of "
                            f"{STRAGGLER_POLICIES}, got {straggler_policy!r}")
@@ -163,8 +164,16 @@ class FederatedTrainer(RoundDriverLifetime):
         self.barrier_k = barrier_k
         self.straggler_policy = straggler_policy
         self.timeout = timeout
+        # a round STALLS when no new shard arrives for ``stall_after``
+        # clock seconds while it is still open — the symptom of a churned
+        # fleet whose stranded leases are not coming back.  Stalls are
+        # counted (and traced) without aborting the round: eviction or
+        # the watchdog may still rescue it before ``timeout``.  The chaos
+        # harness asserts this counter stays 0 under 20%/round churn.
+        self.stall_after = stall_after
         self.rebalancer = rebalancer
         self.rounds = 0
+        self.stalls = 0
         self.reticketed_total = 0
         self.folded_total = 0
         self.tracer = getattr(distributor, "tracer", None)
@@ -184,6 +193,9 @@ class FederatedTrainer(RoundDriverLifetime):
                 "Straggler shards folded (cancelled) at round close")
             self._m_timeouts = metrics.counter(
                 "round.timeouts_total", "Training rounds abandoned on timeout")
+            self._m_stalls = metrics.counter(
+                "round.stalls_total",
+                "Open rounds that made no progress for stall_after seconds")
 
     # -- shard planning --------------------------------------------------------
 
@@ -299,12 +311,32 @@ class FederatedTrainer(RoundDriverLifetime):
                 args={"round": self.rounds, "shards": n, "barrier_k": k,
                       "policy": self.straggler_policy})
         barrier_open: Optional[float] = None   # clock when K-of-N reached
+        progress_count = -1                # arrivals at last progress mark
+        progress_at = t0
+        stalled = False                    # at most one stall per round
         try:
             while True:
                 # capture the wake epoch before probing: a submit can only
                 # land at an await point, so a notification can't be missed
                 wake = self.dist._wake_event()
                 done = self.dist.queue.completed_results(tids)
+                if len(done) > progress_count:
+                    progress_count = len(done)
+                    progress_at = self.dist.queue.clock()
+                elif (self.stall_after is not None and not stalled
+                        and self.dist.queue.clock() - progress_at
+                        > self.stall_after):
+                    stalled = True
+                    self.stalls += 1
+                    if self.metrics is not None:
+                        self._m_stalls.inc()
+                    if tr is not None:
+                        tr.instant("round.stall", track="trainer",
+                                   cat="warning",
+                                   ts=self.dist.queue.clock(),
+                                   args={"round": self.rounds,
+                                         "arrived": len(done), "n": n,
+                                         "stalled_for": self.stall_after})
                 if len(done) >= k and barrier_open is None:
                     barrier_open = self.dist.queue.clock()
                     if tr is not None:

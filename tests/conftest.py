@@ -2,7 +2,14 @@ import os
 import sys
 import types
 
+import pytest
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# tests/chaos.py holds real test functions but is imported (via
+# tests/test_chaos.py) rather than collected directly; opt it into
+# pytest's assert rewriting so its failures stay introspectable
+pytest.register_assert_rewrite("chaos")
 
 # The container has no `hypothesis`; register the deterministic shim in its
 # place so the property tests still execute (see tests/_hypothesis_shim.py).

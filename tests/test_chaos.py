@@ -1,0 +1,9 @@
+"""Collection shim for the chaos harness.
+
+The harness and its tests live in ``tests/chaos.py`` — kept without the
+``test_`` prefix so benchmarks and future suites can import
+``ChurningFleet``/``chaos_profiles`` without dragging a test module
+name along.  Re-exporting here puts the ``test_*`` functions where
+pytest's default collection pattern finds them.
+"""
+from chaos import *  # noqa: F401,F403

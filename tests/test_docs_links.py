@@ -28,6 +28,8 @@ def test_protocol_doc_covers_every_wire_message_type():
     emitted |= set(re.findall(r"\[[\"']type[\"']\]\s*[!=]=\s*[\"'](\w+)[\"']",
                               src))
     assert emitted, "no message types found in transport.py (regex rot?)"
+    # the churn-control messages must be present, not just the legacy set
+    assert {"heartbeat", "heartbeat_ok", "busy"} <= emitted
     undocumented = {t for t in emitted if f"`{t}`" not in spec}
     assert not undocumented, (
         f"message types missing from docs/PROTOCOL.md: {undocumented}")

@@ -342,3 +342,190 @@ def test_fuzz_ticket_codec_random_field_soup(soup):
         assert e.code == "bad-message"
     else:
         assert isinstance(t.ticket_id, int)
+
+
+# ---------------------------------------------------------------------------
+# heartbeat / busy (browser-scale churn messages)
+# ---------------------------------------------------------------------------
+
+
+def _square(x, static):
+    return x * x
+
+
+def _live_server(**server_kw):
+    """An AsyncDistributor with one leasable ticket behind a
+    TransportServer, for raw-socket pokes at the stateful handlers the
+    decoder-level fuzz above can't reach."""
+    from repro.core.distributor import (AsyncDistributor, FixedSizer,
+                                        TaskDef)
+    from repro.core.transport import TransportServer
+    d = AsyncDistributor(timeout=20.0, redistribute_min=0.0,
+                         sizer=FixedSizer(1), watchdog_interval=5.0,
+                         grace=1000.0)
+    d.register_task(TaskDef("sq", _square))
+    d.add_work("sq", [3])
+    return d, TransportServer(d, **server_kw)
+
+
+async def _dial(addr, *msgs):
+    """Open a raw connection, write ``msgs`` as frames, return
+    (reader, writer)."""
+    reader, writer = await asyncio.open_connection(*addr)
+    for m in msgs:
+        writer.write(encode_frame(m))
+    await writer.drain()
+    return reader, writer
+
+
+def test_heartbeat_before_hello_rejected():
+    """A heartbeat is NOT a handshake: pre-hello it gets the same
+    bad-handshake error as any other premature frame."""
+    from repro.core.transport import read_frame
+
+    async def go():
+        d, server = _live_server()
+        addr = await server.start()
+        reader, writer = await _dial(addr, {"type": "heartbeat", "seq": 1})
+        reply = await asyncio.wait_for(read_frame(reader), timeout=5.0)
+        writer.close()
+        await server.stop()
+        return reply
+
+    reply = asyncio.run(go())
+    assert reply["type"] == "error" and reply["code"] == "bad-handshake"
+
+
+def test_heartbeat_garbage_fields_still_heartbeat_ok():
+    """Heartbeats are liveness-only: junk lease ids, wrong-typed extras
+    and unknown fields never error a connection — every variant answers
+    ``heartbeat_ok`` with the seq echoed."""
+    from repro.core.transport import PROTOCOL_VERSION, read_frame
+    variants = [
+        {},                                 # bare
+        {"lease_id": 999999},               # unknown lease
+        {"lease_id": "not-an-int"},         # mistyped lease
+        {"lease_id": None, "junk": [1, 2]},
+        {"client": True, "proto": -9},      # handshake fields replayed
+        {"results": {"1": "stale"}},        # submit fields smuggled in
+    ]
+
+    async def go():
+        d, server = _live_server()
+        addr = await server.start()
+        reader, writer = await _dial(
+            addr, {"type": "hello", "seq": 1, "client": "hb",
+                   "proto": PROTOCOL_VERSION})
+        hello = await asyncio.wait_for(read_frame(reader), timeout=5.0)
+        assert hello["type"] == "hello_ok"
+        replies = []
+        for seq, extra in enumerate(variants, start=2):
+            writer.write(encode_frame(
+                {"type": "heartbeat", "seq": seq, **extra}))
+            await writer.drain()
+            replies.append(await asyncio.wait_for(read_frame(reader),
+                                                  timeout=5.0))
+        writer.close()
+        stats = server.stats()
+        await server.stop()
+        return replies, stats
+
+    replies, stats = asyncio.run(go())
+    for seq, reply in enumerate(replies, start=2):
+        assert reply == {"type": "heartbeat_ok", "seq": seq}
+    assert stats["heartbeats"] == len(replies)
+
+
+def test_replayed_heartbeat_after_eviction_is_inert():
+    """An evicted client reconnecting and replaying heartbeats for its
+    force-released lease gets ``heartbeat_ok`` (liveness for the NEW
+    connection) but the old lease stays released — a heartbeat can never
+    resurrect evicted work."""
+    from repro.core.transport import PROTOCOL_VERSION, read_frame
+
+    async def go():
+        d, server = _live_server(heartbeat_timeout=5.0)
+        addr = await server.start()
+        reader, writer = await _dial(
+            addr, {"type": "hello", "seq": 1, "client": "zombie",
+                   "proto": PROTOCOL_VERSION},
+            {"type": "lease_request", "seq": 2})
+        await asyncio.wait_for(read_frame(reader), timeout=5.0)
+        grant = await asyncio.wait_for(read_frame(reader), timeout=5.0)
+        lease_id = grant["lease_id"]
+        released = await server.evict_client("zombie")
+        writer.close()
+        r2, w2 = await _dial(
+            addr, {"type": "hello", "seq": 5, "client": "zombie",
+                   "proto": PROTOCOL_VERSION},
+            {"type": "heartbeat", "seq": 6, "lease_id": lease_id},
+            {"type": "heartbeat", "seq": 7, "lease_id": lease_id})
+        replies = [await asyncio.wait_for(read_frame(r2), timeout=5.0)
+                   for _ in range(3)]
+        w2.close()
+        outstanding = d.queue.lease_is_outstanding(lease_id)
+        await server.stop()
+        return released, replies, outstanding
+
+    released, replies, outstanding = asyncio.run(go())
+    assert released == 1
+    assert replies[0]["type"] == "hello_ok"
+    assert replies[1] == {"type": "heartbeat_ok", "seq": 6}
+    assert replies[2] == {"type": "heartbeat_ok", "seq": 7}
+    assert not outstanding                 # the lease stayed evicted
+
+
+@settings(max_examples=150, deadline=None)
+@given(st.one_of(st.integers(-10, 10), st.booleans(), st.just(None),
+                 st.just(float("nan")), st.just(float("inf")),
+                 st.floats(min_value=-5.0, max_value=200.0),
+                 st.binary(max_size=8),
+                 st.lists(st.integers(0, 3), max_size=2)))
+def test_fuzz_parse_retry_after_total(value):
+    """``parse_retry_after`` over junk: always a finite float in
+    [0, cap]; non-numeric / bool / NaN / negative fall back to the
+    caller's default, numeric values clamp to the cap."""
+    from repro.core.wire import MAX_RETRY_AFTER_S, parse_retry_after
+    got = parse_retry_after(value, 0.25)
+    assert isinstance(got, float)
+    assert 0.0 <= got <= MAX_RETRY_AFTER_S
+    if isinstance(value, bool) or not isinstance(value, (int, float)) \
+            or value != value or value < 0.0:
+        assert got == 0.25
+    else:
+        assert got == min(float(value), MAX_RETRY_AFTER_S)
+
+
+def test_busy_reply_with_junk_retry_after_still_clean_refusal():
+    """A hostile server answering hello with ``busy`` and a garbage
+    ``retry_after`` must produce a clean :class:`ServerBusy` whose hint
+    is clamped/defaulted — never a crash or an unbounded sleep."""
+    from repro.core.distributor import ClientProfile
+    from repro.core.transport import (RemoteBrowserClient, ServerBusy,
+                                      read_frame)
+
+    async def handle(reader, writer):
+        msg = await read_frame(reader)
+        writer.write(encode_frame({"type": "busy", "seq": msg["seq"],
+                                   "retry_after": [1e18, "soon", None]}))
+        await writer.drain()
+        writer.close()
+
+    async def go():
+        srv = await asyncio.start_server(handle, "127.0.0.1", 0)
+        host, port = srv.sockets[0].getsockname()[:2]
+        client = RemoteBrowserClient(host, port,
+                                     ClientProfile(name="hopeful"),
+                                     reconnect_delay=0.25)
+        try:
+            await asyncio.wait_for(client._connect(), timeout=5.0)
+        except ServerBusy as e:
+            return e.retry_after, client.busy_refusals
+        finally:
+            srv.close()
+            await srv.wait_closed()
+        raise AssertionError("busy reply did not raise ServerBusy")
+
+    retry_after, refusals = asyncio.run(go())
+    assert retry_after == 0.25             # junk -> client's own default
+    assert refusals == 1
