@@ -31,9 +31,19 @@ completions** (exactly-once accepts), churned 4-member throughput
 ``benchmarks/run.py --only churn`` re-runs this and writes
 ``BENCH_churn.json``; assertions run BEFORE the file is written.
 
+``--flight-dump FILE`` additionally arms a flight recorder: a
+ring-buffered :class:`repro.obs.Tracer` rides the churned cell
+(``transport.busy`` / ``transport.evict`` instants at the sim's
+admission refusals and eviction sweeps) with a ``dump_on`` trigger on
+the first eviction, so the run writes a bounded Perfetto file showing
+the lead-up to the failure — the same mechanism production code arms on
+``distributor.stall``.  CI runs the smoke cell with it and uploads the
+dump as an artifact.
+
 Usage:
   PYTHONPATH=src python benchmarks/churn_scale.py [--json out.json]
                                                   [--smoke] [--seed N]
+                                                  [--flight-dump FILE]
 """
 from __future__ import annotations
 
@@ -101,7 +111,8 @@ class _Client:
 
 def simulate(population: int, n_members: int, *, rounds: int = ROUNDS,
              tickets_per_round: int | None = None,
-             churn: float = CHURN_PER_ROUND, seed: int = 0) -> dict:
+             churn: float = CHURN_PER_ROUND, seed: int = 0,
+             tracer=None) -> dict:
     """One cell: ``rounds`` rounds of ``tickets_per_round`` tickets over a
     churning population.  Returns throughput + the audit counters."""
     if tickets_per_round is None:
@@ -199,6 +210,11 @@ def simulate(population: int, n_members: int, *, rounds: int = ROUNDS,
                 continue
             if kind == "evict":
                 stats["evictions"] += 1
+                if tracer is not None:
+                    tracer.instant("transport.evict", track="wire",
+                                   cat="wire", ts=t,
+                                   args={"client": name,
+                                         "leases": len(c.leases)})
                 conns[c.member] -= 1
                 c.member = None
                 for lease_id in list(c.leases):
@@ -213,6 +229,11 @@ def simulate(population: int, n_members: int, *, rounds: int = ROUNDS,
                 m = min(range(n_members), key=lambda i: conns[i])
                 if conns[m] >= CONNS_PER_MEMBER:
                     stats["busy_refusals"] += 1
+                    if tracer is not None:
+                        tracer.instant("transport.busy", track="wire",
+                                       cat="wire", ts=t,
+                                       args={"client": name,
+                                             "attempts": c.attempts + 1})
                     c.attempts += 1
                     push(t + reconnect_backoff(
                         c.attempts, base=RECONNECT_DELAY, cap=BACKOFF_CAP,
@@ -291,10 +312,14 @@ def simulate(population: int, n_members: int, *, rounds: int = ROUNDS,
     }
 
 
-def run_sweep(*, population: int = POPULATION, seed: int = 0) -> dict:
+def run_sweep(*, population: int = POPULATION, seed: int = 0,
+              tracer=None) -> dict:
     """The benchmark cells: the churned 10k run, its no-churn ceiling,
-    and a 1-member cell for the scaling headline."""
-    churned = simulate(population, 4, churn=CHURN_PER_ROUND, seed=seed)
+    and a 1-member cell for the scaling headline.  ``tracer`` (if any)
+    rides the churned cell only — that is the one with failures worth a
+    flight-recorder dump."""
+    churned = simulate(population, 4, churn=CHURN_PER_ROUND, seed=seed,
+                       tracer=tracer)
     ceiling = simulate(population, 4, churn=0.0, seed=seed)
     single = simulate(population, 1, rounds=1, churn=CHURN_PER_ROUND,
                       seed=seed)
@@ -342,9 +367,19 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help=f"reduced population ({SMOKE_POPULATION}) for CI")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--flight-dump", default=None, metavar="FILE",
+                    help="arm a ring-buffered flight recorder on the "
+                         "churned cell; the first eviction triggers a "
+                         "bounded Perfetto dump to FILE")
     args = ap.parse_args()
     population = SMOKE_POPULATION if args.smoke else POPULATION
-    results = run_sweep(population=population, seed=args.seed)
+    tracer = None
+    if args.flight_dump:
+        from repro.obs import Tracer
+        tracer = Tracer(max_events=4096)
+        tracer.dump_on("transport.evict", args.flight_dump)
+    results = run_sweep(population=population, seed=args.seed,
+                        tracer=tracer)
 
     hdr = f"{'cell':<15}{'pop':>7}{'mem':>4}{'tput(t/s)':>11}" \
           f"{'stalls':>7}{'lost':>6}{'dup':>5}{'evict':>7}{'busy':>7}"
@@ -360,6 +395,15 @@ def main():
           f"{results['throughput_ratio_vs_ceiling']:.3f}x the no-churn "
           f"ceiling; 4-member speedup {results['speedup_4v1']:.2f}x")
     check(results)
+
+    if tracer is not None:
+        # check() just proved evictions > 0, so the trigger MUST have
+        # fired — a missing dump means the recorder itself regressed
+        assert tracer.dumps_written, \
+            "evictions happened but no flight dump was written"
+        print(f"flight recorder dumped {tracer.dumps_written[0]} "
+              f"({len(tracer.events())} buffered events, "
+              f"{tracer.events_dropped} evicted from the ring)")
 
     if args.json:
         with open(args.json, "w") as f:

@@ -28,18 +28,54 @@ import time
 import traceback
 
 OUT_DIR = "."
+WRITTEN: dict = {}     # bench name -> BENCH_*.json filename, this run
 
 
 def _write_json(name: str, payload: dict) -> str:
     """Atomically write BENCH_<name>.json (temp + rename): readers and CI
     artifact uploads can never observe a half-written file."""
     os.makedirs(OUT_DIR, exist_ok=True)
-    path = os.path.join(OUT_DIR, f"BENCH_{name}.json")
+    fname = f"BENCH_{name}.json"
+    path = os.path.join(OUT_DIR, fname)
     tmp = f"{path}.tmp"
     with open(tmp, "w") as f:
         json.dump(payload, f, indent=2)
     os.replace(tmp, path)
+    WRITTEN[name] = fname
     print(f"  wrote {path}")
+    return path
+
+
+def write_summary(statuses: dict) -> str:
+    """Consolidated ``BENCH_summary.json``: one entry per benchmark with
+    its gate verdict and the BENCH_*.json it wrote (null when its gates
+    failed before the write).  **Merges** with an existing summary in
+    ``OUT_DIR`` — CI invokes the harness once per ``--only`` entry, and
+    each invocation must extend the index, not erase the others'
+    results.  Written atomically, like every BENCH file."""
+    path = os.path.join(OUT_DIR, "BENCH_summary.json")
+    benches: dict = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                benches = json.load(f).get("benches", {})
+        except (OSError, ValueError):
+            benches = {}          # corrupt summary: rebuild from here
+    for name, status in statuses.items():
+        benches[name] = {"ok": status["ok"],
+                         "json": WRITTEN.get(name),
+                         "error": status.get("error")}
+    payload = {
+        "benches": {k: benches[k] for k in sorted(benches)},
+        "passed": sum(1 for b in benches.values() if b["ok"]),
+        "failed": sum(1 for b in benches.values() if not b["ok"]),
+    }
+    tmp = f"{path}.tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=2)
+    os.replace(tmp, path)
+    print(f"wrote {path} ({payload['passed']} pass / "
+          f"{payload['failed']} fail across {len(benches)} indexed)")
     return path
 
 
@@ -246,14 +282,17 @@ def bench_server_step(full: bool):
 
 
 def bench_obs(full: bool):
-    """Observability layer: trace determinism, span balance, and the
-    tracing-overhead gate; writes BENCH_obs.json with the overhead ratio
-    and the traced sweep cell's event counts."""
+    """Observability layer: trace determinism, span balance, the
+    tracing-overhead gate, fleet-export determinism, and the SLO gate
+    (which must trip on an injected regression — a gate that cannot
+    fail is not a gate); writes BENCH_obs.json."""
     import sys as _sys
     if "src" not in _sys.path:
         _sys.path.insert(0, "src")
     from benchmarks import scheduler_throughput
-    from repro.obs import MetricsRegistry, Tracer, collect_queue
+    from repro.obs import (DEFAULT_ROUND_SLOS, FleetAggregator,
+                           MetricsRegistry, SloMonitor, Tracer,
+                           collect_queue)
 
     t0 = time.perf_counter()
     # determinism: two same-seed virtual-clock runs must serialize to
@@ -278,6 +317,46 @@ def bench_obs(full: bool):
     collect_queue(reg, q)
     assert reg.get("queue.tickets_count").value() == 16, reg.snapshot()
 
+    # fleet-export determinism: two identically-fed aggregators (same
+    # synthetic remote batch, same skew sample) must serialize the
+    # merged skew-corrected timeline byte-identically
+    batch = {"metrics": {"client.executed_total": {
+                 "kind": "counter", "help": "Tickets executed",
+                 "values": [{"labels": {}, "value": 7}]}},
+             "spans": [{"ph": "X", "name": "client.execute",
+                        "cat": "client", "track": "client:tab-0",
+                        "ts": 3.0, "dur": 0.5, "args": {}}],
+             "dropped": 0, "local_drops": 0}
+    fleet_json = []
+    for _ in range(2):
+        fl = FleetAggregator()
+        fl.clock_sample("tab-0", offset=2.5, rtt=0.01)
+        assert fl.ingest("tab-0", dict(batch)), "synthetic batch refused"
+        fleet_json.append(fl.to_json())
+    assert fleet_json[0] == fleet_json[1], "fleet exports differ"
+    remote_ts = json.loads(fleet_json[0])["traceEvents"]
+    corrected = [e for e in remote_ts if e["name"] == "client.execute"]
+    assert corrected and corrected[0]["ts"] == 5.5e6, corrected  # 3.0+2.5 s→us
+
+    # SLO gate: clean registry passes; an injected latency regression
+    # (rounds past the histogram's 60 s edge) MUST trip it
+    def slo_eval(durations):
+        reg2 = MetricsRegistry()
+        h = reg2.histogram("round.duration_seconds",
+                           "Virtual-clock duration of each closed round")
+        for d in durations:
+            h.observe(d)
+        mon = SloMonitor(reg2, DEFAULT_ROUND_SLOS)
+        results = mon.evaluate()
+        return results, mon
+    clean, _ = slo_eval([0.4, 0.6, 0.8, 1.2])
+    assert all(r.ok for r in clean), [r.as_dict() for r in clean]
+    regressed, mon = slo_eval([0.4, 0.6] + [120.0] * 18)
+    tripped = [r for r in regressed if not r.ok]
+    assert tripped and mon.breaches_total > 0, \
+        "injected regression did NOT trip the SLO gate"
+    assert {r.slo.name for r in tripped} == {"round-latency-p95"}, tripped
+
     gate = scheduler_throughput.overhead_gate()
     us = (time.perf_counter() - t0) * 1e6
     # acceptance bars BEFORE writing (a failed gate must not leave a
@@ -285,11 +364,15 @@ def bench_obs(full: bool):
     assert gate["ok"], gate
     payload = {"determinism": {"runs": 2, "identical": True,
                                "events": events},
+               "fleet_determinism": {"runs": 2, "identical": True},
+               "slo_gate": {"clean_ok": True, "regression_tripped": True,
+                            "tripped": [r.as_dict() for r in tripped]},
                "overhead": gate,
                "metric_series": len(reg.names())}
     _write_json("obs", payload)
     _csv("obs_layer", us,
-         f"overhead_ratio={gate['ratio']}x|trace_events={events}")
+         f"overhead_ratio={gate['ratio']}x|trace_events={events}|"
+         f"slo_gate=trips_on_regression")
     return payload
 
 
@@ -349,18 +432,23 @@ def main() -> None:
     print("name,us_per_call,derived")
     names = [args.only] if args.only else list(BENCHES)
     failures = 0
+    statuses: dict = {}
     for name in names:
         print(f"== {name} ==", flush=True)
         try:
             BENCHES[name](args.full)
-        except Exception:
+            statuses[name] = {"ok": True}
+        except Exception as e:
             # keep the harness going so one broken benchmark doesn't hide
             # the others' results, but fail LOUDLY: full traceback now,
             # nonzero exit at the end (no BENCH json is written for a
             # failed entry — _write_json runs after a bench's assertions)
             failures += 1
+            statuses[name] = {"ok": False,
+                              "error": f"{type(e).__name__}: {e}"[:500]}
             print(f"  FAILED: {name}")
             traceback.print_exc()
+    write_summary(statuses)
     if failures:
         print(f"{failures} benchmark(s) failed", file=sys.stderr)
         sys.exit(1)

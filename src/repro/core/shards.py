@@ -458,7 +458,7 @@ class ShardedTicketQueue:
         shard_snaps = [sh.snapshot() for sh in self.shards]
         summed = {k: sum(s[k] for s in shard_snaps)
                   for k in ("tickets", "waiting", "in_flight", "executed",
-                            "errors", "redistributions")}
+                            "errors", "redistributions", "duplicates")}
         with self._stats_lock:
             summed["lease_releases"] = self.releases
             summed["clients"] = {

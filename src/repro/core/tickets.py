@@ -261,6 +261,10 @@ class TicketQueue:
             collections.OrderedDict()
         self.stats: dict[str, ClientStats] = {}
         self.releases = 0
+        # submits for an already-completed ticket (racing redistributed
+        # leases; first result won) — dropped, but counted so the SLO
+        # "zero duplicated results reach training math" is checkable
+        self.duplicates = 0
         self._incomplete = 0      # live not-yet-completed ticket count
         self._done = threading.Event()
         self._done.set()
@@ -373,6 +377,8 @@ class TicketQueue:
                        client: str) -> bool:
         t = self._tickets.get(ticket_id)
         if t is None or t.completed:
+            if t is not None:
+                self.duplicates += 1
             return False
         t.completed = True
         t.result = result
@@ -684,6 +690,7 @@ class TicketQueue:
                 "redistributions": sum(max(t.distribute_count - 1, 0)
                                        for t in ts),
                 "lease_releases": self.releases,
+                "duplicates": self.duplicates,
                 "clients": {
                     name: {"rate": s.rate, "leases": s.leases,
                            "completed": s.completed_tickets,

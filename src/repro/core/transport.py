@@ -86,7 +86,9 @@ from repro.core.tickets import LeaseBatch
 # ProtocolError lives in the leaf module repro.core.wire (the registry's
 # codecs raise it too); re-exported here where it historically lived.
 from repro.core.wire import (ProtocolError, decode_binary, encode_binary,
-                             make_trace_context, parse_retry_after,
+                             make_clock_echo, make_telemetry,
+                             make_trace_context, parse_clock_echo,
+                             parse_retry_after, parse_telemetry,
                              parse_trace_context)
 
 #: Highest protocol version this build speaks.  ``hello`` negotiates: the
@@ -455,12 +457,17 @@ class TransportServer:
                  heartbeat_timeout: Optional[float] = None,
                  eviction_interval: Optional[float] = None,
                  clock: Callable[[], float] = time.monotonic,
-                 tracer=None):
+                 tracer=None, fleet=None):
         self.distributor = distributor
         # default to the distributor's tracer, so wiring one tracer into
         # the fabric lights up the transport lanes with no extra plumbing
         self.tracer = (tracer if tracer is not None
                        else getattr(distributor, "tracer", None))
+        #: optional repro.obs.FleetAggregator — the sink for clients'
+        #: ``telemetry`` frames and heartbeat clock echoes.  Unset, the
+        #: server drops telemetry (counted) and its heartbeat replies
+        #: stay byte-identical to pre-fleet builds.
+        self.fleet = fleet
         self._wire_spans: dict[int, int] = {}     # lease_id -> span id
         self.host = host
         self.port = port
@@ -496,6 +503,8 @@ class TransportServer:
         self.heartbeats = 0                # heartbeat frames answered
         self.evictions = 0                 # connections evicted
         self.evicted_leases = 0            # leases force-released by those
+        self.telemetry_accepted = 0        # telemetry batches into fleet
+        self.telemetry_dropped = 0         # telemetry batches discarded
         # per-message-type wire accounting (frames include chunk frames;
         # feeds the obs MetricsRegistry via repro.obs.collect)
         self.msg_frames_in: collections.Counter = collections.Counter()
@@ -665,6 +674,8 @@ class TransportServer:
                 "heartbeats": self.heartbeats,
                 "evictions": self.evictions,
                 "evicted_leases": self.evicted_leases,
+                "telemetry_accepted": self.telemetry_accepted,
+                "telemetry_dropped": self.telemetry_dropped,
                 "by_type": {
                     "frames_in": dict(self.msg_frames_in),
                     "frames_out": dict(self.msg_frames_out),
@@ -890,7 +901,39 @@ class TransportServer:
                 # eviction reconnect) is harmless and stays tolerated,
                 # mirroring parse_trace_context's posture on peer junk.
                 self.heartbeats += 1
-                await conn.send({"type": "heartbeat_ok", "seq": seq})
+                reply: dict[str, Any] = {"type": "heartbeat_ok",
+                                         "seq": seq}
+                if self.fleet is not None and conn.proto >= 2:
+                    # fleet plane armed: stamp the reply so the client
+                    # can echo (t0, server_ts, t1) next heartbeat, and
+                    # turn any echo riding THIS heartbeat into a clock-
+                    # skew sample.  Without a fleet the reply stays
+                    # byte-identical to pre-fleet servers.
+                    reply["server_ts"] = conn.endpoint.queue.clock()
+                    echo = parse_clock_echo(msg.get("echo"))
+                    if echo is not None:
+                        t0, sts, t1 = echo
+                        self.fleet.clock_sample(
+                            conn.client,
+                            offset=sts - (t0 + t1) / 2.0, rtt=t1 - t0)
+                await conn.send(reply)
+            elif kind == "telemetry":
+                # observability payload from an untrusted peer: parse
+                # tolerantly, ingest when the fleet plane is armed, and
+                # otherwise drop silently-but-counted.  Garbage costs
+                # the sender its batch, never the server its connection.
+                accepted = False
+                if conn.proto >= 2 and self.fleet is not None:
+                    parsed = parse_telemetry(msg.get("telemetry"))
+                    accepted = self.fleet.ingest(
+                        conn.client, parsed,
+                        recv_ts=conn.endpoint.queue.clock())
+                if accepted:
+                    self.telemetry_accepted += 1
+                else:
+                    self.telemetry_dropped += 1
+                await conn.send({"type": "telemetry_ok", "seq": seq,
+                                 "accepted": accepted})
             elif kind == "error_report":
                 conn.endpoint.queue.report_error(
                     int(msg["ticket_id"]), str(msg.get("error", "")),
@@ -1039,7 +1082,8 @@ class RemoteBrowserClient(BrowserNodeBase):
                  max_proto: int = PROTOCOL_VERSION,
                  chunk_bytes: int = DEFAULT_CHUNK_BYTES,
                  max_blob_bytes: int = MAX_BLOB_BYTES,
-                 tracer=None):
+                 tracer=None, metrics=None, telemetry: bool = False,
+                 clock: Callable[[], float] = time.monotonic):
         # cache/counters/failure-RNG come from the shared browser base;
         # there is no distributor object on this side of the wire
         self._init_browser(None, profile)
@@ -1047,6 +1091,39 @@ class RemoteBrowserClient(BrowserNodeBase):
         # server's): records client.execute lanes; independent of the
         # trace-context echo, which only needs the server to be tracing
         self.tracer = tracer
+        # optional client-LOCAL MetricsRegistry: busy refusals, backoff
+        # sleeps, and reconnects land here (the client-side half of the
+        # events the server only sees from its side of the wire).  With
+        # ``telemetry=True`` on a v2 connection, snapshots of this
+        # registry plus the tracer's drained span buffer flush to the
+        # server's FleetAggregator, piggybacked on submits/heartbeats.
+        # ``clock`` stamps heartbeat echoes for the server's clock-skew
+        # estimate — wire the tracer's clock to the SAME callable so
+        # shipped span timestamps live in the clock the skew remaps.
+        self.metrics = metrics
+        self.telemetry = telemetry
+        self._clock = clock
+        self._last_echo: Optional[dict] = None   # (t0, server_ts, t1)
+        self.telemetry_sent = 0            # batches the server accepted
+        self.telemetry_refused = 0         # batches it answered accepted=False
+        self._m_busy = self._m_reconnects = self._m_backoff = None
+        self._m_executed = self._m_heartbeats = None
+        if metrics is not None:
+            # no labels here: the FleetAggregator injects client= when
+            # it merges per-client registries into the fleet snapshot
+            self._m_busy = metrics.counter(
+                "client.busy_refusals_total",
+                "Hellos this client had refused with busy")
+            self._m_reconnects = metrics.counter(
+                "client.reconnects_total",
+                "Reconnect attempts after transport failures")
+            self._m_backoff = metrics.histogram(
+                "client.backoff_sleep_seconds",
+                "Jittered backoff sleeps before re-dialling")
+            self._m_executed = metrics.counter(
+                "client.executed_total", "Tickets executed")
+            self._m_heartbeats = metrics.counter(
+                "client.heartbeats_total", "Heartbeat round-trips sent")
         self.host = host
         self.port = port
         self.max_reconnects = max_reconnects
@@ -1105,9 +1182,17 @@ class RemoteBrowserClient(BrowserNodeBase):
             # close our half and surface the (sanitised) retry hint to
             # the reconnect loop
             self.busy_refusals += 1
+            retry_after = parse_retry_after(
+                reply.get("retry_after"), self.reconnect_delay)
+            if self._m_busy is not None:
+                self._m_busy.inc()
+            if self.tracer is not None:
+                self.tracer.instant(
+                    "client.busy", cat="client",
+                    track=f"client:{self.profile.name}",
+                    args={"retry_after": retry_after})
             self._disconnect()
-            raise ServerBusy(parse_retry_after(
-                reply.get("retry_after"), self.reconnect_delay))
+            raise ServerBusy(retry_after)
         proto = reply.get("proto", MIN_PROTOCOL_VERSION)
         if (not isinstance(proto, int) or isinstance(proto, bool)
                 or not (MIN_PROTOCOL_VERSION <= proto <= self.max_proto)):
@@ -1272,6 +1357,14 @@ class RemoteBrowserClient(BrowserNodeBase):
                             f"{self.profile.name}: gave up after "
                             f"{self.max_reconnects} reconnects") from e
                     self.reconnects += 1
+                    if self._m_reconnects is not None:
+                        self._m_reconnects.inc()
+                    if self.tracer is not None:
+                        self.tracer.instant(
+                            "client.reconnect", cat="client",
+                            track=f"client:{self.profile.name}",
+                            args={"attempt": failures,
+                                  "busy": isinstance(e, ServerBusy)})
                     delay = reconnect_backoff(
                         failures, base=self.reconnect_delay,
                         cap=self.backoff_cap,
@@ -1283,6 +1376,13 @@ class RemoteBrowserClient(BrowserNodeBase):
                         delay = max(delay, e.retry_after
                                     * (0.5 + 0.5
                                        * self._backoff_rand.random()))
+                    if self._m_backoff is not None:
+                        self._m_backoff.observe(delay)
+                    if self.tracer is not None:
+                        self.tracer.instant(
+                            "client.backoff", cat="client",
+                            track=f"client:{self.profile.name}",
+                            args={"delay_s": delay})
                     await self._sleep(delay)
         finally:
             self.done = True
@@ -1318,12 +1418,56 @@ class RemoteBrowserClient(BrowserNodeBase):
 
     async def _heartbeat(self, lease_id: Optional[int] = None):
         """One liveness round-trip; any frame refreshes the server's
-        silence clock, this one just carries nothing else."""
+        silence clock.  On a v2 connection to a fleet-plane server each
+        exchange also advances the clock-skew protocol: the previous
+        exchange's ``(t0, server_ts, t1)`` echo rides out, and this
+        reply's ``server_ts`` (when present) seeds the next one.  A
+        heartbeat is also a telemetry flush trigger."""
         msg: dict[str, Any] = {"type": "heartbeat"}
         if lease_id is not None:
             msg["lease_id"] = lease_id     # advisory, for log correlation
-        await self._request(msg)
+        if self.proto >= 2 and self._last_echo is not None:
+            msg["echo"] = self._last_echo
+            self._last_echo = None
+        t0 = self._clock()
+        reply = await self._request(msg)
         self.heartbeats_sent += 1
+        if self._m_heartbeats is not None:
+            self._m_heartbeats.inc()
+        sts = reply.get("server_ts")
+        if (self.proto >= 2 and isinstance(sts, (int, float))
+                and not isinstance(sts, bool)):
+            self._last_echo = make_clock_echo(t0, sts, self._clock())
+        await self._flush_telemetry()
+
+    async def _flush_telemetry(self):
+        """Ship buffered observability to the server's FleetAggregator:
+        the local registry snapshot plus the tracer's drained span
+        buffer, as one ``telemetry`` frame.  No-op unless this client
+        was built with ``telemetry=True`` and negotiated v2, or when
+        there is nothing to send.  The server may still refuse
+        (``accepted: false`` — no fleet aggregator armed); that costs
+        this batch its spans (already drained) and is counted."""
+        if not self.telemetry or self.proto < 2:
+            return
+        spans = self.tracer.drain() if self.tracer is not None else []
+        metrics = None
+        if self.metrics is not None:
+            if self._m_executed is not None:
+                self._m_executed.set_total(self.executed)
+            metrics = self.metrics.snapshot()
+        if not spans and not metrics:
+            return
+        dropped = (self.tracer.events_dropped
+                   if self.tracer is not None else 0)
+        reply = await self._request(
+            {"type": "telemetry",
+             "telemetry": make_telemetry(metrics, spans,
+                                         dropped=dropped)})
+        if reply.get("accepted"):
+            self.telemetry_sent += 1
+        else:
+            self.telemetry_refused += 1
 
     async def _paced_sleep(self, seconds: float,
                            lease_id: Optional[int] = None):
@@ -1422,6 +1566,7 @@ class RemoteBrowserClient(BrowserNodeBase):
         self._pending = (batch.lease_id, results)
         await self._submit_results(batch.lease_id, results)
         self._pending = None
+        await self._flush_telemetry()      # submit is a flush trigger too
         if failed:
             # drop the lease bookkeeping for the errored tickets but keep
             # their cool-down (paper behaviour; mirrors AsyncBrowserClient)

@@ -46,6 +46,9 @@ __all__ = [
     "flatten_tree", "leaf_equal", "apply_delta",
     "TRACE_CONTEXT_FIELDS", "make_trace_context", "parse_trace_context",
     "MAX_RETRY_AFTER_S", "parse_retry_after",
+    "MAX_TELEMETRY_SPANS", "MAX_TELEMETRY_SERIES",
+    "make_telemetry", "parse_telemetry",
+    "make_clock_echo", "parse_clock_echo",
 ]
 
 #: The optional ``trace`` object carried by ``lease_grant`` and ``submit``
@@ -111,6 +114,152 @@ def parse_retry_after(value: Any, default: float,
     if v != v or v < 0.0:                  # NaN or negative
         return default
     return min(v, cap)
+
+
+# -- telemetry batches (protocol v2, docs/PROTOCOL.md §telemetry) ----------
+
+#: ceilings on what a single ``telemetry`` frame may carry — an
+#: adversarial client must not be able to make the server buffer an
+#: unbounded span list or metric registry.  Excess entries are dropped
+#: (and counted), never an error.
+MAX_TELEMETRY_SPANS = 512
+MAX_TELEMETRY_SERIES = 256
+
+_SPAN_PHASES = ("X", "b", "e", "i")
+_METRIC_KINDS = ("counter", "gauge", "histogram")
+
+
+def _finite_num(v: Any) -> bool:
+    return (isinstance(v, (int, float)) and not isinstance(v, bool)
+            and v == v and v not in (float("inf"), float("-inf")))
+
+
+def make_telemetry(metrics: Optional[dict], spans: Optional[List[dict]],
+                   *, dropped: int = 0) -> Dict[str, Any]:
+    """Build the ``telemetry`` payload object: a client's local
+    ``MetricsRegistry.snapshot()`` plus a batch of drained tracer events
+    (the decoded dict schema of ``Tracer.events()``), and the client's
+    own cumulative drop count (ring-buffer evictions + flush drops).
+    Builder side is strict by convention but has nothing to validate
+    beyond shape — the *parser* is the tolerant side."""
+    out: Dict[str, Any] = {"dropped": int(dropped)}
+    if metrics:
+        out["metrics"] = metrics
+    if spans:
+        out["spans"] = list(spans)
+    return out
+
+
+def parse_telemetry(obj: Any, *, max_spans: int = MAX_TELEMETRY_SPANS,
+                    max_series: int = MAX_TELEMETRY_SERIES
+                    ) -> Optional[Dict[str, Any]]:
+    """Tolerantly parse a peer's ``telemetry`` payload.
+
+    Returns ``{"metrics", "spans", "dropped", "local_drops"}`` where
+    ``metrics`` holds only well-formed series (str name -> dict body
+    with a known ``kind`` and a list of ``values``), ``spans`` only
+    well-formed trace events (str name/track/cat, known ``ph``, finite
+    ``ts``; ``dur``/``id``/``args`` sanitized), ``dropped`` is the
+    peer's self-reported drop count, and ``local_drops`` counts every
+    entry *this* parser discarded (malformed or over the caps).
+    Returns None when ``obj`` is not an object at all.  Never raises —
+    telemetry is observability metadata from an untrusted peer and a
+    garbage batch must cost the sender its data, not the server its
+    connection (the fuzz tests drive junk through here)."""
+    if not isinstance(obj, dict):
+        return None
+    local_drops = 0
+
+    metrics: Dict[str, Any] = {}
+    raw_metrics = obj.get("metrics")
+    if isinstance(raw_metrics, dict):
+        for name in sorted(raw_metrics, key=str):
+            body = raw_metrics[name]
+            if (not isinstance(name, str) or not isinstance(body, dict)
+                    or body.get("kind") not in _METRIC_KINDS
+                    or not isinstance(body.get("values"), list)):
+                local_drops += 1
+                continue
+            if len(metrics) >= max_series:
+                local_drops += 1
+                continue
+            metrics[name] = {"kind": body["kind"],
+                             "help": body.get("help", "")
+                             if isinstance(body.get("help"), str) else "",
+                             "values": body["values"]}
+    elif raw_metrics is not None:
+        local_drops += 1
+
+    spans: List[Dict[str, Any]] = []
+    raw_spans = obj.get("spans")
+    if isinstance(raw_spans, list):
+        for ev in raw_spans:
+            if (not isinstance(ev, dict)
+                    or not isinstance(ev.get("name"), str)
+                    or not isinstance(ev.get("track"), str)
+                    or ev.get("ph") not in _SPAN_PHASES
+                    or not _finite_num(ev.get("ts"))):
+                local_drops += 1
+                continue
+            if len(spans) >= max_spans:
+                local_drops += 1
+                continue
+            clean: Dict[str, Any] = {
+                "name": ev["name"], "ph": ev["ph"],
+                "track": ev["track"],
+                "cat": ev["cat"] if isinstance(ev.get("cat"), str)
+                else "client",
+                "ts": float(ev["ts"]),
+            }
+            if ev["ph"] == "X":
+                dur = ev.get("dur")
+                clean["dur"] = (float(dur)
+                                if _finite_num(dur) and dur >= 0 else 0.0)
+            elif ev["ph"] in ("b", "e"):
+                sid = ev.get("id")
+                if isinstance(sid, bool) or not isinstance(sid, int):
+                    local_drops += 1
+                    continue
+                clean["id"] = sid
+            if isinstance(ev.get("args"), dict):
+                clean["args"] = ev["args"]
+            spans.append(clean)
+    elif raw_spans is not None:
+        local_drops += 1
+
+    dropped = obj.get("dropped")
+    if not (isinstance(dropped, int) and not isinstance(dropped, bool)
+            and dropped >= 0):
+        dropped = 0
+    return {"metrics": metrics, "spans": spans, "dropped": dropped,
+            "local_drops": local_drops}
+
+
+def make_clock_echo(t0: float, server_ts: float,
+                    t1: float) -> Dict[str, float]:
+    """Build the heartbeat ``echo`` object a client sends back after a
+    ``heartbeat_ok`` carrying ``server_ts``: its own send time ``t0``,
+    the server's stamp, and its receive time ``t1`` (all in the
+    sender's respective clocks).  The server turns one echo into a
+    clock-skew sample: ``offset = server_ts - (t0 + t1) / 2`` with
+    uncertainty ``rtt = t1 - t0`` (NTP's symmetric-delay estimate)."""
+    return {"t0": float(t0), "server_ts": float(server_ts),
+            "t1": float(t1)}
+
+
+def parse_clock_echo(obj: Any) -> Optional[Tuple[float, float, float]]:
+    """Tolerantly parse a heartbeat ``echo`` object into
+    ``(t0, server_ts, t1)``.  Returns None — never raises — unless all
+    three fields are finite numbers with ``t1 >= t0`` (a negative RTT
+    is necessarily garbage)."""
+    if not isinstance(obj, dict):
+        return None
+    t0, sts, t1 = obj.get("t0"), obj.get("server_ts"), obj.get("t1")
+    if not (_finite_num(t0) and _finite_num(sts) and _finite_num(t1)):
+        return None
+    if t1 < t0:
+        return None
+    return (float(t0), float(sts), float(t1))
 
 
 #: hard ceiling on manifest array count (a manifest is decoded before its

@@ -14,20 +14,39 @@ Two halves, both zero-cost when unused:
     naming convention, and :mod:`repro.obs.collect` collectors that
     absorb the fabric's legacy telemetry into it at snapshot time.
 
-See ``docs/ARCHITECTURE.md`` §Observability for the span taxonomy and
-metric catalog.
+On top of them sits the **fleet telemetry plane** (PR 10):
+
+  * :mod:`repro.obs.fleet` — :class:`FleetAggregator`, the server-side
+    sink for remote clients' ``telemetry`` wire batches: per-client
+    metric series under a ``client=`` label, span buffers remapped to
+    server time via heartbeat-echo clock-skew estimation, and a merged
+    one-timeline Perfetto export.
+  * :mod:`repro.obs.slo` — declarative :class:`Slo` thresholds over a
+    registry, evaluated per round by :class:`SloMonitor` (breaches emit
+    ``slo.breach`` instants and gate CI in ``benchmarks/run.py``).
+  * The :class:`Tracer` flight recorder — ring-buffer mode plus
+    :meth:`Tracer.dump_on` triggers that write a bounded Perfetto file
+    the moment a failure instant (stall, eviction, busy storm) fires.
+
+See ``docs/ARCHITECTURE.md`` §Observability for the span taxonomy,
+fleet-plane topology, and metric catalog.
 """
 from repro.obs.collect import (collect_edge, collect_fabric,
-                               collect_federation, collect_origin,
-                               collect_queue, collect_transport)
+                               collect_federation, collect_fleet,
+                               collect_origin, collect_queue,
+                               collect_transport)
+from repro.obs.fleet import ClockSkew, FleetAggregator
 from repro.obs.metrics import (METRIC_NAME_RE, UNITS, Counter, Gauge,
                                Histogram, MetricsRegistry,
                                valid_metric_name)
-from repro.obs.trace import Tracer
+from repro.obs.slo import DEFAULT_ROUND_SLOS, Slo, SloMonitor
+from repro.obs.trace import Tracer, render_chrome_trace
 
 __all__ = [
-    "Counter", "Gauge", "Histogram", "METRIC_NAME_RE", "MetricsRegistry",
-    "Tracer", "UNITS", "collect_edge", "collect_fabric",
-    "collect_federation", "collect_origin", "collect_queue",
-    "collect_transport", "valid_metric_name",
+    "ClockSkew", "Counter", "DEFAULT_ROUND_SLOS", "FleetAggregator",
+    "Gauge", "Histogram", "METRIC_NAME_RE", "MetricsRegistry", "Slo",
+    "SloMonitor", "Tracer", "UNITS", "collect_edge", "collect_fabric",
+    "collect_federation", "collect_fleet", "collect_origin",
+    "collect_queue", "collect_transport", "render_chrome_trace",
+    "valid_metric_name",
 ]

@@ -27,7 +27,8 @@ from typing import Optional
 from repro.obs.metrics import MetricsRegistry
 
 __all__ = ["collect_origin", "collect_edge", "collect_queue",
-           "collect_federation", "collect_transport", "collect_fabric"]
+           "collect_federation", "collect_transport", "collect_fleet",
+           "collect_fabric"]
 
 
 def collect_origin(reg: MetricsRegistry, origin) -> None:
@@ -89,6 +90,9 @@ def collect_queue(reg: MetricsRegistry, queue) -> None:
     reg.counter("queue.releases_total",
                 "Lease releases (watchdog + voluntary)").set_total(
                     snap["lease_releases"])
+    reg.counter("queue.duplicate_results_total",
+                "Duplicate submits dropped by first-result-wins"
+                ).set_total(snap.get("duplicates", 0))
     rate = reg.gauge("queue.client_rate",
                      "Per-client EWMA tickets/second", labels=("client",))
     for client, cs in snap["clients"].items():
@@ -131,6 +135,13 @@ def collect_transport(reg: MetricsRegistry, server) -> None:
     reg.counter("transport.evicted_leases_total",
                 "Leases force-released by eviction").set_total(
                     s.get("evicted_leases", 0))
+    reg.counter("transport.telemetry_frames_total",
+                "Telemetry batches accepted into the fleet plane"
+                ).set_total(s.get("telemetry_accepted", 0))
+    reg.counter("transport.telemetry_drops_total",
+                "Telemetry batches dropped (malformed, no fleet "
+                "aggregator, or v1 sender)").set_total(
+                    s.get("telemetry_dropped", 0))
     frames = reg.counter("transport.frames_total",
                          "Wire frames (chunk frames included)",
                          labels=("direction", "type"))
@@ -149,12 +160,39 @@ def collect_transport(reg: MetricsRegistry, server) -> None:
             nbytes.set_total(n, direction=direction, type=kind)
 
 
+def collect_fleet(reg: MetricsRegistry, fleet) -> None:
+    """Absorb a :class:`~repro.obs.fleet.FleetAggregator`'s ``stats()``:
+    population, ingested batch/span volume, and every drop category
+    (labelled by where the data was lost)."""
+    s = fleet.stats()
+    reg.gauge("fleet.clients_count",
+              "Distinct clients with telemetry state").set(s["clients"])
+    reg.counter("fleet.batches_total",
+                "Telemetry batches ingested").set_total(s["batches_total"])
+    reg.counter("fleet.spans_total",
+                "Remote trace events received").set_total(s["spans_total"])
+    reg.counter("fleet.skew_samples_total",
+                "Clock-skew samples from heartbeat echoes").set_total(
+                    s["skew_samples"])
+    drops = reg.counter(
+        "fleet.drops_total",
+        "Telemetry discarded, by where it was lost: whole batches, "
+        "span-buffer evictions, malformed series rows, the peer's own "
+        "report, or the wire parser", labels=("reason",))
+    drops.set_total(s["batches_dropped"], reason="batch")
+    drops.set_total(s["spans_dropped"], reason="span_buffer")
+    drops.set_total(s["series_dropped"], reason="series")
+    drops.set_total(s["remote_dropped"], reason="remote")
+    drops.set_total(s["parse_dropped"], reason="parse")
+
+
 def collect_fabric(reg: MetricsRegistry, *, distributor=None,
-                   transport=None) -> MetricsRegistry:
+                   transport=None, fleet=None) -> MetricsRegistry:
     """One-call collection over whatever the caller has: an
     ``AsyncDistributor`` or ``FederatedDistributor`` (origin + queue,
-    plus federation surfaces when present) and/or a ``TransportServer``.
-    Returns the registry for chaining."""
+    plus federation surfaces when present), a ``TransportServer``,
+    and/or its ``FleetAggregator``.  Returns the registry for
+    chaining."""
     if distributor is not None:
         if hasattr(distributor, "download_count"):
             collect_origin(reg, distributor)
@@ -164,4 +202,8 @@ def collect_fabric(reg: MetricsRegistry, *, distributor=None,
             collect_federation(reg, distributor)
     if transport is not None:
         collect_transport(reg, transport)
+        if fleet is None:
+            fleet = getattr(transport, "fleet", None)
+    if fleet is not None:
+        collect_fleet(reg, fleet)
     return reg

@@ -27,17 +27,66 @@ Span encoding: lifecycle spans that overlap arbitrarily on one lane
 (``ph: "b"/"e"`` pairs keyed by span id); per-lane sequential spans
 (client execute, wire transfer, round barriers) are emitted as complete
 ``ph: "X"`` slices so Perfetto nests them on their track.
+
+Two long-running-fleet modes sit on top of the default
+record-everything behaviour, both off unless asked for:
+
+  * **Ring buffer** (``max_events=N``): finished events live in a
+    bounded deque; the oldest are discarded (counted in
+    ``events_dropped``) so a tracer can stay attached to a server for
+    days.  :meth:`drain` pops the buffered events for shipping — the
+    client-side telemetry flush uses it.
+  * **Flight recorder** (:meth:`dump_on`): named instants (the PR 9
+    failure signals — ``round.stall``, ``transport.evict``,
+    ``transport.busy``) arm a trigger that writes the current buffer to
+    a Perfetto file the moment the instant fires, so the evidence
+    window around a failure is captured without anyone watching.
 """
 from __future__ import annotations
 
 import json
 import threading
 import time
+from collections import deque
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
-__all__ = ["Tracer"]
+__all__ = ["Tracer", "render_chrome_trace"]
 
 _US = 1e6      # Chrome trace-event timestamps are microseconds
+
+
+def render_chrome_trace(events: List[dict],
+                        process_name: str = "sashimi-fabric") -> dict:
+    """Render decoded events (the :meth:`Tracer.events` schema) to the
+    Chrome trace-event JSON object format.  Tracks become threads of a
+    single process: tid assignment is by sorted track name, with
+    ``thread_name`` / ``thread_sort_index`` metadata so Perfetto shows
+    one labelled lane per track.  Shared by :meth:`Tracer.chrome_trace`
+    and the fleet aggregator's merged export."""
+    tracks = sorted({e["track"] for e in events})
+    tid = {t: i + 1 for i, t in enumerate(tracks)}
+    out: List[dict] = []
+    for t in tracks:
+        out.append({"ph": "M", "name": "thread_name", "pid": 1,
+                    "tid": tid[t], "args": {"name": t}})
+        out.append({"ph": "M", "name": "thread_sort_index", "pid": 1,
+                    "tid": tid[t], "args": {"sort_index": tid[t]}})
+    out.append({"ph": "M", "name": "process_name", "pid": 1,
+                "args": {"name": process_name}})
+    for e in events:
+        ev = {"name": e["name"], "cat": e["cat"], "ph": e["ph"],
+              "ts": round(e["ts"] * _US, 3), "pid": 1,
+              "tid": tid[e["track"]]}
+        if e["ph"] == "X":
+            ev["dur"] = round(e["dur"] * _US, 3)
+        elif e["ph"] in ("b", "e"):
+            ev["id"] = e["id"]
+        elif e["ph"] == "i":
+            ev["s"] = "t"
+        if e.get("args"):
+            ev["args"] = e["args"]
+        out.append(ev)
+    return {"traceEvents": out, "displayTimeUnit": "ms"}
 
 
 class Tracer:
@@ -48,7 +97,8 @@ class Tracer:
     ticket queue uses so simulated time and trace time agree.
     """
 
-    def __init__(self, clock: Callable[[], float] = time.monotonic):
+    def __init__(self, clock: Callable[[], float] = time.monotonic, *,
+                 max_events: Optional[int] = None):
         self.clock = clock
         self._lock = threading.Lock()
         # finished events, in completion order (deterministic under the
@@ -56,8 +106,22 @@ class Tracer:
         # (ph, name, cat, track, ts0, ts1, sid, args) — ph "X" lane
         # slice, "a" async begin/end pair, "i" instant — and decoded to
         # the dict schema lazily in events()/chrome_trace(), keeping the
-        # record path (the only part on the fabric's hot path) cheap
-        self._events: List[tuple] = []
+        # record path (the only part on the fabric's hot path) cheap.
+        # With max_events set the store is a bounded ring: the oldest
+        # finished events fall off (counted), so a long-lived fleet
+        # tracer holds a sliding evidence window instead of growing
+        # without bound.
+        self.max_events = max_events
+        self._events = ([] if max_events is None
+                        else deque(maxlen=int(max_events)))
+        # hot-path dispatch: the default (unbounded) tracer appends via
+        # the list's own bound method — zero added cost over the pre-ring
+        # implementation; only ring mode pays for drop accounting.  Both
+        # drain() and clear() keep container identity, so the binding
+        # stays valid for the tracer's lifetime.
+        self._append = (self._events.append if max_events is None
+                        else self._ring_append)
+        self.events_dropped = 0
         # sid -> (name, cat, track, lane, ts0, args)
         self._open: Dict[int, Tuple[str, str, str, bool, float,
                                     Optional[dict]]] = {}
@@ -68,6 +132,17 @@ class Tracer:
         # balanced()) — counted rather than raised so a bug in one
         # instrumentation site cannot take down the fabric itself
         self.end_errors = 0
+        # flight-recorder triggers: instant name -> mutable state dict
+        # {path, after, seen, limit, fired} (see dump_on)
+        self._triggers: Dict[str, dict] = {}
+        self.dumps_written: List[str] = []
+
+    def _ring_append(self, event: tuple) -> None:
+        """Ring-mode append under the lock, counting evictions."""
+        ev = self._events
+        if len(ev) == ev.maxlen:
+            self.events_dropped += 1
+        ev.append(event)
 
     # -- recording ---------------------------------------------------------
 
@@ -122,8 +197,8 @@ class Tracer:
                 return
             self.spans_closed += 1
             # begin-args and end-args ride as-is; merged lazily at decode
-            self._events.append(("X" if rec[3] else "a", rec[0], rec[1],
-                                 rec[2], rec[4], ts, sid, rec[5], args))
+            self._append(("X" if rec[3] else "a", rec[0], rec[1],
+                          rec[2], rec[4], ts, sid, rec[5], args))
 
     def instant(self, name: str, *, track: str = "fabric",
                 cat: str = "fabric", ts: Optional[float] = None,
@@ -131,9 +206,48 @@ class Tracer:
         """Record a zero-duration event (enqueue, route, policy firing)."""
         if ts is None:
             ts = self.clock()
+        dump_path = None
         with self._lock:
-            self._events.append(("i", name, cat, track, ts, ts, 0, args,
-                                 None))
+            self._append(("i", name, cat, track, ts, ts, 0, args, None))
+            if self._triggers:           # falsy-check: free when unused
+                trig = self._triggers.get(name)
+                if trig is not None and trig["fired"] < trig["limit"]:
+                    trig["seen"] += 1
+                    if trig["seen"] >= trig["after"]:
+                        trig["fired"] += 1
+                        trig["seen"] = 0
+                        dump_path = trig["path"]
+        if dump_path is not None:
+            # outside the lock: write() re-enters via events()
+            self.write(dump_path)
+            self.dumps_written.append(dump_path)
+
+    # -- flight recorder ---------------------------------------------------
+
+    def dump_on(self, trigger: str, path: str, *, after: int = 1,
+                limit: int = 1) -> None:
+        """Arm the flight recorder: when the instant named ``trigger``
+        has fired ``after`` times, write the current (ring-bounded)
+        trace to ``path``.  At most ``limit`` dumps per trigger; the
+        occurrence count resets after each dump so ``after=N`` means
+        "every N-th occurrence" (busy *storms*, not single refusals).
+        Written paths are recorded in ``dumps_written``."""
+        if after < 1 or limit < 1:
+            raise ValueError("dump_on requires after >= 1 and limit >= 1")
+        with self._lock:
+            self._triggers[trigger] = {"path": path, "after": int(after),
+                                       "seen": 0, "limit": int(limit),
+                                       "fired": 0}
+
+    def drain(self) -> List[dict]:
+        """Pop and return every buffered finished event in the decoded
+        schema (see :meth:`events`).  Open spans stay open; counters
+        (``spans_opened``/``closed``, ``events_dropped``) are untouched.
+        The client-side telemetry flush ships these over the wire."""
+        with self._lock:
+            raw = list(self._events)
+            self._events.clear()
+        return self._decode(raw)
 
     # -- invariants --------------------------------------------------------
 
@@ -162,6 +276,10 @@ class Tracer:
         "i"``."""
         with self._lock:
             raw = list(self._events)
+        return self._decode(raw)
+
+    @staticmethod
+    def _decode(raw: List[tuple]) -> List[dict]:
         out: List[dict] = []
         for ph, name, cat, track, ts0, ts1, sid, args, args_end in raw:
             if args_end:
@@ -189,31 +307,7 @@ class Tracer:
         metadata so Perfetto shows one labelled lane per track
         (per-client lanes, per-member lanes, the queue, the trainer).
         """
-        events = self.events()
-        tracks = sorted({e["track"] for e in events})
-        tid = {t: i + 1 for i, t in enumerate(tracks)}
-        out: List[dict] = []
-        for t in tracks:
-            out.append({"ph": "M", "name": "thread_name", "pid": 1,
-                        "tid": tid[t], "args": {"name": t}})
-            out.append({"ph": "M", "name": "thread_sort_index", "pid": 1,
-                        "tid": tid[t], "args": {"sort_index": tid[t]}})
-        out.append({"ph": "M", "name": "process_name", "pid": 1,
-                    "args": {"name": "sashimi-fabric"}})
-        for e in events:
-            ev = {"name": e["name"], "cat": e["cat"], "ph": e["ph"],
-                  "ts": round(e["ts"] * _US, 3), "pid": 1,
-                  "tid": tid[e["track"]]}
-            if e["ph"] == "X":
-                ev["dur"] = round(e["dur"] * _US, 3)
-            elif e["ph"] in ("b", "e"):
-                ev["id"] = e["id"]
-            elif e["ph"] == "i":
-                ev["s"] = "t"
-            if e.get("args"):
-                ev["args"] = e["args"]
-            out.append(ev)
-        return {"traceEvents": out, "displayTimeUnit": "ms"}
+        return render_chrome_trace(self.events())
 
     def to_json(self) -> str:
         """Deterministic serialization (same-seed runs compare equal)."""

@@ -126,6 +126,8 @@ class RoundResult:
     barrier_wait: float = 0.0       # clock time between K-of-N and close
     migrations: int = 0             # rebalancer moves at this boundary
     metrics: Optional[dict] = None  # registry snapshot, when trainer has one
+    slos: Optional[list] = None     # SLO evaluations at round close, when
+    #                                 the trainer holds an SloMonitor
     publish_deltas: dict = field(default_factory=dict)
     # per published static: the origin registry's delta view at publish
     # time ({"version", "leaves", "changed", "window"}) — ``changed``
@@ -138,6 +140,12 @@ class RoundResult:
     def complete(self) -> bool:
         """True when every shard's gradient arrived (nothing folded)."""
         return not self.stragglers
+
+    @property
+    def slo_ok(self) -> bool:
+        """True when no SLO breached at round close (vacuously true
+        when the trainer evaluates none)."""
+        return all(r["ok"] for r in self.slos) if self.slos else True
 
 
 class FederatedTrainer(RoundDriverLifetime):
@@ -155,7 +163,7 @@ class FederatedTrainer(RoundDriverLifetime):
     def __init__(self, distributor, *, task_name: str = "backbone_shard",
                  barrier_k=None, straggler_policy: str = "wait",
                  timeout: float = 60.0, stall_after: Optional[float] = None,
-                 rebalancer=None, metrics=None):
+                 rebalancer=None, metrics=None, slos=None):
         if straggler_policy not in STRAGGLER_POLICIES:
             raise KeyError(f"straggler_policy must be one of "
                            f"{STRAGGLER_POLICIES}, got {straggler_policy!r}")
@@ -196,6 +204,19 @@ class FederatedTrainer(RoundDriverLifetime):
             self._m_stalls = metrics.counter(
                 "round.stalls_total",
                 "Open rounds that made no progress for stall_after seconds")
+            self._m_lost = metrics.counter(
+                "round.lost_tickets_total",
+                "Shard tickets abandoned un-arrived at a round timeout")
+        # declarative round-health objectives (repro.obs.slo), evaluated
+        # at every round close against the trainer's registry; results
+        # land in RoundResult.slos and breaches emit slo.breach instants
+        self.slo_monitor = None
+        if slos:
+            if metrics is None:
+                raise ValueError("slos= requires metrics= (the monitor "
+                                 "evaluates against the registry)")
+            from repro.obs.slo import SloMonitor
+            self.slo_monitor = SloMonitor(metrics, slos, tracer=self.tracer)
 
     # -- shard planning --------------------------------------------------------
 
@@ -378,6 +399,7 @@ class FederatedTrainer(RoundDriverLifetime):
                     span_status = "timeout"
                     if self.metrics is not None:
                         self._m_timeouts.inc()
+                        self._m_lost.inc(n - len(done))
                     if tr is not None:
                         tr.instant("round.timeout", track="trainer",
                                    cat="round", ts=self.dist.queue.clock(),
@@ -429,6 +451,9 @@ class FederatedTrainer(RoundDriverLifetime):
                 self._m_reticketed.inc(reticketed)
             if stragglers:
                 self._m_folded.inc(len(stragglers))
+            if self.slo_monitor is not None:
+                out.slos = [r.as_dict() for r in
+                            self.slo_monitor.evaluate(ts=t_close)]
             out.metrics = self.metrics.snapshot()
         return out
 
@@ -472,7 +497,7 @@ class FederatedTrainingLoop:
         self.stale_executions = 0
         self.server_step = (server_step if server_step is not None
                             else TreeServerStep(opt))
-        self._m_step_s = self._m_params = None
+        self._m_step_s = self._m_params = self._m_stale = None
         if trainer.metrics is not None:
             self._m_step_s = trainer.metrics.histogram(
                 "round.server_step_seconds",
@@ -481,6 +506,10 @@ class FederatedTrainingLoop:
                 "round.model_params_count",
                 "Scalar parameters in the model being trained")
             self._m_params.set(param_count(state.params))
+            self._m_stale = trainer.metrics.counter(
+                "round.stale_executions_total",
+                "Arrived gradients computed against a previous round's "
+                "weights (zero by construction; SLO-gated)")
 
     async def run_round(self, shard_args, shard_work) -> RoundResult:
         """One SGD round: publish → fan out → aggregate → update →
@@ -502,6 +531,8 @@ class FederatedTrainingLoop:
         for g in got:
             if isinstance(g, dict) and g.get("round", t) != t:
                 self.stale_executions += 1
+                if self._m_stale is not None:
+                    self._m_stale.inc()
         works = [shard_work[p] for p in res.arrived]
         t_step = time.perf_counter()
         new_params, new_opt = self.server_step.step(

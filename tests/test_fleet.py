@@ -1,0 +1,612 @@
+"""Fleet telemetry plane tests: the ``telemetry``/clock-echo wire
+codecs, the FleetAggregator (label injection, skew remapping, bounded
+buffers, deterministic merged export), the Tracer's ring-buffer /
+flight-recorder modes, the SLO monitor (including the injected-breach
+direction the CI gate relies on), collector edge cases around dead and
+evicted connections, and the end-to-end acceptance bar: an all-remote
+federated round whose merged Perfetto export shows the server round
+lane and the remote client execute lanes on one skew-corrected
+timeline."""
+import asyncio
+import json
+import math
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.distributor import (AdaptiveSizer, AsyncDistributor,
+                                    ClientProfile, TaskDef)
+from repro.core.federation import FederatedDistributor
+from repro.core.transport import (RemoteBrowserClient, TransportServer,
+                                  spawn_remote_clients)
+from repro.core.wire import (MAX_TELEMETRY_SERIES, MAX_TELEMETRY_SPANS,
+                             make_clock_echo, make_telemetry,
+                             parse_clock_echo, parse_telemetry)
+from repro.obs import (DEFAULT_ROUND_SLOS, FleetAggregator,
+                       MetricsRegistry, Slo, SloMonitor, Tracer,
+                       collect_fabric, collect_fleet)
+from repro.obs.fleet import _REMOTE_ID_BASE
+from repro.train_fabric import FederatedTrainer
+
+
+def _run(coro):
+    return asyncio.run(coro)
+
+
+class SimClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def _span(name="client.execute", ph="X", ts=1.0, **over):
+    ev = {"name": name, "ph": ph, "cat": "client",
+          "track": "client:c0", "ts": ts}
+    if ph == "X":
+        ev["dur"] = 0.5
+    ev.update(over)
+    return ev
+
+
+# ---------------------------------------------------------------------------
+# wire codecs: strict builder, tolerant parser
+# ---------------------------------------------------------------------------
+
+
+def test_telemetry_roundtrip_through_parser():
+    reg = MetricsRegistry()
+    reg.counter("client.executed_total", "Tickets executed").inc(4)
+    batch = make_telemetry(reg.snapshot(), [_span()], dropped=2)
+    parsed = parse_telemetry(batch)
+    assert parsed["dropped"] == 2 and parsed["local_drops"] == 0
+    assert parsed["metrics"]["client.executed_total"]["kind"] == "counter"
+    assert parsed["spans"] == [_span(args=None) | {}] or parsed["spans"]
+    assert parsed["spans"][0]["name"] == "client.execute"
+    assert parsed["spans"][0]["dur"] == 0.5
+    # empty flushes build to just the drop count
+    assert make_telemetry(None, []) == {"dropped": 0}
+
+
+def test_parse_telemetry_never_raises_on_junk():
+    for junk in (None, 7, "x", [1], True, b"\x00"):
+        assert parse_telemetry(junk) is None
+    # junk *inside* an object costs rows, never the batch
+    parsed = parse_telemetry({
+        "metrics": {"ok.series_total": {"kind": "counter", "help": "h",
+                                        "values": []},
+                    "bad-kind": {"kind": "pie", "values": []},
+                    "bad-body": 12},
+        "spans": [_span(),
+                  {"ph": "X"},                        # no name/track/ts
+                  _span(ts=float("nan")),             # non-finite ts
+                  _span(ph="q"),                      # unknown phase
+                  _span(ph="b", id=True),             # bool async id
+                  _span(ph="b", id="seven"),          # non-int async id
+                  "not-a-span"],
+        "dropped": -3,                                # junk self-report
+    })
+    assert list(parsed["metrics"]) == ["ok.series_total"]
+    assert [e["name"] for e in parsed["spans"]] == ["client.execute"]
+    assert parsed["local_drops"] == 8
+    assert parsed["dropped"] == 0
+
+
+def test_parse_telemetry_enforces_size_caps():
+    spans = [_span(ts=float(i)) for i in range(MAX_TELEMETRY_SPANS + 40)]
+    series = {f"spam.s{i}_total": {"kind": "counter", "values": []}
+              for i in range(MAX_TELEMETRY_SERIES + 10)}
+    parsed = parse_telemetry({"spans": spans, "metrics": series})
+    assert len(parsed["spans"]) == MAX_TELEMETRY_SPANS
+    assert len(parsed["metrics"]) == MAX_TELEMETRY_SERIES
+    assert parsed["local_drops"] == 50
+    # caps are parameters (the server could tighten them per-connection)
+    tight = parse_telemetry({"spans": spans}, max_spans=3)
+    assert len(tight["spans"]) == 3
+
+
+def test_parse_telemetry_sanitizes_span_fields():
+    parsed = parse_telemetry({"spans": [
+        _span(dur=-5.0),                       # negative dur clamps
+        _span(dur="long"),                     # junk dur clamps
+        _span(ph="i", cat=7, args=[1, 2]),     # junk cat/args dropped
+        _span(ph="b", id=11, args={"k": 1}),
+    ]})
+    assert parsed["spans"][0]["dur"] == 0.0
+    assert parsed["spans"][1]["dur"] == 0.0
+    assert parsed["spans"][2]["cat"] == "client"
+    assert "args" not in parsed["spans"][2]
+    assert parsed["spans"][3]["id"] == 11
+    assert parsed["spans"][3]["args"] == {"k": 1}
+
+
+def test_clock_echo_roundtrip_and_tolerance():
+    echo = make_clock_echo(1.0, 500.25, 1.5)
+    assert parse_clock_echo(echo) == (1.0, 500.25, 1.5)
+    for junk in (None, [], "echo", 3,
+                 {"t0": 1.0, "server_ts": 2.0},            # missing t1
+                 {"t0": 2.0, "server_ts": 5.0, "t1": 1.0},  # rtt < 0
+                 {"t0": float("nan"), "server_ts": 1.0, "t1": 2.0},
+                 {"t0": 1.0, "server_ts": float("inf"), "t1": 2.0},
+                 {"t0": True, "server_ts": 1.0, "t1": 2.0}):
+        assert parse_clock_echo(junk) is None, junk
+
+
+# ---------------------------------------------------------------------------
+# FleetAggregator
+# ---------------------------------------------------------------------------
+
+
+def _client_batch(executed=3, ts=1.0, client_track="client:c0"):
+    reg = MetricsRegistry()
+    reg.counter("client.executed_total", "Tickets executed").inc(executed)
+    return parse_telemetry(make_telemetry(
+        reg.snapshot(), [_span(ts=ts, track=client_track)]))
+
+
+def test_ingest_injects_client_label_and_merges():
+    fl = FleetAggregator()
+    assert fl.ingest("c0", _client_batch(executed=3))
+    assert fl.ingest("c1", _client_batch(executed=5))
+    snap = fl.snapshot()
+    rows = snap["client.executed_total"]["values"]
+    assert {(r["labels"]["client"], r["value"]) for r in rows} == \
+        {("c0", 3), ("c1", 5)}
+    assert fl.clients() == ["c0", "c1"]
+
+
+def test_reingest_is_idempotent_last_write_wins():
+    fl = FleetAggregator()
+    fl.ingest("c0", _client_batch(executed=3))
+    fl.ingest("c0", _client_batch(executed=9))   # cumulative re-snapshot
+    rows = fl.snapshot()["client.executed_total"]["values"]
+    assert [(r["labels"]["client"], r["value"]) for r in rows] == \
+        [("c0", 9)]
+
+
+def test_ingest_bounds_and_drop_accounting():
+    fl = FleetAggregator(max_spans_per_client=2, max_clients=2)
+    assert not fl.ingest("c0", None)             # unparseable batch
+    assert not fl.ingest("", _client_batch())    # nameless client
+    assert fl.ingest("c0", _client_batch(ts=1.0))
+    assert fl.ingest("c0", parse_telemetry(
+        {"spans": [_span(ts=2.0), _span(ts=3.0)], "dropped": 4}))
+    assert fl.ingest("c1", _client_batch(client_track="client:c1"))
+    assert not fl.ingest("c2", _client_batch())  # over max_clients
+    s = fl.stats()
+    assert s["clients"] == 2
+    assert s["batches_dropped"] == 3
+    assert s["spans_dropped"] == 1               # c0's ring evicted one
+    assert s["remote_dropped"] == 4              # peer's own report
+    # the surviving buffer holds the newest spans
+    ts = [e["ts"] for e in fl.remote_events() if e["track"] == "client:c0"]
+    assert ts == [2.0, 3.0]
+
+
+def test_clock_skew_min_rtt_sample_wins():
+    fl = FleetAggregator()
+    assert fl.offset("c0") == 0.0                # no samples yet
+    fl.clock_sample("c0", offset=-99.0, rtt=0.5)
+    fl.clock_sample("c0", offset=-100.0, rtt=0.01)   # tighter: wins
+    fl.clock_sample("c0", offset=-42.0, rtt=0.2)     # looser: ignored
+    fl.clock_sample("c0", offset=1.0, rtt=-0.1)      # negative rtt: junk
+    sk = fl.skew("c0")
+    assert sk.offset == -100.0 and sk.rtt == 0.01 and sk.samples == 3
+
+
+def test_remote_events_skew_corrected_and_ids_renumbered():
+    fl = FleetAggregator()
+    fl.clock_sample("c0", offset=2.0, rtt=0.01)
+    fl.ingest("c0", parse_telemetry({"spans": [
+        _span(ts=1.0),
+        _span(name="client.lease", ph="b", id=7, ts=1.5),
+        _span(name="client.lease", ph="e", id=7, ts=2.5),
+    ]}))
+    corrected = fl.remote_events()
+    assert [e["ts"] for e in corrected] == [3.0, 3.5, 4.5]
+    raw = fl.remote_events(corrected=False)
+    assert [e["ts"] for e in raw] == [1.0, 1.5, 2.5]
+    # async pair keeps one (renumbered) id clear of server span ids
+    ids = {e["id"] for e in corrected if "id" in e}
+    assert len(ids) == 1 and ids.pop() >= _REMOTE_ID_BASE
+
+
+def test_merged_export_is_deterministic_and_loads_as_chrome_trace():
+    def build():
+        clock = SimClock()
+        tr = Tracer(clock=clock)
+        sid = tr.begin("round", track="trainer", cat="round", lane=True)
+        clock.t = 4.0
+        tr.end(sid)
+        fl = FleetAggregator(tracer=tr)
+        fl.clock_sample("c0", offset=0.5, rtt=0.02)
+        fl.ingest("c0", _client_batch(ts=1.25))
+        return fl
+    a, b = build().to_json(), build().to_json()
+    assert a == b
+    doc = json.loads(a)
+    names = {e["name"] for e in doc["traceEvents"]}
+    assert {"round", "client.execute"} <= names
+    lanes = {e["args"]["name"] for e in doc["traceEvents"]
+             if e["name"] == "thread_name"}
+    assert {"trainer", "client:c0"} <= lanes
+
+
+# ---------------------------------------------------------------------------
+# Tracer: ring buffer + flight recorder
+# ---------------------------------------------------------------------------
+
+
+def test_ring_buffer_bounds_events_and_counts_drops():
+    clock = SimClock()
+    tr = Tracer(clock=clock, max_events=4)
+    for i in range(7):
+        clock.t = float(i)
+        tr.instant(f"tick{i}", track="t")
+    evs = tr.events()
+    assert [e["name"] for e in evs] == ["tick3", "tick4", "tick5", "tick6"]
+    assert tr.events_dropped == 3
+    # the default tracer stays unbounded and drop-free
+    tr2 = Tracer(clock=clock)
+    for i in range(7):
+        tr2.instant(f"tick{i}", track="t")
+    assert tr2.event_count() == 7 and tr2.events_dropped == 0
+
+
+def test_drain_pops_buffer_without_touching_open_spans():
+    clock = SimClock()
+    tr = Tracer(clock=clock, max_events=16)
+    sid = tr.begin("lease", track="queue")      # stays open across drain
+    tr.instant("ticket.route", track="queue")
+    got = tr.drain()
+    assert [e["name"] for e in got] == ["ticket.route"]
+    assert tr.events() == [] and tr.drain() == []
+    clock.t = 1.0
+    tr.end(sid)
+    assert [e["name"] for e in tr.drain()] == ["lease", "lease"]  # b/e pair
+    assert tr.balanced()
+
+
+def test_flight_recorder_dumps_on_trigger(tmp_path):
+    clock = SimClock()
+    tr = Tracer(clock=clock, max_events=8)
+    path = str(tmp_path / "dump.json")
+    tr.dump_on("transport.evict", path, after=2, limit=1)
+    tr.instant("transport.evict", track="wire")      # 1st: below after
+    assert not tr.dumps_written
+    for i in range(10):                              # context in the ring
+        clock.t = float(i)
+        tr.instant("ticket.route", track="queue")
+    tr.instant("transport.evict", track="wire")      # 2nd: fires
+    assert tr.dumps_written == [path]
+    doc = json.loads(open(path).read())
+    names = [e["name"] for e in doc["traceEvents"] if e.get("ph") == "i"]
+    assert names[-1] == "transport.evict"
+    assert len([n for n in names if n == "ticket.route"]) <= 8
+    # limit=1: a third occurrence (even x2 past `after`) stays silent
+    tr.instant("transport.evict", track="wire")
+    tr.instant("transport.evict", track="wire")
+    assert tr.dumps_written == [path]
+
+
+def test_flight_recorder_validates_arguments(tmp_path):
+    tr = Tracer()
+    with pytest.raises(ValueError):
+        tr.dump_on("x", str(tmp_path / "d.json"), after=0)
+    with pytest.raises(ValueError):
+        tr.dump_on("x", str(tmp_path / "d.json"), limit=0)
+
+
+def test_slo_breach_instant_can_trigger_flight_dump(tmp_path):
+    """The monitors and the recorder compose: a breach instant is a
+    trigger like any other failure signal."""
+    clock = SimClock()
+    tr = Tracer(clock=clock, max_events=32)
+    path = str(tmp_path / "slo_dump.json")
+    tr.dump_on("slo.breach", path)
+    reg = MetricsRegistry()
+    reg.counter("round.lost_tickets_total", "Lost").inc(3)
+    mon = SloMonitor(reg, DEFAULT_ROUND_SLOS, tracer=tr)
+    assert not mon.ok()
+    assert tr.dumps_written == [path]
+
+
+# ---------------------------------------------------------------------------
+# SLO monitor
+# ---------------------------------------------------------------------------
+
+
+def test_slo_validation():
+    with pytest.raises(ValueError):
+        Slo("bad-op", "m.x_total", "!=", 0.0)
+    with pytest.raises(ValueError):
+        Slo("bad-stat", "m.x_total", "<=", 0.0, stat="median")
+    Slo("ok", "m.x_total", "<=", 1.0, stat="p99")       # fine
+
+
+def test_slo_monitor_clean_registry_passes():
+    reg = MetricsRegistry()
+    h = reg.histogram("round.duration_seconds", "durations")
+    for d in (0.2, 0.4, 0.9):
+        h.observe(d)
+    mon = SloMonitor(reg, DEFAULT_ROUND_SLOS)
+    results = mon.evaluate()
+    assert len(results) == len(DEFAULT_ROUND_SLOS)
+    assert all(r.ok for r in results), [r.as_dict() for r in results]
+    assert mon.breaches_total == 0
+    # a metric nothing registered evaluates as 0.0, not an error
+    assert all(r.value == 0.0 for r in results
+               if r.slo.metric != "round.duration_seconds")
+
+
+def test_slo_p95_past_last_bucket_reads_inf_and_trips():
+    """Observations beyond the histogram's finite range must FAIL a
+    latency gate — clamping them back under the threshold would make
+    the gate untrippable."""
+    reg = MetricsRegistry()
+    h = reg.histogram("round.duration_seconds", "durations")
+    for _ in range(20):
+        h.observe(120.0)                       # all past the 60 s edge
+    mon = SloMonitor(reg, DEFAULT_ROUND_SLOS)
+    bad = [r for r in mon.evaluate() if not r.ok]
+    assert [r.slo.name for r in bad] == ["round-latency-p95"]
+    assert math.isinf(bad[0].value)
+    assert mon.breaches_total == 1
+
+
+def test_slo_counter_and_labelled_gauge_stats():
+    reg = MetricsRegistry()
+    reg.counter("queue.duplicate_results_total", "dups").inc(2)
+    g = reg.gauge("fleet.clients_count", "clients", labels=("pool",))
+    g.set(3, pool="a")
+    g.set(4, pool="b")
+    mon = SloMonitor(reg, [
+        Slo("no-dups", "queue.duplicate_results_total", "==", 0.0),
+        Slo("fleet-size", "fleet.clients_count", "<=", 10.0),
+    ])
+    res = {r.slo.name: r for r in mon.evaluate()}
+    assert not res["no-dups"].ok and res["no-dups"].value == 2.0
+    assert res["fleet-size"].ok and res["fleet-size"].value == 7.0
+
+
+def test_trainer_round_result_carries_slo_verdicts():
+    def _grad_task():
+        def run(args, static):
+            return {"grad": {"w": np.full(2, float(args), np.float32)},
+                    "loss": float(args)}
+        return TaskDef("backbone_shard", run, static_files=("weights",))
+
+    async def body():
+        fed = FederatedDistributor(
+            2, timeout=5.0, redistribute_min=0.02,
+            sizer=AdaptiveSizer(target_lease_time=0.02, max_size=8),
+            watchdog_interval=0.005, grace=2.0)
+        fed.register_task(_grad_task())
+        fed.spawn_clients([ClientProfile(name=f"c{i}", speed=400.0)
+                           for i in range(3)])
+        reg = MetricsRegistry()
+        async with FederatedTrainer(fed, timeout=20.0, metrics=reg,
+                                    slos=DEFAULT_ROUND_SLOS) as tr:
+            res = await tr.run_round([1.0, 2.0], shard_work=[1.0, 1.0],
+                                     statics={"weights": {"round": 0}})
+        await fed.shutdown()
+        return res
+
+    res = _run(body())
+    assert res.slos is not None and len(res.slos) == len(DEFAULT_ROUND_SLOS)
+    assert res.slo_ok, res.slos
+    assert {s["name"] for s in res.slos} == \
+        {s.name for s in DEFAULT_ROUND_SLOS}
+
+
+def test_trainer_slos_require_metrics():
+    fed = FederatedDistributor(2, timeout=5.0)
+    with pytest.raises(ValueError):
+        FederatedTrainer(fed, slos=DEFAULT_ROUND_SLOS)
+    fed.keep_alive = False
+
+
+# ---------------------------------------------------------------------------
+# collector edge cases (zero-connection, mid-eviction, re-collection)
+# ---------------------------------------------------------------------------
+
+
+def _square(x, static):
+    return x * x
+
+
+def test_collect_transport_with_zero_post_handshake_connections():
+    async def go():
+        d = AsyncDistributor(timeout=5.0)
+        server = TransportServer(d, fleet=FleetAggregator())
+        await server.start()
+        reg = MetricsRegistry()
+        collect_fabric(reg, transport=server)     # fleet auto-discovered
+        await server.stop()
+        return reg
+
+    reg = _run(go())
+    assert reg.get("transport.connections_count").value() == 0
+    assert reg.get("fleet.clients_count").value() == 0
+    assert reg.get("transport.telemetry_frames_total").value() == 0
+
+
+def test_collect_during_eviction_sweep_and_after():
+    """Collection races the eviction sweep without error, and the
+    post-sweep snapshot reflects the eviction exactly once."""
+    async def go():
+        d = AsyncDistributor(timeout=20.0, redistribute_min=0.0,
+                             watchdog_interval=5.0, grace=1000.0)
+        d.register_task(TaskDef("sq", _square))
+        d.add_work("sq", [3])
+        server = TransportServer(d, heartbeat_timeout=600.0)
+        addr = await server.start()
+        clients, tasks = spawn_remote_clients(
+            addr, [ClientProfile(name="gone", speed=1.0)],
+            heartbeat_interval=None)
+        while server.stats()["connections"] == 0:
+            await asyncio.sleep(0.01)
+        reg = MetricsRegistry()
+        collect_fabric(reg, transport=server)     # mid-life collection
+        live = reg.get("transport.connections_count").value()
+        await server.evict_client("gone")         # the sweep's eager path
+        collect_fabric(reg, transport=server)
+        first = reg.snapshot()
+        collect_fabric(reg, transport=server)     # idempotent re-collect
+        for c in clients:
+            await c.stop()
+        await asyncio.gather(*tasks, return_exceptions=True)
+        await server.stop()
+        return live, first, reg.snapshot()
+
+    live, first, second = _run(go())
+    assert live == 1
+    assert first == second
+    evic = second["transport.evictions_total"]["values"][0]["value"]
+    assert evic == 1
+
+
+def test_recollection_idempotent_after_member_kill():
+    async def go():
+        fed = FederatedDistributor(
+            2, timeout=5.0, redistribute_min=0.02,
+            sizer=AdaptiveSizer(target_lease_time=0.02, max_size=8),
+            watchdog_interval=0.005, grace=2.0)
+        fed.register_task(TaskDef("sq", _square))
+        fed.add_work("sq", list(range(8)))
+        fed.spawn_clients([ClientProfile(name=f"c{i}", speed=400.0)
+                           for i in range(3)])
+        ok = await fed.run_until_done(timeout=20.0)
+        await fed.kill_member(0)
+        reg = MetricsRegistry()
+        collect_fabric(reg, distributor=fed)
+        first = reg.snapshot()
+        collect_fabric(reg, distributor=fed)      # re-collect: no drift
+        await fed.shutdown()
+        return ok, first, reg.snapshot()
+
+    ok, first, second = _run(go())
+    assert ok
+    assert first == second
+    assert first["federation.alive_count"]["values"][0]["value"] == 1
+
+
+def test_collect_fleet_drop_reasons():
+    fl = FleetAggregator(max_clients=1)
+    fl.ingest("c0", _client_batch())
+    fl.ingest("c1", _client_batch())              # over max_clients
+    fl.ingest("c0", None)                         # parse failure upstream
+    reg = MetricsRegistry()
+    collect_fleet(reg, fl)
+    drops = {r["labels"]["reason"]: r["value"]
+             for r in reg.snapshot()["fleet.drops_total"]["values"]}
+    assert drops["batch"] == 2
+    assert reg.get("fleet.batches_total").value() == 1
+    collect_fleet(reg, fl)                        # set_total: idempotent
+    assert reg.get("fleet.batches_total").value() == 1
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: all-remote federated round on one skew-corrected timeline
+# ---------------------------------------------------------------------------
+
+
+def _grad_run(args, static):
+    return {"grad": {"w": np.full(2, float(args), np.float32)},
+            "loss": float(args)}
+
+
+def _grad_task_remote():
+    return TaskDef("backbone_shard", _grad_run, static_files=("weights",))
+
+
+def test_all_remote_round_exports_one_skew_corrected_timeline():
+    """The PR's acceptance bar: server round lanes and remote client
+    execute lanes land in ONE merged Perfetto export on a common
+    timeline, with the remote clients' (deliberately skewed) clocks
+    corrected by the heartbeat-echo estimate."""
+    SKEW = 1000.0                 # client clocks run 1000 s ahead
+
+    async def go():
+        server_tr = Tracer()
+        d = AsyncDistributor(
+            timeout=10.0, redistribute_min=0.02,
+            sizer=AdaptiveSizer(target_lease_time=0.05, max_size=4),
+            watchdog_interval=0.01, tracer=server_tr)
+        server_tr.clock = d.queue.clock
+        fleet = FleetAggregator(tracer=server_tr)
+        d.register_task(_grad_task_remote())
+        server = TransportServer(d, fleet=fleet)
+        addr = await server.start()
+
+        loop = asyncio.get_running_loop()
+        clients, tasks = [], []
+        for i in range(2):
+            skewed = (lambda off=SKEW: time.monotonic() + off)
+            ctr = Tracer(clock=skewed, max_events=512)
+            c = RemoteBrowserClient(
+                addr[0], addr[1],
+                ClientProfile(name=f"r{i}", speed=100.0, latency=0.05),
+                heartbeat_interval=0.01, tracer=ctr,
+                metrics=MetricsRegistry(), telemetry=True, clock=skewed)
+            clients.append(c)
+            tasks.append(loop.create_task(c.run()))
+
+        reg = MetricsRegistry()
+        async with FederatedTrainer(d, timeout=30.0, metrics=reg,
+                                    slos=DEFAULT_ROUND_SLOS) as tr:
+            res = await tr.run_round([1.0, 2.0, 3.0, 4.0],
+                                     shard_work=[1.0] * 4,
+                                     statics={"weights": {"round": 0}})
+        for c in clients:
+            await c.stop()
+        await asyncio.gather(*tasks, return_exceptions=True)
+        stats = server.stats()
+        await server.stop()
+        return res, fleet, server_tr, clients, stats
+
+    res, fleet, server_tr, clients, stats = _run(go())
+    assert res.complete and res.slo_ok
+
+    # the wire carried telemetry and the server accepted it
+    assert stats["telemetry_accepted"] > 0
+    assert all(c.telemetry_sent > 0 for c in clients)
+    assert fleet.clients() == ["r0", "r1"]
+
+    # skew estimation recovered the injected offset (error <= a few RTTs)
+    for name in ("r0", "r1"):
+        sk = fleet.skew(name)
+        assert sk is not None and sk.samples >= 1
+        assert abs(sk.offset + SKEW) < 1.0, (name, sk)
+
+    # remote metrics merged under client labels
+    rows = fleet.snapshot()["client.executed_total"]["values"]
+    by_client = {r["labels"]["client"]: r["value"] for r in rows}
+    assert set(by_client) == {"r0", "r1"}
+    assert sum(by_client.values()) == sum(c.executed for c in clients) > 0
+
+    # ONE merged timeline: the server's round lane plus remote execute
+    # lanes, with corrected remote timestamps inside the round window
+    merged = fleet.merged_events()
+    rounds = [e for e in merged if e["name"] == "round" and e["ph"] == "X"]
+    execs = [e for e in merged
+             if e["name"] == "client.execute" and e["ph"] == "X"
+             and e["track"].startswith("client:r")]
+    assert rounds and execs
+    r0, r1 = rounds[0]["ts"], rounds[0]["ts"] + rounds[0]["dur"]
+    for e in execs:
+        assert r0 - 1.0 <= e["ts"] <= r1 + 1.0, (e, r0, r1)
+
+    # without correction the same spans sit ~SKEW beyond the round window
+    raw = [e for e in fleet.remote_events(corrected=False)
+           if e["name"] == "client.execute"]
+    assert raw and all(e["ts"] > r1 + 0.5 * SKEW for e in raw)
+
+    # the export renders with every lane present
+    doc = fleet.chrome_trace()
+    lanes = {e["args"]["name"] for e in doc["traceEvents"]
+             if e["name"] == "thread_name"}
+    assert {"trainer", "client:r0", "client:r1"} <= lanes
+    assert fleet.to_json() == fleet.to_json()      # stable serialization

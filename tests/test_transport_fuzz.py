@@ -529,3 +529,325 @@ def test_busy_reply_with_junk_retry_after_still_clean_refusal():
     retry_after, refusals = asyncio.run(go())
     assert retry_after == 0.25             # junk -> client's own default
     assert refusals == 1
+
+
+# ---------------------------------------------------------------------------
+# telemetry / clock-echo (fleet plane, ISSUE 10)
+# ---------------------------------------------------------------------------
+
+
+def test_telemetry_on_fleetless_server_dropped_counted_connection_lives():
+    """A fleetless server answers ``telemetry`` with accepted=false —
+    a drop, not an error — and the connection stays fully usable, with
+    heartbeat replies still byte-identical to pre-fleet builds."""
+    from repro.core.transport import PROTOCOL_VERSION, read_frame
+    from repro.core.wire import make_telemetry
+
+    async def go():
+        d, server = _live_server()            # no fleet= wired
+        addr = await server.start()
+        reader, writer = await _dial(
+            addr, {"type": "hello", "seq": 1, "client": "optimist",
+                   "proto": 1, "max_proto": PROTOCOL_VERSION},
+            {"type": "telemetry", "seq": 2,
+             "telemetry": make_telemetry(
+                 None, [{"name": "client.execute", "ph": "X",
+                         "cat": "client", "track": "client:optimist",
+                         "ts": 1.0, "dur": 0.5}])},
+            {"type": "heartbeat", "seq": 3})
+        replies = [await asyncio.wait_for(read_frame(reader), timeout=5.0)
+                   for _ in range(3)]
+        writer.close()
+        stats = server.stats()
+        await server.stop()
+        return replies, stats
+
+    replies, stats = asyncio.run(go())
+    assert replies[0]["type"] == "hello_ok"
+    assert replies[1] == {"type": "telemetry_ok", "seq": 2,
+                          "accepted": False}
+    assert replies[2] == {"type": "heartbeat_ok", "seq": 3}
+    assert stats["telemetry_dropped"] == 1
+    assert stats["telemetry_accepted"] == 0
+
+
+def test_garbage_telemetry_inert_on_fleet_server():
+    """Adversarial telemetry bodies against an armed fleet plane: junk
+    costs the sender its batch (counted), never the server its
+    connection — a lease_request afterwards still leases work."""
+    from repro.obs import FleetAggregator
+    from repro.core.transport import PROTOCOL_VERSION, read_frame
+    from repro.core.wire import MAX_TELEMETRY_SPANS
+
+    hostile = [
+        {},                                       # no telemetry field
+        {"telemetry": None},
+        {"telemetry": 7},
+        {"telemetry": "snapshots"},
+        {"telemetry": [1, 2, 3]},
+        {"telemetry": {"metrics": "nope", "spans": 12, "dropped": "x"}},
+        {"telemetry": {"spans": [{"name": "evil", "ph": "X",
+                                  "track": "t", "ts": float("nan")},
+                                 {"ph": "??"}, "span?", 9]}},
+        {"telemetry": {"spans": [
+            {"name": f"flood{i}", "ph": "i", "track": "t",
+             "ts": float(i)} for i in range(MAX_TELEMETRY_SPANS + 64)]}},
+        {"telemetry": {"metrics": {"m": {"kind": "pie", "values": []},
+                                   7: "not-a-series"}}},
+    ]
+
+    async def go():
+        fleet = FleetAggregator()
+        d, server = _live_server(fleet=fleet)
+        addr = await server.start()
+        reader, writer = await _dial(
+            addr, {"type": "hello", "seq": 1, "client": "hostile",
+                   "proto": PROTOCOL_VERSION})
+        hello = await asyncio.wait_for(read_frame(reader), timeout=5.0)
+        assert hello["type"] == "hello_ok"
+        replies = []
+        for seq, body in enumerate(hostile, start=2):
+            writer.write(encode_frame(
+                {"type": "telemetry", "seq": seq, **body}))
+            await writer.drain()
+            replies.append(await asyncio.wait_for(read_frame(reader),
+                                                  timeout=5.0))
+        writer.write(encode_frame({"type": "lease_request",
+                                   "seq": 99}))
+        await writer.drain()
+        grant = await asyncio.wait_for(read_frame(reader), timeout=5.0)
+        writer.close()
+        stats = server.stats()
+        await server.stop()
+        return replies, grant, stats, fleet
+
+    replies, grant, stats, fleet = asyncio.run(go())
+    for seq, reply in enumerate(replies, start=2):
+        assert reply["type"] == "telemetry_ok" and reply["seq"] == seq
+        assert isinstance(reply["accepted"], bool)
+    assert grant["type"] == "lease_grant"          # connection survived
+    assert stats["telemetry_accepted"] + stats["telemetry_dropped"] \
+        == len(hostile)
+    # non-dict payloads are parse drops; dict payloads ingest with their
+    # junk rows stripped (the oversize flood lands capped)
+    assert stats["telemetry_dropped"] >= 5
+    s = fleet.stats()
+    assert s["batches_dropped"] == stats["telemetry_dropped"]
+    assert s["parse_dropped"] >= 64        # the flood's span overflow
+    assert s["spans_total"] <= MAX_TELEMETRY_SPANS + 2
+
+
+def test_telemetry_replay_after_eviction_is_idempotent():
+    """An evicted client reconnecting and replaying its last telemetry
+    batch re-ingests cleanly: last-write-wins per series, no doubled
+    rows, no resurrection of the evicted lease state."""
+    from repro.obs import FleetAggregator
+    from repro.core.transport import PROTOCOL_VERSION, read_frame
+    from repro.core.wire import make_telemetry
+
+    batch = make_telemetry(
+        {"client.executed_total": {
+            "kind": "counter", "help": "Tickets executed",
+            "values": [{"labels": {}, "value": 5}]}},
+        [{"name": "client.execute", "ph": "X", "cat": "client",
+          "track": "client:zombie", "ts": 2.0, "dur": 0.25}])
+
+    async def go():
+        fleet = FleetAggregator()
+        d, server = _live_server(fleet=fleet, heartbeat_timeout=5.0)
+        addr = await server.start()
+        reader, writer = await _dial(
+            addr, {"type": "hello", "seq": 1, "client": "zombie",
+                   "proto": PROTOCOL_VERSION},
+            {"type": "telemetry", "seq": 2, "telemetry": batch})
+        for _ in range(2):
+            await asyncio.wait_for(read_frame(reader), timeout=5.0)
+        await server.evict_client("zombie")
+        writer.close()
+        r2, w2 = await _dial(
+            addr, {"type": "hello", "seq": 5, "client": "zombie",
+                   "proto": PROTOCOL_VERSION},
+            {"type": "telemetry", "seq": 6, "telemetry": batch})
+        replies = [await asyncio.wait_for(read_frame(r2), timeout=5.0)
+                   for _ in range(2)]
+        w2.close()
+        stats = server.stats()
+        await server.stop()
+        return replies, stats, fleet
+
+    replies, stats, fleet = asyncio.run(go())
+    assert replies[1] == {"type": "telemetry_ok", "seq": 6,
+                          "accepted": True}
+    assert stats["telemetry_accepted"] == 2
+    rows = fleet.snapshot()["client.executed_total"]["values"]
+    assert [(r["labels"]["client"], r["value"]) for r in rows] == \
+        [("zombie", 5)]                            # one row, not two
+    spans = [e for e in fleet.remote_events()
+             if e["name"] == "client.execute"]
+    assert len(spans) == 2                         # replay appends spans
+
+
+def test_junk_heartbeat_echo_ignored_but_server_ts_still_stamped():
+    """Garbage ``echo`` riding a heartbeat on an armed fleet server:
+    no clock-skew sample is recorded, yet every reply still carries a
+    finite ``server_ts`` so the echo protocol can restart."""
+    from repro.obs import FleetAggregator
+    from repro.core.transport import PROTOCOL_VERSION, read_frame
+
+    echoes = [7, "soon", [1.0, 2.0, 3.0], {},
+              {"t0": "a", "server_ts": 1.0, "t1": 2.0},
+              {"t0": 2.0, "server_ts": 1.0, "t1": 1.0},     # rtt < 0
+              {"t0": float("nan"), "server_ts": 1.0, "t1": 2.0},
+              {"t0": 1.0, "server_ts": float("inf"), "t1": 2.0},
+              {"t0": True, "server_ts": 1.0, "t1": 2.0}]
+
+    async def go():
+        fleet = FleetAggregator()
+        d, server = _live_server(fleet=fleet)
+        addr = await server.start()
+        reader, writer = await _dial(
+            addr, {"type": "hello", "seq": 1, "client": "noisy",
+                   "proto": PROTOCOL_VERSION})
+        await asyncio.wait_for(read_frame(reader), timeout=5.0)
+        replies = []
+        for seq, echo in enumerate(echoes, start=2):
+            writer.write(encode_frame({"type": "heartbeat", "seq": seq,
+                                       "echo": echo}))
+            await writer.drain()
+            replies.append(await asyncio.wait_for(read_frame(reader),
+                                                  timeout=5.0))
+        writer.close()
+        await server.stop()
+        return replies, fleet
+
+    replies, fleet = asyncio.run(go())
+    for seq, reply in enumerate(replies, start=2):
+        assert reply["type"] == "heartbeat_ok" and reply["seq"] == seq
+        assert isinstance(reply["server_ts"], float)
+        assert reply["server_ts"] == reply["server_ts"]    # not NaN
+    assert fleet.skew("noisy") is None
+    assert fleet.offset("noisy") == 0.0
+
+
+def test_v1_peer_on_fleet_server_gets_prefleet_bytes():
+    """Arming the fleet plane must not leak into v1 conversations: a
+    proto-1 heartbeat reply stays byte-identical to pre-fleet builds
+    (no ``server_ts``), and v1 telemetry is dropped, not ingested."""
+    from repro.obs import FleetAggregator
+    from repro.core.transport import read_frame
+    from repro.core.wire import make_telemetry
+
+    async def go():
+        fleet = FleetAggregator()
+        d, server = _live_server(fleet=fleet)
+        addr = await server.start()
+        reader, writer = await _dial(
+            addr, {"type": "hello", "seq": 1, "client": "legacy",
+                   "proto": 1, "max_proto": 1},
+            {"type": "heartbeat", "seq": 2,
+             "echo": {"t0": 1.0, "server_ts": 2.0, "t1": 3.0}},
+            {"type": "telemetry", "seq": 3,
+             "telemetry": make_telemetry(None, [
+                 {"name": "x", "ph": "i", "track": "t", "ts": 1.0}])})
+        replies = [await asyncio.wait_for(read_frame(reader), timeout=5.0)
+                   for _ in range(3)]
+        writer.close()
+        stats = server.stats()
+        await server.stop()
+        return replies, stats, fleet
+
+    replies, stats, fleet = asyncio.run(go())
+    assert replies[0]["proto"] == 1
+    assert replies[1] == {"type": "heartbeat_ok", "seq": 2}
+    assert replies[2] == {"type": "telemetry_ok", "seq": 3,
+                          "accepted": False}
+    assert stats["telemetry_dropped"] == 1
+    assert fleet.clients() == [] and fleet.skew("legacy") is None
+
+
+# -- codec totality fuzz ----------------------------------------------------
+
+_TELEMETRY_KEYS = ["type", "name", "ph", "ts", "dur", "track", "cat",
+                   "id", "args", "metrics", "spans", "dropped", "kind",
+                   "values", "help", "t0", "server_ts", "t1"]
+_SCALAR = st.one_of(
+    st.just(None), st.booleans(), st.integers(-9, 1 << 40),
+    st.floats(min_value=-1e9, max_value=1e9),
+    st.just(float("nan")), st.just(float("inf")),
+    st.just(float("-inf")), st.binary(max_size=6),
+    st.sampled_from(["", "x", "client.execute", "X", "b", "e", "i",
+                     "counter", "gauge", "histogram"]))
+_FLAT_DICT = st.lists(
+    st.tuples(st.sampled_from(_TELEMETRY_KEYS), _SCALAR),
+    max_size=6).map(dict)
+_SOUP = st.one_of(
+    _SCALAR, st.lists(_SCALAR, max_size=4), _FLAT_DICT,
+    _FLAT_DICT.map(lambda d: {"metrics": d, "spans": [d], "dropped": d}),
+    st.lists(_FLAT_DICT, max_size=3).map(
+        lambda rows: {"spans": rows,
+                      "metrics": {f"m{i}.x_total": r
+                                  for i, r in enumerate(rows)}}))
+
+
+@settings(max_examples=300, deadline=None)
+@given(_SOUP)
+def test_fuzz_parse_telemetry_total(soup):
+    """parse_telemetry over arbitrary JSON-ish soup: returns None or a
+    normalized batch — never raises, never exceeds its caps, and every
+    surviving span is replayable (known phase, finite ts)."""
+    import math
+    from repro.core.wire import (MAX_TELEMETRY_SERIES,
+                                 MAX_TELEMETRY_SPANS, parse_telemetry)
+    parsed = parse_telemetry(soup)
+    if parsed is None:
+        assert not isinstance(soup, dict)
+        return
+    assert set(parsed) == {"metrics", "spans", "dropped", "local_drops"}
+    assert len(parsed["spans"]) <= MAX_TELEMETRY_SPANS
+    assert len(parsed["metrics"]) <= MAX_TELEMETRY_SERIES
+    assert parsed["dropped"] >= 0 and parsed["local_drops"] >= 0
+    for ev in parsed["spans"]:
+        assert ev["ph"] in ("X", "b", "e", "i")
+        assert math.isfinite(ev["ts"])
+        assert isinstance(ev["name"], str)
+        if ev["ph"] == "X":
+            assert ev["dur"] >= 0.0
+    for name, series in parsed["metrics"].items():
+        assert isinstance(name, str)
+        assert series["kind"] in ("counter", "gauge", "histogram")
+
+
+@settings(max_examples=300, deadline=None)
+@given(_SOUP)
+def test_fuzz_parse_clock_echo_total(soup):
+    """parse_clock_echo over the same soup: None or a finite
+    ``(t0, server_ts, t1)`` with non-negative round-trip."""
+    import math
+    from repro.core.wire import parse_clock_echo
+    got = parse_clock_echo(soup)
+    if got is None:
+        return
+    t0, sts, t1 = got
+    assert all(isinstance(v, float) and math.isfinite(v)
+               for v in (t0, sts, t1))
+    assert t1 >= t0
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(_FLAT_DICT, max_size=3), _SOUP)
+def test_fuzz_fleet_ingest_total(rows, extra):
+    """FleetAggregator.ingest over parse_telemetry's output for
+    arbitrary soup: never raises, and the aggregator's own exports
+    (snapshot / merged_events / to_json) stay well-formed after."""
+    import json as _json
+    from repro.obs import FleetAggregator
+    from repro.core.wire import parse_telemetry
+    fl = FleetAggregator(max_spans_per_client=8)
+    fl.ingest("c0", parse_telemetry({"spans": rows, "metrics": extra}))
+    fl.ingest("c0", parse_telemetry(extra))
+    fl.clock_sample("c0", offset=1.0, rtt=0.01)
+    snap = fl.snapshot()
+    assert isinstance(snap, dict)
+    for ev in fl.merged_events():
+        assert isinstance(ev["ts"], float) or isinstance(ev["ts"], int)
+    _json.loads(fl.to_json())                      # serializes cleanly

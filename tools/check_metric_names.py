@@ -1,5 +1,6 @@
 #!/usr/bin/env python
-"""Lint metric names registered anywhere under ``src/``.
+"""Lint metric names registered anywhere under ``src/``, and cross-check
+them against the catalog in ``docs/ARCHITECTURE.md``.
 
 Every ``registry.counter("...")`` / ``.gauge("...")`` / ``.histogram
 ("...")`` registration (and the ``reg.counter(f"cache.{field}_total")``
@@ -15,14 +16,21 @@ because runtime enforcement only fires on code paths a test actually
 runs; the lint reads the source, so a metric registered on a rare error
 path is still checked in CI.
 
-Usage:
-  python tools/check_metric_names.py [src_root]    # default: src
+**Docs drift.**  ARCHITECTURE.md §Observability carries a metric
+catalog (the markdown table whose first header cell starts with
+``metric``).  This lint parses it — backticked names, ``{a,b,c}`` brace
+sets expanded — and cross-checks against the source registrations in
+BOTH directions: a metric registered in code but absent from the
+catalog fails, and a catalog row naming a metric nothing registers
+fails.  f-string registrations (``cache.{field}_total``) match any
+catalog name fitting their skeleton.
 
-Exit status is nonzero if any registration violates the convention;
-each is reported as ``file:line: name — reason``.  f-string
-registrations are checked with their ``{...}`` placeholders substituted
-by a representative token (placeholders may not span the subsystem dot
-or the unit suffix).
+Usage:
+  python tools/check_metric_names.py [src_root] [architecture_md]
+  # defaults: src  docs/ARCHITECTURE.md  (resolved from the repo root)
+
+Exit status is nonzero on any violation; each is reported as
+``file:line: name — reason`` (or ``docs: name — reason`` for drift).
 """
 from __future__ import annotations
 
@@ -30,14 +38,19 @@ import os
 import re
 import sys
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+_HERE = os.path.dirname(os.path.abspath(__file__))
+sys.path.insert(0, os.path.join(_HERE, "..", "src"))
 
 from repro.obs.metrics import METRIC_NAME_RE, UNITS  # noqa: E402
 
-# .counter("name" / .gauge('name' / .histogram("name", plus f-string forms
+# .counter("name" / .gauge('name' / .histogram("name", plus f-string
+# forms; \s* spans newlines because we scan whole-file text (the
+# prevailing style wraps the name onto the line after the open paren)
 _REG = re.compile(
     r"\.(counter|gauge|histogram)\(\s*(f?)([\"'])([^\"']+)\3")
 _PLACEHOLDER = re.compile(r"\{[^{}]*\}")
+_BACKTICK = re.compile(r"`([^`]+)`")
+_BRACE = re.compile(r"\{([^{}]*)\}")
 
 
 def check_name(raw: str, is_fstring: bool) -> str | None:
@@ -58,16 +71,13 @@ def check_name(raw: str, is_fstring: bool) -> str | None:
     return "does not match subsystem.noun_unit"
 
 
-def check_file(path: str) -> list[str]:
-    problems = []
+def find_registrations(path: str) -> list[tuple[int, str, bool]]:
+    """All ``(lineno, name, is_fstring)`` registrations in one file."""
     with open(path, encoding="utf-8") as f:
-        for lineno, line in enumerate(f, 1):
-            for m in _REG.finditer(line):
-                reason = check_name(m.group(4), m.group(2) == "f")
-                if reason:
-                    problems.append(
-                        f"{path}:{lineno}: {m.group(4)} — {reason}")
-    return problems
+        text = f.read()
+    return [(text.count("\n", 0, m.start()) + 1, m.group(4),
+             m.group(2) == "f")
+            for m in _REG.finditer(text)]
 
 
 def find_sources(root: str) -> list[str]:
@@ -80,19 +90,93 @@ def find_sources(root: str) -> list[str]:
     return sorted(out)
 
 
+def expand_braces(token: str) -> list[str]:
+    """``a.{x,y}_total`` → ``[a.x_total, a.y_total]`` (recursive)."""
+    m = _BRACE.search(token)
+    if m is None:
+        return [token]
+    out: list[str] = []
+    for alt in m.group(1).split(","):
+        out.extend(expand_braces(
+            token[:m.start()] + alt.strip() + token[m.end():]))
+    return out
+
+
+def catalog_names(md_path: str) -> set[str]:
+    """Metric names documented in ARCHITECTURE.md's catalog table: the
+    markdown table whose first header cell starts with ``metric``.
+    Backticked tokens from the first column, brace sets expanded,
+    filtered to well-formed metric names (prose like ``(reason)`` or a
+    stray span name never sneaks in)."""
+    names: set[str] = set()
+    collecting = False
+    with open(md_path, encoding="utf-8") as f:
+        for line in f:
+            if not line.startswith("|"):
+                collecting = False
+                continue
+            cells = line.split("|")
+            first = cells[1].strip() if len(cells) > 1 else ""
+            if first.lower().startswith("metric"):
+                collecting = True          # header row itself has no names
+                continue
+            if not collecting or set(first) <= set("-: "):
+                continue                   # separator row / foreign table
+            for token in _BACKTICK.findall(first):
+                for name in expand_braces(token):
+                    if METRIC_NAME_RE.match(name):
+                        names.add(name)
+    return names
+
+
+def cross_check(registered: list[tuple[str, bool]],
+                documented: set[str]) -> list[str]:
+    """Both drift directions, as ``name — reason`` strings."""
+    problems = []
+    literals = {name for name, is_f in registered if not is_f}
+    patterns = {name: re.compile(
+                    _PLACEHOLDER.sub("[a-z0-9_]+", name) + r"\Z")
+                for name, is_f in registered if is_f}
+    for name in sorted(literals - documented):
+        problems.append(f"{name} — registered in source but missing "
+                        "from the ARCHITECTURE.md metric catalog")
+    for raw, pat in sorted(patterns.items()):
+        if not any(pat.match(doc) for doc in documented):
+            problems.append(f"{raw} — registered in source (f-string) "
+                            "but no catalog entry matches it")
+    for name in sorted(documented):
+        if name in literals or any(p.match(name)
+                                   for p in patterns.values()):
+            continue
+        problems.append(f"{name} — documented in the catalog but "
+                        "registered nowhere under src/")
+    return problems
+
+
 def main() -> int:
-    root = sys.argv[1] if len(sys.argv) > 1 else "src"
+    repo_root = os.path.dirname(_HERE)
+    root = sys.argv[1] if len(sys.argv) > 1 else (
+        os.path.join(repo_root, "src")
+        if not os.path.isdir("src") else "src")
+    md = sys.argv[2] if len(sys.argv) > 2 else os.path.join(
+        repo_root, "docs", "ARCHITECTURE.md")
     files = find_sources(root)
     problems = []
-    registrations = 0
+    registered: list[tuple[str, bool]] = []
     for path in files:
-        with open(path, encoding="utf-8") as f:
-            registrations += sum(1 for line in f for _ in _REG.finditer(line))
-        problems.extend(check_file(path))
+        for lineno, name, is_f in find_registrations(path):
+            registered.append((name, is_f))
+            reason = check_name(name, is_f)
+            if reason:
+                problems.append(f"{path}:{lineno}: {name} — {reason}")
+    documented = catalog_names(md)
+    drift = cross_check(registered, documented)
+    problems.extend(f"docs: {p}" for p in drift)
     for p in problems:
         print(p)
-    print(f"checked {len(files)} source files, {registrations} metric "
-          f"registration(s): {len(problems)} violation(s)")
+    print(f"checked {len(files)} source files, {len(registered)} metric "
+          f"registration(s), {len(documented)} catalog entrie(s): "
+          f"{len(problems)} violation(s)")
     return 1 if problems else 0
 
 
